@@ -1,0 +1,58 @@
+"""Shared benchmark utilities: timing, CSV emission, graph suite."""
+from __future__ import annotations
+
+import csv
+import time
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+
+
+def timeit(fn, repeats: int = 3):
+    """Best-of-N wall time in seconds (first call may include compile)."""
+    fn()  # warmup/compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def emit(name: str, rows: list[dict]):
+    """Write artifacts/bench/<name>.csv and print `name,us_per_call,derived`
+    CSV lines to stdout (harness contract)."""
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    path = ARTIFACTS / f"{name}.csv"
+    if rows:
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            w.writerows(rows)
+    for r in rows:
+        us = r.get("us_per_call", r.get("seconds", 0) * 1e6)
+        derived = {k: v for k, v in r.items()
+                   if k not in ("us_per_call", "seconds")}
+        print(f"{name},{us:.1f},{derived}")
+    return path
+
+
+def bench_suite(scale="bench"):
+    """Graph suite standing in for the paper's 17 matrices (generated:
+    SuiteSparse is unavailable offline — stated in EXPERIMENTS.md)."""
+    from repro.graphs import (elasticity3d, laplace3d, random_skewed_graph,
+                              random_uniform_graph)
+    if scale == "quick":
+        return {
+            "Laplace3D_16": laplace3d(16).graph,
+            "Elasticity3D_6": elasticity3d(6).graph,
+            "uniform_20k": random_uniform_graph(20_000, 8.0, seed=1),
+            "skewed_20k": random_skewed_graph(20_000, 8.0, seed=2),
+        }
+    return {
+        "Laplace3D_32": laplace3d(32).graph,
+        "Elasticity3D_12": elasticity3d(12).graph,
+        "uniform_100k": random_uniform_graph(100_000, 8.0, seed=1),
+        "skewed_100k": random_skewed_graph(100_000, 8.0, seed=2),
+        "uniform_dense_50k": random_uniform_graph(50_000, 24.0, seed=3),
+    }

@@ -1,0 +1,30 @@
+"""Paper Fig. 2: cumulative speedup of the four algorithmic optimizations
+over the Bell-baseline implementation (CPU wall clock; the paper's V100
+absolute numbers do not transfer, the cumulative ordering is the claim).
+
+Chain: baseline(Bell) -> +rand_priority -> +worklists -> +packed_status ->
++simd_ell (== production defaults).
+"""
+from __future__ import annotations
+
+from repro.core.mis2 import ABLATION_CHAIN, mis2
+
+from .common import bench_suite, emit, timeit
+
+
+def run(quick: bool = False):
+    rows = []
+    suite = bench_suite("quick" if quick else "bench")
+    for name, g in suite.items():
+        base_t = None
+        for impl, opts in ABLATION_CHAIN.items():
+            t = timeit(lambda: mis2(g, options=opts), repeats=2 if quick else 3)
+            if base_t is None:
+                base_t = t
+            rows.append({
+                "graph": name, "impl": impl, "seconds": t,
+                "speedup_vs_baseline": round(base_t / t, 3),
+                "us_per_call": t * 1e6,
+            })
+    emit("fig2_optimizations", rows)
+    return rows

@@ -1,0 +1,52 @@
+"""Paper Figs. 4/5 analogue: scaling behaviour of MIS-2.
+
+The paper measures OpenMP strong scaling on 48/56-core CPUs — this host has
+one core, so we report the two scaling axes that ARE measurable here:
+
+A. *algorithmic weak scaling* — single-device wall time per vertex vs
+   problem size (should stay ~flat: O((V+E) log V) total work);
+B. *distributed scaling* — per-device collective wire bytes of the
+   shard_map MIS-2 vs device count (16 -> 64 -> 256 -> 512), from the
+   graph dry-run artifacts: per-device bytes stay ~constant (all-gather
+   volume is V x 4B x (P-1)/P -> the algorithm weak-scales across pods),
+   and the single-gather variant sits at ~55% of two_gather everywhere.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core.mis2 import mis2
+from repro.graphs import laplace3d
+
+from .common import emit, timeit
+
+GRAPH_ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun_graph"
+
+
+def run(quick: bool = False):
+    rows = []
+    # A: algorithmic weak scaling (wall time per vertex)
+    sizes = (16, 24, 32) if quick else (16, 24, 32, 48, 64)
+    for n in sizes:
+        g = laplace3d(n).graph
+        t = timeit(lambda: mis2(g), repeats=1)
+        rows.append({
+            "axis": "A_weak_scaling", "case": f"laplace_{n}^3",
+            "V": g.num_vertices, "seconds": t,
+            "ns_per_vertex": round(t * 1e9 / g.num_vertices, 1),
+            "wire_mb_per_device": "", "variant": "", "devices": "",
+            "us_per_call": t * 1e6,
+        })
+    # B: distributed wire bytes vs device count (dry-run artifacts)
+    for p in sorted(GRAPH_ART.glob("mis2_*.json")):
+        rec = json.loads(p.read_text())
+        rows.append({
+            "axis": "B_distributed", "case": p.stem,
+            "V": rec["V"], "seconds": 0.0, "ns_per_vertex": "",
+            "wire_mb_per_device": round(rec["wire_bytes_per_device"] / 1e6, 2),
+            "variant": rec["variant"], "devices": rec["num_devices"],
+            "us_per_call": 0.0,
+        })
+    emit("figs4_5_scaling", rows)
+    return rows

@@ -1,0 +1,33 @@
+"""Regenerate the §Roofline table inside EXPERIMENTS.md from the dry-run
+artifacts.  Run after a sweep:
+
+    PYTHONPATH=src python -m benchmarks.inject_roofline
+"""
+import re
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from benchmarks.roofline import load_records, markdown_table  # noqa: E402
+
+MARK = "<!-- ROOFLINE_TABLE -->"
+
+
+def main():
+    root = Path(__file__).resolve().parents[1]
+    exp = root / "EXPERIMENTS.md"
+    text = exp.read_text()
+    recs = [r for r in load_records() if "__" not in str(r.get("rules", ""))]
+    table = markdown_table(recs)
+    if MARK in text:
+        # replace the marker (and any previously injected table after it)
+        pattern = re.escape(MARK) + r"(?:\n(?:\|[^\n]*\n?)*)?"
+        text = re.sub(pattern, MARK + "\n" + table + "\n", text, count=1)
+    exp.write_text(text)
+    n_ok = sum(1 for r in recs if r.get("ok") and "roofline" in r)
+    print(f"injected {n_ok} compiled cells into EXPERIMENTS.md §Roofline")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-(arch x shape x
+mesh) roofline table (terms in seconds, dominant bottleneck, usefulness
+ratio).  Reads artifacts/dryrun/*.json produced by repro.launch.dryrun.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit
+
+DRYRUN = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_records(pattern: str = "*.json"):
+    recs = []
+    for p in sorted(DRYRUN.glob(pattern)):
+        try:
+            recs.append(json.loads(p.read_text()))
+        except Exception:
+            pass
+    return recs
+
+
+def run(quick: bool = False):
+    rows = []
+    for rec in load_records():
+        base = {"arch": rec.get("arch"), "shape": rec.get("shape"),
+                "mesh": rec.get("mesh"), "status": "", "note": "",
+                "t_compute_s": "", "t_memory_s": "", "t_collective_s": "",
+                "dominant": "", "roofline_fraction": "", "useful_ratio": "",
+                "fits_hbm": "", "microbatches": "", "zero1": "",
+                "compile_s": "", "us_per_call": 0.0}
+        if rec.get("skipped"):
+            base.update(status="N/A", note="full-attention long-context skip")
+            rows.append(base)
+            continue
+        if not rec.get("ok") or "roofline" not in rec:
+            base.update(status="FAIL", note=str(rec.get("error", ""))[:120])
+            rows.append(base)
+            continue
+        r = rec["roofline"]
+        base.update(
+            status="ok",
+            t_compute_s=f"{r['t_compute_s']:.4g}",
+            t_memory_s=f"{r['t_memory_s']:.4g}",
+            t_collective_s=f"{r['t_collective_s']:.4g}",
+            dominant=r["dominant"],
+            roofline_fraction=f"{r['roofline_fraction']:.3f}",
+            useful_ratio=f"{r['model_flops_over_hlo_flops']:.3f}",
+            fits_hbm=rec.get("fits_hbm"),
+            microbatches=rec.get("microbatches"),
+            zero1=rec.get("zero1"),
+            compile_s=rec.get("compile_s"))
+        rows.append(base)
+    emit("roofline", rows)
+    return rows
+
+
+def markdown_table(records=None) -> str:
+    """§Roofline markdown for EXPERIMENTS.md."""
+    recs = records if records is not None else load_records()
+    lines = ["| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) | "
+             "dominant | roofline frac | useful | fits HBM | mb | z1 |",
+             "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for rec in recs:
+        if rec.get("skipped"):
+            lines.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} |"
+                         " — | — | — | N/A (skip) | — | — | — | — | — |")
+            continue
+        if not rec.get("ok") or "roofline" not in rec:
+            lines.append(f"| {rec.get('arch')} | {rec.get('shape')} | "
+                         f"{rec.get('mesh')} | FAIL | | | | | | | | |")
+            continue
+        r = rec["roofline"]
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+            f"{r['t_compute_s']:.3g} | {r['t_memory_s']:.3g} | "
+            f"{r['t_collective_s']:.3g} | {r['dominant']} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{r['model_flops_over_hlo_flops']:.2f} | "
+            f"{rec.get('fits_hbm')} | {rec.get('microbatches')} | "
+            f"{rec.get('zero1')} |")
+    return "\n".join(lines)

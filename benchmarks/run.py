@@ -1,0 +1,56 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only tableX,...]
+
+Prints ``name,us_per_call,derived`` CSV lines and writes
+artifacts/bench/<name>.csv per table.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from benchmarks import (  # noqa: E402
+    fig2_optimizations,
+    figs4_5_scaling,
+    roofline,
+    table1_priorities,
+    table3_scaling,
+    table4_quality,
+    table5_amg,
+    table6_cluster_gs,
+)
+
+ALL = {
+    "table1": table1_priorities.run,
+    "fig2": fig2_optimizations.run,
+    "table3": table3_scaling.run,
+    "table4": table4_quality.run,
+    "table5": table5_amg.run,
+    "table6": table6_cluster_gs.run,
+    "figs4_5": figs4_5_scaling.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced problem sizes (CI)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(ALL))
+    args = ap.parse_args()
+    names = list(ALL) if not args.only else args.only.split(",")
+    for name in names:
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        ALL[name](quick=args.quick)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Paper Table V: SA-AMG aggregation comparison on Laplace3D.
+
+Serial (host-sequential greedy, the 'Serial Agg' stand-in) vs MIS2 Basic
+(Alg. 2) vs MIS2 Agg (Alg. 3), each used to build the V-cycle hierarchy for
+CG to 1e-12.  Claims validated: MIS2 Agg needs the fewest iterations of the
+MIS-2 schemes (paper: 22 vs 49 for Basic) and all MIS-2 schemes are
+deterministic.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs import csr_to_ell_matrix, laplace3d
+from repro.graphs.ops import spmv_ell
+from repro.solvers import build_hierarchy, cg
+
+from .common import emit
+
+
+def run(quick: bool = False):
+    n = 16 if quick else 32
+    a = laplace3d(n)
+    ell = csr_to_ell_matrix(a)
+    b = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal(a.num_rows).astype(np.float32))
+    mv = lambda x: spmv_ell(ell, x)  # noqa: E731
+    rows = []
+    for agg in ("serial", "mis2_basic", "mis2_agg"):
+        h = build_hierarchy(a, aggregation=agg,
+                            coarse_size=200)
+        t0 = time.time()
+        res = cg(mv, b, precond=h.as_precond(), tol=1e-10, maxiter=300)
+        solve_s = time.time() - t0
+        # determinism: rebuild + resolve must match iteration count
+        h2 = build_hierarchy(a, aggregation=agg, coarse_size=200)
+        res2 = cg(mv, b, precond=h2.as_precond(), tol=1e-10, maxiter=300)
+        rows.append({
+            "aggregation": agg, "V": a.num_rows,
+            "cg_iters": res.iterations,
+            "agg_seconds": round(h.aggregation_seconds, 3),
+            "setup_seconds": round(h.setup_seconds, 3),
+            "solve_seconds": round(solve_s, 3),
+            "levels": len(h.level_sizes),
+            "deterministic": int(res.iterations == res2.iterations),
+            "converged": int(res.converged),
+            "us_per_call": solve_s * 1e6,
+        })
+    emit("table5_amg", rows)
+    return rows

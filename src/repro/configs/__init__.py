@@ -1,0 +1,41 @@
+"""Architecture config registry: --arch <id> -> ModelConfig."""
+from __future__ import annotations
+
+from importlib import import_module
+
+ARCH_IDS = (
+    "chameleon-34b",
+    "whisper-tiny",
+    "smollm-135m",
+    "llama3.2-3b",
+    "granite-8b",
+    "smollm-360m",
+    "recurrentgemma-2b",
+    "mamba2-780m",
+    "granite-moe-1b-a400m",
+    "qwen2-moe-a2.7b",
+)
+
+_MODULES = {
+    "chameleon-34b": "chameleon_34b",
+    "whisper-tiny": "whisper_tiny",
+    "smollm-135m": "smollm_135m",
+    "llama3.2-3b": "llama32_3b",
+    "granite-8b": "granite_8b",
+    "smollm-360m": "smollm_360m",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "mamba2-780m": "mamba2_780m",
+    "granite-moe-1b-a400m": "granite_moe_1b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a27b",
+}
+
+
+def get_config(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    mod = import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.config()
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCH_IDS}

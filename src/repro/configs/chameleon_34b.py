@@ -1,0 +1,16 @@
+"""chameleon-34b [arXiv:2405.09818; unverified] — early-fusion VLM backbone.
+
+Modality note (assignment): the VQ image tokenizer is a STUB — inputs are
+token ids over the fused 65536-entry vocabulary (text + VQ image codes).
+The backbone below is the full 34B decoder.
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="chameleon-34b", family="vlm",
+        num_layers=48, d_model=8192, num_heads=64, num_kv_heads=8,
+        d_ff=22016, vocab_size=65536, head_dim=128,
+        rope_theta=10000.0,
+    )

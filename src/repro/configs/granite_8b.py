@@ -1,0 +1,11 @@
+"""granite-8b [arXiv:2405.04324; hf] — llama-arch dense, code model."""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-8b", family="dense",
+        num_layers=36, d_model=4096, num_heads=32, num_kv_heads=8,
+        d_ff=14336, vocab_size=49152, head_dim=128,
+        rope_theta=10000.0,
+    )

@@ -1,0 +1,13 @@
+"""granite-moe-1b-a400m [hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
+— 32 experts, top-8."""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-1b-a400m", family="moe",
+        num_layers=24, d_model=1024, num_heads=16, num_kv_heads=8,
+        d_ff=0, vocab_size=49155, head_dim=64,
+        num_experts=32, num_experts_per_token=8, moe_d_ff=512,
+        norm_topk_prob=True,
+    )

@@ -1,0 +1,11 @@
+"""llama3.2-3b [hf:meta-llama/Llama-3.2-*; unverified] — small llama3 dense."""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3.2-3b", family="dense",
+        num_layers=28, d_model=3072, num_heads=24, num_kv_heads=8,
+        d_ff=8192, vocab_size=128256, head_dim=128,
+        rope_theta=500000.0,
+    )

@@ -1,0 +1,10 @@
+"""mamba2-780m [arXiv:2405.21060; unverified] — SSD, attention-free."""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-780m", family="ssm",
+        num_layers=48, d_model=1536, vocab_size=50280,
+        ssm_state=128, ssm_head_dim=64, ssm_expand=2, ssm_chunk=256,
+    )

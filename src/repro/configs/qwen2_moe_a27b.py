@@ -1,0 +1,13 @@
+"""qwen2-moe-a2.7b [hf:Qwen/Qwen1.5-MoE-A2.7B; hf]
+— 60 routed experts top-4 + 4 shared experts (shared hidden 4x1408=5632)."""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-moe-a2.7b", family="moe",
+        num_layers=24, d_model=2048, num_heads=16, num_kv_heads=16,
+        d_ff=0, vocab_size=151936, head_dim=128,
+        num_experts=60, num_experts_per_token=4, num_shared_experts=4,
+        moe_d_ff=1408, norm_topk_prob=False,
+    )

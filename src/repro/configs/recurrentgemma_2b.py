@@ -1,0 +1,12 @@
+"""recurrentgemma-2b [arXiv:2402.19427; hf] — RG-LRU + local attention 1:2."""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-2b", family="hybrid",
+        num_layers=26, d_model=2560, num_heads=10, num_kv_heads=1,
+        d_ff=7680, vocab_size=256000, head_dim=256,
+        block_pattern=("rglru", "rglru", "local"),
+        local_window=2048, d_rnn=2560,
+    )

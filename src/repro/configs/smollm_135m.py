@@ -1,0 +1,11 @@
+"""smollm-135m [hf:HuggingFaceTB/SmolLM-135M; hf] — llama-arch small dense."""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="smollm-135m", family="dense",
+        num_layers=30, d_model=576, num_heads=9, num_kv_heads=3,
+        d_ff=1536, vocab_size=49152, head_dim=64,
+        tie_embeddings=True, rope_theta=10000.0,
+    )

@@ -1,0 +1,11 @@
+"""smollm-360m [hf:HuggingFaceTB/SmolLM-135M family; hf] — llama-arch small dense."""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="smollm-360m", family="dense",
+        num_layers=32, d_model=960, num_heads=15, num_kv_heads=5,
+        d_ff=2560, vocab_size=49152, head_dim=64,
+        tie_embeddings=True, rope_theta=10000.0,
+    )

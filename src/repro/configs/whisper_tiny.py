@@ -1,0 +1,15 @@
+"""whisper-tiny [arXiv:2212.04356; unverified] — enc-dec audio backbone.
+
+Modality note (assignment): the conv/mel frontend is a STUB — input_specs
+feeds precomputed frame embeddings [B, 1500, 384] to the encoder.
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-tiny", family="encdec",
+        num_layers=4, encoder_layers=4, d_model=384, num_heads=6,
+        num_kv_heads=6, d_ff=1536, vocab_size=51865, head_dim=64,
+        encoder_seq=1500, tie_embeddings=True,
+    )

@@ -1,0 +1,41 @@
+"""Core: the paper's contribution — deterministic parallel MIS-2,
+MIS-2-based aggregation/coarsening, coloring, multilevel partitioning,
+and the distributed (shard_map) MIS-2 extension."""
+from .aggregation import (
+    AggregationResult,
+    aggregate_basic,
+    aggregate_serial_greedy,
+    aggregate_two_phase,
+)
+from .coloring import ColoringResult, check_coloring, color_graph
+from .hashing import (
+    PRIORITY_FNS,
+    priorities_fixed,
+    priorities_xorshift,
+    priorities_xorshift_star,
+)
+from .mis2 import (
+    ABLATION_CHAIN,
+    Mis2Options,
+    Mis2Result,
+    mis2,
+    mis2_compacted,
+    mis2_dense,
+    mis2_dense_jittable,
+)
+from .misk import mis_k
+from .partition import PartitionResult, edge_cut, partition
+from .tuples import IN, OUT, id_bits, is_undecided, pack
+
+__all__ = [
+    "AggregationResult", "aggregate_basic", "aggregate_serial_greedy",
+    "aggregate_two_phase",
+    "ColoringResult", "check_coloring", "color_graph",
+    "PRIORITY_FNS", "priorities_fixed", "priorities_xorshift",
+    "priorities_xorshift_star",
+    "ABLATION_CHAIN", "Mis2Options", "Mis2Result", "mis2", "mis2_compacted",
+    "mis2_dense", "mis2_dense_jittable",
+    "mis_k",
+    "PartitionResult", "edge_cut", "partition",
+    "IN", "OUT", "id_bits", "is_undecided", "pack",
+]

@@ -1,0 +1,242 @@
+"""MIS-2 based graph coarsening (paper Algorithms 2 and 3).
+
+* ``aggregate_basic``   — Algorithm 2 (Bell-style): MIS-2 roots + direct
+  neighbors; leftovers join an adjacent aggregate (deterministically: the
+  minimum adjacent label, standing in for the paper's "arbitrarily").
+* ``aggregate_two_phase`` — Algorithm 3 (ML-style, the paper's contribution):
+  phase 1 = MIS-2 roots + neighbors; phase 2 = second MIS-2 on the induced
+  unaggregated subgraph, roots with >= 2 unaggregated neighbors form
+  secondary aggregates; phase 3 = leftovers join the max-coupling adjacent
+  aggregate (ties -> smaller aggregate -> smaller label), computed against
+  frozen "tentative" labels for determinism.
+* ``aggregate_serial_greedy`` — host-sequential reference (MueLu "Serial
+  Agg" stand-in for Table V).
+
+All device phases are vectorized over ELL adjacency.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graphs.csr import CSRGraph, ELLGraph, csr_to_ell_graph
+from .mis2 import Mis2Options, mis2
+
+INT32_MAX = np.int32(2**31 - 1)
+
+
+@dataclass
+class AggregationResult:
+    labels: np.ndarray       # int32 [V] aggregate id (all >= 0 on success)
+    num_aggregates: int
+    roots: np.ndarray        # bool [V] (phase-1 + phase-2 roots)
+    phase: np.ndarray        # uint8 [V]: phase that aggregated each vertex
+    mis2_iterations: int     # total MIS-2 iterations spent
+
+    @property
+    def coarsening_ratio(self) -> float:
+        return len(self.labels) / max(1, self.num_aggregates)
+
+
+# ---------------------------------------------------------------------------
+# vectorized helpers
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _join_adjacent_root(neighbors: jnp.ndarray, root_label: jnp.ndarray):
+    """label[v] = root label of the (unique) adjacent root, else -1.
+
+    ``root_label`` is int32 [V]: aggregate id for roots, INT32_MAX otherwise.
+    A vertex adjacent to two distinct roots would contradict distance-2
+    independence, so min() is exact, not a tie-break.
+    """
+    cand = root_label[neighbors]            # [V, D] (self-padding: own label)
+    lab = jnp.min(cand, axis=1)
+    return jnp.where(lab == INT32_MAX, jnp.int32(-1), lab)
+
+
+@jax.jit
+def _count_unagg_neighbors(neighbors, mask, labels):
+    """# real neighbors (excluding self) that are unaggregated."""
+    v = neighbors.shape[0]
+    self_ids = jnp.arange(v, dtype=neighbors.dtype)[:, None]
+    real = mask & (neighbors != self_ids)
+    unagg = labels[neighbors] < 0
+    return jnp.sum(real & unagg, axis=1)
+
+
+def _phase3_keys(labels_n, valid, aggsize):
+    """Per-slot (coupling, aggsize, label) selection keys (lower = better);
+    coupling negated so a single lexicographic min picks max coupling."""
+    d = labels_n.shape[1]
+    coupling = jnp.zeros(labels_n.shape, jnp.int32)
+    for k in range(d):
+        same = (labels_n == labels_n[:, k:k + 1]) & valid[:, k:k + 1] & valid
+        coupling = coupling + same.astype(jnp.int32)
+    size_n = aggsize[jnp.clip(labels_n, 0, aggsize.shape[0] - 1)]
+    return coupling, size_n
+
+
+@jax.jit
+def _phase3_join(neighbors, mask, labels, aggsize):
+    """Leftovers join max-coupling adjacent aggregate (Alg 3 phase 3)."""
+    v = neighbors.shape[0]
+    labels_n = labels[neighbors]                     # tentative labels
+    self_ids = jnp.arange(v, dtype=neighbors.dtype)[:, None]
+    valid = mask & (neighbors != self_ids) & (labels_n >= 0)
+    coupling, size_n = _phase3_keys(labels_n, valid, aggsize)
+    d = neighbors.shape[1]
+
+    # lexicographic argmin over slots of (-coupling, size, label); invalid last
+    best_c = jnp.where(valid[:, 0], coupling[:, 0], -1)
+    best_s = size_n[:, 0]
+    best_l = jnp.where(valid[:, 0], labels_n[:, 0], INT32_MAX)
+    for j in range(1, d):
+        cj = jnp.where(valid[:, j], coupling[:, j], -1)
+        sj = size_n[:, j]
+        lj = jnp.where(valid[:, j], labels_n[:, j], INT32_MAX)
+        better = (cj > best_c) | ((cj == best_c) & ((sj < best_s) |
+                 ((sj == best_s) & (lj < best_l))))
+        best_c = jnp.where(better, cj, best_c)
+        best_s = jnp.where(better, sj, best_s)
+        best_l = jnp.where(better, lj, best_l)
+    joined = (best_c > 0) & (best_l != INT32_MAX)
+    return jnp.where((labels < 0) & joined, best_l, labels)
+
+
+def _labels_from_roots(ell: ELLGraph, roots: np.ndarray):
+    """Phase-1 style aggregate formation: roots + direct neighbors."""
+    v = ell.num_vertices
+    agg_ids = np.cumsum(roots) - 1
+    root_label = np.where(roots, agg_ids, INT32_MAX).astype(np.int32)
+    labels = np.asarray(_join_adjacent_root(ell.neighbors, jnp.asarray(root_label)))
+    return labels, int(roots.sum())
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2
+# ---------------------------------------------------------------------------
+
+def aggregate_basic(graph, options: Mis2Options = Mis2Options(),
+                    engine: str = "compacted") -> AggregationResult:
+    ell = graph if isinstance(graph, ELLGraph) else csr_to_ell_graph(graph)
+    r = mis2(ell, options=options, engine=engine)
+    labels, nagg = _labels_from_roots(ell, r.in_set)
+    phase = np.where(labels >= 0, 1, 0).astype(np.uint8)
+
+    # leftovers: join min adjacent aggregate (deterministic "arbitrary")
+    rounds = 0
+    while (labels < 0).any() and rounds < 4:
+        lab_j = jnp.asarray(np.where(labels >= 0, labels, INT32_MAX).astype(np.int32))
+        adj = np.asarray(_join_adjacent_root(ell.neighbors, lab_j))
+        newly = (labels < 0) & (adj >= 0)
+        labels = np.where(newly, adj, labels)
+        phase[newly] = 3
+        rounds += 1
+    labels, nagg = _finalize_singletons(labels, nagg, phase)
+    return AggregationResult(labels.astype(np.int32), nagg, r.in_set, phase,
+                             r.iterations)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3
+# ---------------------------------------------------------------------------
+
+def aggregate_two_phase(graph, options: Mis2Options = Mis2Options(),
+                        engine: str = "compacted",
+                        min_secondary_neighbors: int = 2) -> AggregationResult:
+    ell = graph if isinstance(graph, ELLGraph) else csr_to_ell_graph(graph)
+    v = ell.num_vertices
+
+    # Phase 1: MIS-2 roots + direct neighbors
+    r1 = mis2(ell, options=options, engine=engine)
+    labels, nagg = _labels_from_roots(ell, r1.in_set)
+    phase = np.where(labels >= 0, 1, 0).astype(np.uint8)
+    total_iters = r1.iterations
+
+    # Phase 2: MIS-2 on the induced unaggregated subgraph
+    unagg = labels < 0
+    roots2 = np.zeros(v, dtype=bool)
+    if unagg.any():
+        r2 = mis2(ell, active=jnp.asarray(unagg), options=options, engine=engine)
+        total_iters += r2.iterations
+        n_unagg_nbrs = np.asarray(_count_unagg_neighbors(
+            ell.neighbors, ell.mask, jnp.asarray(labels)))
+        roots2 = r2.in_set & (n_unagg_nbrs >= min_secondary_neighbors)
+        if roots2.any():
+            agg_ids2 = nagg + np.cumsum(roots2) - 1
+            rl2 = np.where(roots2, agg_ids2, INT32_MAX).astype(np.int32)
+            adj2 = np.asarray(_join_adjacent_root(ell.neighbors, jnp.asarray(rl2)))
+            newly = (labels < 0) & (adj2 >= 0)
+            labels = np.where(newly, adj2, labels)
+            phase[newly] = 2
+            nagg += int(roots2.sum())
+
+    # Phase 3: max-coupling join against frozen tentative labels
+    rounds = 0
+    while (labels < 0).any() and rounds < 4:
+        aggsize = np.bincount(labels[labels >= 0], minlength=max(nagg, 1))
+        new_labels = np.asarray(_phase3_join(
+            ell.neighbors, ell.mask, jnp.asarray(labels.astype(np.int32)),
+            jnp.asarray(aggsize.astype(np.int32))))
+        newly = (labels < 0) & (new_labels >= 0)
+        phase[newly] = 3
+        labels = new_labels
+        rounds += 1
+
+    labels, nagg = _finalize_singletons(labels, nagg, phase)
+    return AggregationResult(labels.astype(np.int32), nagg,
+                             r1.in_set | roots2, phase, total_iters)
+
+
+def _finalize_singletons(labels: np.ndarray, nagg: int, phase: np.ndarray):
+    """Isolated leftovers (no aggregated neighbor at all) become singletons."""
+    left = np.flatnonzero(labels < 0)
+    if len(left):
+        labels = labels.copy()
+        labels[left] = nagg + np.arange(len(left))
+        phase[left] = 3
+        nagg += len(left)
+    return labels, nagg
+
+
+# ---------------------------------------------------------------------------
+# host-sequential reference (Table V "Serial Agg" stand-in)
+# ---------------------------------------------------------------------------
+
+def aggregate_serial_greedy(graph) -> AggregationResult:
+    csr = graph
+    if isinstance(graph, ELLGraph):
+        from ..graphs.csr import ell_to_csr_graph
+        csr = ell_to_csr_graph(graph)
+    indptr = np.asarray(csr.indptr)
+    indices = np.asarray(csr.indices)
+    v = csr.num_vertices
+    labels = np.full(v, -1, dtype=np.int32)
+    roots = np.zeros(v, dtype=bool)
+    nagg = 0
+    for u in range(v):
+        if labels[u] >= 0:
+            continue
+        nbrs = indices[indptr[u]:indptr[u + 1]]
+        nbrs = nbrs[nbrs != u]
+        free = nbrs[labels[nbrs] < 0]
+        if len(free) >= 2:
+            labels[u] = nagg
+            labels[free] = nagg
+            roots[u] = True
+            nagg += 1
+    for u in range(v):   # cleanup: join first aggregated neighbor
+        if labels[u] < 0:
+            nbrs = indices[indptr[u]:indptr[u + 1]]
+            agg = nbrs[labels[nbrs] >= 0]
+            if len(agg):
+                labels[u] = labels[agg[0]]
+            else:
+                labels[u] = nagg
+                nagg += 1
+    phase = np.ones(v, dtype=np.uint8)
+    return AggregationResult(labels, nagg, roots, phase, 0)

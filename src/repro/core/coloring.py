@@ -1,0 +1,101 @@
+"""Deterministic parallel greedy distance-1 coloring.
+
+Used by cluster multicolor Gauss-Seidel (paper Alg. 4) to color the coarse
+graph, and by point multicolor GS to color the fine graph.  Luby-style
+rounds with the same xorshift* priorities as MIS-2: in each round, every
+uncolored vertex that holds the minimum packed tuple among its uncolored
+neighbors picks its smallest feasible color.  Deterministic across devices
+and runs, like everything else in core/.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graphs.csr import ELLGraph, csr_to_ell_graph
+from .hashing import priorities_xorshift_star
+from .tuples import id_bits, pack
+
+MAX_COLORS = 64
+
+
+@dataclass
+class ColoringResult:
+    colors: np.ndarray      # int32 [V], in [0, num_colors)
+    num_colors: int
+    rounds: int
+
+
+@jax.jit
+def _color_round(neighbors, mask, colors, rnd):
+    v = neighbors.shape[0]
+    b = id_bits(v)
+    vids = jnp.arange(v, dtype=jnp.uint32)
+    prio = pack(priorities_xorshift_star(rnd, vids), vids, b)
+    uncolored = colors < 0
+    # local-min among uncolored real neighbors (excluding self)
+    self_ids = jnp.arange(v, dtype=neighbors.dtype)[:, None]
+    real = mask & (neighbors != self_ids)
+    pn = prio[neighbors]
+    un = uncolored[neighbors]
+    contender = real & un
+    is_min = jnp.all(jnp.where(contender, prio[:, None] < pn, True), axis=1)
+    # forbidden colors bitmask (two uint32 words -> up to 64 colors)
+    cn = colors[neighbors]
+    has = real & (cn >= 0)
+    lo_bits = jnp.where(has & (cn < 32),
+                        jnp.uint32(1) << jnp.clip(cn, 0, 31).astype(jnp.uint32),
+                        jnp.uint32(0))
+    hi_bits = jnp.where(has & (cn >= 32),
+                        jnp.uint32(1) << jnp.clip(cn - 32, 0, 31).astype(jnp.uint32),
+                        jnp.uint32(0))
+    forb_lo = jnp.bitwise_or.reduce(lo_bits, axis=1)
+    forb_hi = jnp.bitwise_or.reduce(hi_bits, axis=1)
+    # smallest zero bit
+    free_lo = ~forb_lo
+    low_idx = _lowest_set_bit(free_lo)
+    free_hi = ~forb_hi
+    high_idx = _lowest_set_bit(free_hi) + 32
+    chosen = jnp.where(free_lo != 0, low_idx, high_idx).astype(jnp.int32)
+    return jnp.where(uncolored & is_min, chosen, colors)
+
+
+def _lowest_set_bit(x: jnp.ndarray) -> jnp.ndarray:
+    """Index of lowest set bit of uint32 (x != 0 assumed where used)."""
+    isolated = x & (~x + jnp.uint32(1))
+    f = isolated.astype(jnp.float32)
+    exp = (jax.lax.bitcast_convert_type(f, jnp.uint32) >> jnp.uint32(23)) - jnp.uint32(127)
+    return exp.astype(jnp.int32)
+
+
+def color_graph(graph, max_rounds: int = 256) -> ColoringResult:
+    ell = graph if isinstance(graph, ELLGraph) else csr_to_ell_graph(graph)
+    v = ell.num_vertices
+    colors = jnp.full(v, -1, dtype=jnp.int32)
+    rnd = 0
+    while True:
+        colors = _color_round(ell.neighbors, ell.mask, colors, np.uint32(rnd))
+        rnd += 1
+        c = np.asarray(colors)
+        if (c >= 0).all() or rnd >= max_rounds:
+            break
+    num = int(c.max()) + 1 if (c >= 0).any() else 0
+    if (c < 0).any():
+        raise RuntimeError("coloring did not converge")
+    if num > MAX_COLORS:
+        raise RuntimeError(f"{num} colors exceed MAX_COLORS={MAX_COLORS}")
+    return ColoringResult(c, num, rnd)
+
+
+def check_coloring(graph, colors: np.ndarray) -> bool:
+    """Validity: no two adjacent distinct vertices share a color."""
+    ell = graph if isinstance(graph, ELLGraph) else csr_to_ell_graph(graph)
+    nbrs = np.asarray(ell.neighbors)
+    mask = np.asarray(ell.mask)
+    v = nbrs.shape[0]
+    self_ids = np.arange(v)[:, None]
+    real = mask & (nbrs != self_ids)
+    return not (real & (colors[nbrs] == colors[:, None])).any()

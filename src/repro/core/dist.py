@@ -1,0 +1,175 @@
+"""Distributed MIS-2 under shard_map (beyond-paper: the paper is single
+device; we vertex-partition across a device mesh axis).
+
+Layout: vertices are block-partitioned over the flattened mesh axis; each
+device owns a contiguous row block of the ELL adjacency ``[V/P, D]`` and the
+local slice of the tuple vector ``T``.  Neighbor ids are *global*, so every
+iteration all-gathers the 4-byte/vertex tuple vectors ``T`` and ``M`` —
+exactly 2·V·4 bytes of collective traffic per iteration, independent of |E|
+(the compressed-tuple optimization §V-C is also a *communication*
+optimization here: unpacked tuples would triple the collective bytes, which
+is the beyond-paper measurement in EXPERIMENTS.md §Perf).
+
+A halo-exchange variant (send only boundary tuples) is sketched in §Perf;
+for the paper's mesh-like graphs with bandwidth-reducing orderings the halo
+is O(V^(2/3)) per device, but the all-gather version is the robust default
+for arbitrary vertex orderings.
+
+Determinism: priorities depend only on (iteration, global vertex id), so the
+result is bit-identical to the single-device dense engine for any device
+count — tested in tests/test_distributed.py via subprocess with 8 host
+devices.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..graphs.csr import ELLGraph, csr_to_ell_graph
+from .hashing import PRIORITY_FNS
+from .tuples import IN, OUT, id_bits, is_undecided, pack
+
+U32MAX = np.uint32(0xFFFFFFFF)
+
+
+def pad_graph_for_mesh(ell: ELLGraph, num_devices: int):
+    """Pad V to a multiple of num_devices with isolated, inactive vertices."""
+    v = ell.num_vertices
+    vp = ((v + num_devices - 1) // num_devices) * num_devices
+    if vp == v:
+        return ell, v
+    neighbors = np.asarray(ell.neighbors)
+    mask = np.asarray(ell.mask)
+    extra = vp - v
+    pad_nbrs = np.repeat(np.arange(v, vp, dtype=neighbors.dtype)[:, None],
+                         ell.width, axis=1)
+    pad_mask = np.zeros((extra, ell.width), dtype=bool)
+    return ELLGraph(
+        jnp.asarray(np.concatenate([neighbors, pad_nbrs])),
+        jnp.asarray(np.concatenate([mask, pad_mask])),
+    ), v
+
+
+def _mis2_local_fixpoint(neighbors_local, active_local, axis: str,
+                         total_v: int, priority: str, max_iters: int,
+                         single_gather: bool = False,
+                         neighbors_global=None):
+    """shard_map body: each device owns a row block; T (and M) all-gathered.
+
+    ``single_gather=True`` (§Perf beyond-paper optimization): gather T once
+    per iteration and recompute the distance-1 minima ``M`` for the whole
+    graph locally from the gathered T (requires the full ELL adjacency
+    ``neighbors_global`` replicated).  Trades O(V*D) redundant VPU mins —
+    essentially free on mesh graphs — for HALF the collective bytes per
+    iteration (confirmed: see EXPERIMENTS.md §Perf).
+    """
+    vp = neighbors_local.shape[0]
+    b = id_bits(total_v)
+    idx = jax.lax.axis_index(axis)
+    vids = (idx * vp + jnp.arange(vp, dtype=jnp.uint32)).astype(jnp.uint32)
+    prio_fn = PRIORITY_FNS[priority]
+
+    t0 = jnp.where(active_local, jnp.uint32(1), OUT)
+
+    def cond(state):
+        t_local, it = state
+        n_und = jnp.sum((is_undecided(t_local) & active_local).astype(jnp.int32))
+        n_und = jax.lax.psum(n_und, axis)
+        return (n_und > 0) & (it < max_iters)
+
+    def body(state):
+        t_local, it = state
+        und = is_undecided(t_local) & active_local
+        t_local = jnp.where(und, pack(prio_fn(it, vids), vids, b), t_local)
+        # collective 1: global tuple vector for the distance-1 min
+        t_global = jax.lax.all_gather(t_local, axis, tiled=True)   # [V]
+        a_global = jax.lax.all_gather(active_local, axis, tiled=True)
+        if single_gather:
+            # recompute M for ALL vertices locally: no second gather
+            tn_all = t_global[neighbors_global]                    # [V, D]
+            m_global = jnp.min(tn_all, axis=1)
+            m_global = jnp.where(m_global == IN, OUT, m_global)
+        else:
+            tn = t_global[neighbors_local]                         # [Vp, D]
+            m_local = jnp.min(tn, axis=1)
+            m_local = jnp.where(m_local == IN, OUT, m_local)
+            # collective 2: global M for the distance-2 decision
+            m_global = jax.lax.all_gather(m_local, axis, tiled=True)
+        mn = m_global[neighbors_local]
+        an = a_global[neighbors_local]
+        any_out = jnp.any(jnp.where(an, mn, IN) == OUT, axis=1)
+        all_eq = jnp.all(jnp.where(an, mn, t_local[:, None]) == t_local[:, None],
+                         axis=1)
+        t_local = jnp.where(und & any_out, OUT, t_local)
+        t_local = jnp.where(und & ~any_out & all_eq, IN, t_local)
+        return t_local, it + 1
+
+    t_local, iters = jax.lax.while_loop(cond, body, (t0, jnp.uint32(0)))
+    return t_local, jnp.full((1,), iters, jnp.uint32)
+
+
+def mis2_distributed(graph, mesh: Mesh | None = None, axis: str | None = None,
+                     active=None, priority: str = "xorshift_star",
+                     max_iters: int = 128, single_gather: bool = False):
+    """Run MIS-2 sharded over a mesh axis (all axes flattened if axis=None).
+
+    Returns (in_set bool [V], iterations). Bit-identical to mis2_dense.
+    """
+    ell = graph if isinstance(graph, ELLGraph) else csr_to_ell_graph(graph)
+    if mesh is None:
+        devs = np.array(jax.devices())
+        mesh = Mesh(devs, ("x",))
+        axis = "x"
+    if axis is None:
+        axis = mesh.axis_names[0]
+    nd = int(np.prod([mesh.shape[a] for a in (axis if isinstance(axis, tuple) else (axis,))]))
+
+    padded, v = pad_graph_for_mesh(ell, nd)
+    vp_total = padded.num_vertices
+    if active is None:
+        active_arr = jnp.arange(vp_total) < v
+    else:
+        active_arr = jnp.concatenate(
+            [jnp.asarray(active), jnp.zeros(vp_total - v, bool)])
+
+    spec_rows = P(axis)
+    in_specs = [spec_rows, spec_rows]
+    args = [jax.device_put(padded.neighbors, NamedSharding(mesh, spec_rows)),
+            jax.device_put(active_arr, NamedSharding(mesh, spec_rows))]
+    if single_gather:
+        fn_core = lambda nbrs, act, nbrs_g: _mis2_local_fixpoint(  # noqa: E731
+            nbrs, act, axis=axis, total_v=vp_total, priority=priority,
+            max_iters=max_iters, single_gather=True, neighbors_global=nbrs_g)
+        in_specs.append(P())
+        args.append(jax.device_put(padded.neighbors,
+                                   NamedSharding(mesh, P())))
+    else:
+        fn_core = functools.partial(
+            _mis2_local_fixpoint, axis=axis, total_v=vp_total,
+            priority=priority, max_iters=max_iters)
+    fn = jax.shard_map(fn_core, mesh=mesh, in_specs=tuple(in_specs),
+                       out_specs=(spec_rows, P(axis)))
+    t, iters = fn(*args)
+    t_np = np.asarray(t)[:v]
+    return t_np == np.uint32(IN), int(np.asarray(iters)[0])
+
+
+def lower_mis2_distributed(ell_spec, mesh: Mesh, axis: str,
+                           priority: str = "xorshift_star", max_iters: int = 128):
+    """Dry-run hook: lower+compile the distributed fixpoint from
+    ShapeDtypeStructs (no allocation). Returns the lowered object."""
+    spec_rows = P(axis)
+    fn = jax.shard_map(
+        functools.partial(_mis2_local_fixpoint, axis=axis,
+                          total_v=ell_spec.shape[0], priority=priority,
+                          max_iters=max_iters),
+        mesh=mesh,
+        in_specs=(spec_rows, spec_rows),
+        out_specs=(spec_rows, P(axis)),
+    )
+    active_spec = jax.ShapeDtypeStruct((ell_spec.shape[0],), jnp.bool_)
+    return jax.jit(fn).lower(ell_spec, active_spec)

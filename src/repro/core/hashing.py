@@ -1,0 +1,158 @@
+"""Deterministic pseudo-random priorities (paper §V-A).
+
+The paper uses Marsaglia 64-bit hashes: ``h(iter, v) = f(f(iter) ^ f(v))``
+with ``f`` either xorshift64 ("Xor Hash", shown to be *worse* than fixed
+priorities) or xorshift64* ("Xor* Hash", the production choice).
+
+TPU adaptation (DESIGN.md §3): TPUs have no native 64-bit integers, so all
+64-bit arithmetic is emulated on uint32 limb pairs ``(hi, lo)`` — xor/shift
+are limbwise, and the xorshift* multiply uses 16-bit partial products.  This
+is bit-exact with the reference 64-bit math (tested against numpy uint64) and
+lowers to plain VPU ops.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+U32 = jnp.uint32
+_MASK16 = np.uint32(0xFFFF)
+
+# xorshift64* multiplier, Vigna / Marsaglia
+_MUL_HI = np.uint32(0x2545F491)
+_MUL_LO = np.uint32(0x4F6CDD1D)
+
+
+class U64(NamedTuple):
+    hi: jnp.ndarray
+    lo: jnp.ndarray
+
+
+def u64(x) -> U64:
+    """Lift uint32 array (or python int) to a u64 limb pair."""
+    x = jnp.asarray(x, dtype=U32)
+    return U64(jnp.zeros_like(x), x)
+
+
+def _xor(a: U64, b: U64) -> U64:
+    return U64(a.hi ^ b.hi, a.lo ^ b.lo)
+
+
+def _shr(a: U64, n: int) -> U64:
+    n = int(n)
+    if n == 0:
+        return a
+    if n >= 32:
+        return U64(jnp.zeros_like(a.hi), a.hi >> U32(n - 32) if n > 32 else a.hi)
+    return U64(a.hi >> U32(n), (a.lo >> U32(n)) | (a.hi << U32(32 - n)))
+
+
+def _shl(a: U64, n: int) -> U64:
+    n = int(n)
+    if n == 0:
+        return a
+    if n >= 32:
+        return U64(a.lo << U32(n - 32) if n > 32 else a.lo, jnp.zeros_like(a.lo))
+    return U64((a.hi << U32(n)) | (a.lo >> U32(32 - n)), a.lo << U32(n))
+
+
+def _mulhi32(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """High 32 bits of a 32x32 -> 64 product, via 16-bit partials."""
+    al, ah = a & _MASK16, a >> U32(16)
+    bl, bh = b & _MASK16, b >> U32(16)
+    ll = al * bl
+    lh = al * bh
+    hl = ah * bl
+    hh = ah * bh
+    mid = (ll >> U32(16)) + (lh & _MASK16) + (hl & _MASK16)
+    return hh + (lh >> U32(16)) + (hl >> U32(16)) + (mid >> U32(16))
+
+
+def _mul64(a: U64, mhi: np.uint32, mlo: np.uint32) -> U64:
+    """(a * m) mod 2^64 with constant multiplier m = (mhi, mlo)."""
+    lo = a.lo * mlo
+    hi = _mulhi32(a.lo, jnp.full_like(a.lo, mlo)) + a.hi * mlo + a.lo * mhi
+    return U64(hi, lo)
+
+
+def xorshift64(x: U64) -> U64:
+    """Marsaglia xorshift64 (13, 7, 17 triple)."""
+    x = _xor(x, _shl(x, 13))
+    x = _xor(x, _shr(x, 7))
+    x = _xor(x, _shl(x, 17))
+    return x
+
+
+def xorshift64_star(x: U64) -> U64:
+    """xorshift64* = xorshift (12, 25, 27) then multiply (Vigna)."""
+    x = _xor(x, _shr(x, 12))
+    x = _xor(x, _shl(x, 25))
+    x = _xor(x, _shr(x, 27))
+    return _mul64(x, _MUL_HI, _MUL_LO)
+
+
+def _combine(f, iteration, vertex_ids: jnp.ndarray) -> jnp.ndarray:
+    """h(iter, v) = f(f(iter+1) ^ f(v+1)); returns the *high* 32 bits.
+
+    +1 offsets keep the all-zero fixed point of xorshift out of the domain.
+    """
+    it = f(u64(jnp.asarray(iteration, dtype=U32) + U32(1)))
+    it = U64(jnp.broadcast_to(it.hi, vertex_ids.shape),
+             jnp.broadcast_to(it.lo, vertex_ids.shape))
+    vx = f(u64(vertex_ids.astype(U32) + U32(1)))
+    out = f(_xor(it, vx))
+    return out.hi
+
+
+def priorities_xorshift_star(iteration, vertex_ids: jnp.ndarray) -> jnp.ndarray:
+    """The paper's production hash ('Xor* Hash')."""
+    return _combine(xorshift64_star, iteration, vertex_ids)
+
+
+def priorities_xorshift(iteration, vertex_ids: jnp.ndarray) -> jnp.ndarray:
+    """'Xor Hash' — kept for the Table I comparison (it is *worse*)."""
+    return _combine(xorshift64, iteration, vertex_ids)
+
+
+def priorities_fixed(iteration, vertex_ids: jnp.ndarray) -> jnp.ndarray:
+    """Bell-style fixed priorities: hashed once, ignoring the iteration."""
+    del iteration
+    return _combine(xorshift64_star, 0, vertex_ids)
+
+
+PRIORITY_FNS = {
+    "xorshift_star": priorities_xorshift_star,
+    "xorshift": priorities_xorshift,
+    "fixed": priorities_fixed,
+}
+
+
+# ---------------------------------------------------------------------------
+# numpy uint64 oracle (for bit-exactness tests of the limb emulation)
+# ---------------------------------------------------------------------------
+
+def _np_xorshift64(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint64)
+    x ^= np.left_shift(x, np.uint64(13))
+    x ^= np.right_shift(x, np.uint64(7))
+    x ^= np.left_shift(x, np.uint64(17))
+    return x
+
+
+def _np_xorshift64_star(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint64)
+    x ^= np.right_shift(x, np.uint64(12))
+    x ^= np.left_shift(x, np.uint64(25))
+    x ^= np.right_shift(x, np.uint64(27))
+    return x * np.uint64(0x2545F4914F6CDD1D)
+
+
+def np_priorities(kind: str, iteration: int, vertex_ids: np.ndarray) -> np.ndarray:
+    f = {"xorshift": _np_xorshift64, "xorshift_star": _np_xorshift64_star,
+         "fixed": _np_xorshift64_star}[kind]
+    it = 0 if kind == "fixed" else iteration
+    with np.errstate(over="ignore"):
+        h = f(f(np.uint64(it + 1)) ^ f(vertex_ids.astype(np.uint64) + np.uint64(1)))
+    return (h >> np.uint64(32)).astype(np.uint32)

@@ -1,0 +1,445 @@
+"""Parallel, deterministic distance-2 maximal independent set (paper Alg. 1).
+
+Two execution engines, bit-identical results:
+
+* ``mis2_dense``  — a single ``lax.while_loop`` fixed point over dense vertex
+  arrays.  Fully jittable, usable inside larger jitted programs (distributed
+  MIS-2, dry-run lowering).  Worklists degenerate to masks here: on a vector
+  machine masked lanes cost bandwidth, not serialization (DESIGN.md §3).
+* ``mis2_compacted`` — host-orchestrated iteration with *real* worklist
+  compaction (paper §V-B): per-iteration work is proportional to the live
+  worklists, padded to power-of-two buckets so XLA caches a handful of
+  compiled step sizes.  This is the production CPU/TPU path and the engine
+  behind the Fig. 2 ablation.
+
+The Fig. 2 optimization chain is exposed through ``Mis2Options`` — each knob
+is one of the paper's four optimizations:
+
+=================  =========================================================
+``priority``       §V-A fresh pseudo-random priorities (fixed | xorshift |
+                   xorshift_star)
+``worklists``      §V-B worklist compaction
+``packed``         §V-C compressed 32-bit status tuples (False = 3-field
+                   tuples: status uint8 / rand uint32 / id uint32 — the
+                   unpacked lexicographic min costs three reduction passes)
+``layout``         §V-D 'ell' = padded lane-aligned gathers (TPU analogue of
+                   warp-coalesced rows) | 'csr_segment' = segment reductions
+=================  =========================================================
+
+Cumulative chain reproduced by ``benchmarks/fig2_optimizations.py``:
+baseline(Bell: fixed, no worklists, unpacked, csr) -> +priorities ->
++worklists -> +packed -> +ELL('SIMD') == production defaults.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graphs.csr import CSRGraph, ELLGraph, csr_to_ell_graph, ell_to_csr_graph
+from .hashing import PRIORITY_FNS
+from .tuples import IN, OUT, effective_priority, id_bits, is_undecided, pack
+
+MAX_ITERS_DEFAULT = 128
+
+U32MAX = np.uint32(0xFFFFFFFF)
+S_IN, S_UND, S_OUT = np.uint8(0), np.uint8(1), np.uint8(2)
+
+
+@dataclass(frozen=True)
+class Mis2Options:
+    priority: str = "xorshift_star"     # fixed | xorshift | xorshift_star
+    worklists: bool = True              # §V-B
+    packed: bool = True                 # §V-C
+    layout: str = "ell"                 # ell | csr_segment  (§V-D)
+    max_iters: int = MAX_ITERS_DEFAULT
+    use_pallas: bool = False            # route hot loops through kernels/
+
+
+@dataclass
+class Mis2Result:
+    in_set: np.ndarray        # bool [V]
+    iterations: int
+    converged: bool
+
+    @property
+    def size(self) -> int:
+        return int(self.in_set.sum())
+
+
+# ===========================================================================
+# dense (fully jitted) engine — packed tuples, ELL layout
+# ===========================================================================
+
+@functools.partial(jax.jit, static_argnames=("priority", "max_iters"))
+def mis2_dense_jittable(neighbors: jnp.ndarray, active: jnp.ndarray,
+                        priority: str = "xorshift_star",
+                        max_iters: int = MAX_ITERS_DEFAULT):
+    """Core fixed point; returns (packed tuple vector T, iterations).
+
+    Safe to call inside larger jitted programs (e.g. AMG setup dry-runs).
+    """
+    v = neighbors.shape[0]
+    b = id_bits(v)
+    vids = jnp.arange(v, dtype=jnp.uint32)
+    prio_fn = PRIORITY_FNS[priority]
+
+    # inactive vertices are invisible: T pinned to OUT, never refreshed
+    t0 = jnp.where(active, jnp.uint32(1), OUT)
+
+    def cond(state):
+        t, it = state
+        return jnp.any(is_undecided(t) & active) & (it < max_iters)
+
+    def body(state):
+        t, it = state
+        und = is_undecided(t) & active
+        # refresh row (§V-A)
+        t = jnp.where(und, pack(prio_fn(it, vids), vids, b), t)
+        # refresh column: closed-neighborhood min (§V-D layout)
+        tn = t[neighbors]                       # [V, D]
+        m = jnp.min(tn, axis=1)
+        m = jnp.where(m == IN, OUT, m)          # IN-adjacent poison
+        # decide (distance-2 via neighbors' minima)
+        mn = m[neighbors]                       # [V, D]
+        an = active[neighbors]
+        any_out = jnp.any(jnp.where(an, mn, IN) == OUT, axis=1)
+        all_eq = jnp.all(jnp.where(an, mn, t[:, None]) == t[:, None], axis=1)
+        t = jnp.where(und & any_out, OUT, t)
+        t = jnp.where(und & ~any_out & all_eq, IN, t)
+        return t, it + 1
+
+    t, iters = jax.lax.while_loop(cond, body, (t0, jnp.uint32(0)))
+    return t, iters
+
+
+def mis2_dense(graph, active: Optional[jnp.ndarray] = None,
+               options: Mis2Options = Mis2Options()) -> Mis2Result:
+    ell = graph if isinstance(graph, ELLGraph) else csr_to_ell_graph(graph)
+    v = ell.num_vertices
+    if active is None:
+        active = jnp.ones(v, dtype=bool)
+    else:
+        active = jnp.asarray(active)
+    t, iters = mis2_dense_jittable(ell.neighbors, active,
+                                   options.priority, options.max_iters)
+    t_np = np.asarray(t)
+    act_np = np.asarray(active)
+    undecided = (t_np != np.uint32(IN)) & (t_np != U32MAX) & act_np
+    return Mis2Result(t_np == np.uint32(IN), int(iters), not undecided.any())
+
+
+# ===========================================================================
+# step kernels for the compacted / ablation engine
+#   worklists are padded int32 index buffers; sentinel == V (scatter-dropped)
+# ===========================================================================
+
+def _bucket(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def _pad_worklist(idx: np.ndarray, v: int) -> jnp.ndarray:
+    size = _bucket(len(idx))
+    out = np.full(size, v, dtype=np.int32)
+    out[: len(idx)] = idx
+    return jnp.asarray(out)
+
+
+# ---- packed representation ----
+
+@functools.partial(jax.jit, static_argnames=("priority", "b"))
+def _refresh_rows_packed(t, wl1, it, priority: str, b: int):
+    v = t.shape[0]
+    rows = jnp.clip(wl1, 0, v - 1)
+    ids = rows.astype(jnp.uint32)
+    told = t[rows]
+    newt = pack(PRIORITY_FNS[priority](it, ids), ids, b)
+    newt = jnp.where(is_undecided(told), newt, told)   # idempotent on decided
+    return t.at[wl1].set(newt, mode="drop")
+
+
+@jax.jit
+def _refresh_cols_packed_ell(t, m, wl2, neighbors):
+    v = neighbors.shape[0]
+    rows = jnp.clip(wl2, 0, v - 1)
+    tn = t[neighbors[rows]]
+    mv = jnp.min(tn, axis=1)
+    mv = jnp.where(mv == IN, OUT, mv)
+    return m.at[wl2].set(mv, mode="drop")
+
+
+@jax.jit
+def _decide_packed_ell(t, m, wl1, neighbors, active):
+    v = neighbors.shape[0]
+    rows = jnp.clip(wl1, 0, v - 1)
+    nb = neighbors[rows]
+    mn = m[nb]
+    an = active[nb]
+    tv = t[rows]
+    any_out = jnp.any(jnp.where(an, mn, IN) == OUT, axis=1)
+    all_eq = jnp.all(jnp.where(an, mn, tv[:, None]) == tv[:, None], axis=1)
+    newt = jnp.where(any_out, OUT, jnp.where(all_eq, IN, tv))
+    newt = jnp.where(is_undecided(tv), newt, tv)
+    return t.at[wl1].set(newt, mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("v",))
+def _refresh_cols_packed_csr(t, m, wl2_mask, edge_rows, edge_cols, v: int):
+    te = t[edge_cols]
+    mv = jax.ops.segment_min(te, edge_rows, num_segments=v)
+    mv = jnp.minimum(mv, t)                    # closed neighborhood
+    mv = jnp.where(mv == IN, OUT, mv)
+    return jnp.where(wl2_mask, mv, m)
+
+
+@functools.partial(jax.jit, static_argnames=("v",))
+def _decide_packed_csr(t, m, wl1_mask, edge_rows, edge_cols, active, v: int):
+    mn = m[edge_cols]
+    an = active[edge_cols]
+    te = t[edge_rows]
+    has_out = jax.ops.segment_max(
+        ((an & (mn == OUT)).astype(jnp.int32)), edge_rows, num_segments=v
+    ) > 0
+    has_out = has_out | (m == OUT)             # closed (self term)
+    neq = jax.ops.segment_max(
+        (an & (mn != te)).astype(jnp.int32), edge_rows, num_segments=v
+    ) > 0
+    all_eq = ~neq & (m == t)                   # closed (self term)
+    newt = jnp.where(has_out, OUT, jnp.where(all_eq, IN, t))
+    newt = jnp.where(is_undecided(t), newt, t)
+    return jnp.where(wl1_mask, newt, t)
+
+
+# ---- unpacked (3-field) representation (§V-C ablation) ----
+
+def _lex_lt(s1, r1, i1, s2, r2, i2):
+    return (s1 < s2) | ((s1 == s2) & ((r1 < r2) | ((r1 == r2) & (i1 < i2))))
+
+
+@functools.partial(jax.jit, static_argnames=("priority", "b"))
+def _refresh_rows_unpacked(ts, tr, ti, wl1, it, priority: str, b: int):
+    v = ts.shape[0]
+    rows = jnp.clip(wl1, 0, v - 1)
+    ids = rows.astype(jnp.uint32)
+    und = ts[rows] == S_UND
+    prio = effective_priority(PRIORITY_FNS[priority](it, ids), b)
+    newr = jnp.where(und, prio, tr[rows])
+    tr = tr.at[wl1].set(newr, mode="drop")
+    return ts, tr, ti
+
+
+@jax.jit
+def _refresh_cols_unpacked_ell(ts, tr, ti, ms, mr, mi, wl2, neighbors):
+    v = neighbors.shape[0]
+    rows = jnp.clip(wl2, 0, v - 1)
+    nb = neighbors[rows]                      # [W, D]
+    cs, cr, ci = ts[nb], tr[nb], ti[nb]
+    bs, br, bi = cs[:, 0], cr[:, 0], ci[:, 0]
+    for j in range(1, nb.shape[1]):           # unrolled lexicographic min
+        lt = _lex_lt(cs[:, j], cr[:, j], ci[:, j], bs, br, bi)
+        bs = jnp.where(lt, cs[:, j], bs)
+        br = jnp.where(lt, cr[:, j], br)
+        bi = jnp.where(lt, ci[:, j], bi)
+    poisoned = bs == S_IN                     # IN-adjacent poison
+    bs = jnp.where(poisoned, S_OUT, bs)
+    ms = ms.at[wl2].set(bs, mode="drop")
+    mr = mr.at[wl2].set(br, mode="drop")
+    mi = mi.at[wl2].set(bi, mode="drop")
+    return ms, mr, mi
+
+
+@functools.partial(jax.jit, static_argnames=("v",))
+def _refresh_cols_unpacked_csr(ts, tr, ti, ms, mr, mi, wl2_mask,
+                               edge_rows, edge_cols, v: int):
+    """Three segment passes — the traffic cost packing removes (§V-C)."""
+    es, er, ei = ts[edge_cols], tr[edge_cols], ti[edge_cols]
+    smin = jax.ops.segment_min(es, edge_rows, num_segments=v)
+    smin = jnp.minimum(smin, ts)
+    on_s = es == smin[edge_rows]
+    rmin = jax.ops.segment_min(jnp.where(on_s, er, U32MAX), edge_rows,
+                               num_segments=v)
+    rmin = jnp.where(ts == smin, jnp.minimum(rmin, tr), rmin)
+    on_r = on_s & (er == rmin[edge_rows])
+    imin = jax.ops.segment_min(jnp.where(on_r, ei, U32MAX), edge_rows,
+                               num_segments=v)
+    imin = jnp.where((ts == smin) & (tr == rmin), jnp.minimum(imin, ti), imin)
+    poisoned = smin == S_IN
+    smin = jnp.where(poisoned, S_OUT, smin)
+    ms = jnp.where(wl2_mask, smin, ms)
+    mr = jnp.where(wl2_mask, rmin, mr)
+    mi = jnp.where(wl2_mask, imin, mi)
+    return ms, mr, mi
+
+
+@jax.jit
+def _decide_unpacked_ell(ts, tr, ti, ms, mr, mi, wl1, neighbors, active):
+    v = neighbors.shape[0]
+    rows = jnp.clip(wl1, 0, v - 1)
+    nb = neighbors[rows]
+    an = active[nb]
+    cs, cr, ci = ms[nb], mr[nb], mi[nb]
+    tvs, tvr, tvi = ts[rows], tr[rows], ti[rows]
+    any_out = jnp.any(an & (cs == S_OUT), axis=1)
+    eq = (cs == S_UND) & (cr == tvr[:, None]) & (ci == tvi[:, None])
+    all_eq = jnp.all(jnp.where(an, eq, True), axis=1)
+    news = jnp.where(any_out, S_OUT, jnp.where(all_eq, S_IN, tvs))
+    news = jnp.where(tvs == S_UND, news, tvs)
+    return ts.at[wl1].set(news, mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("v",))
+def _decide_unpacked_csr(ts, tr, ti, ms, mr, mi, wl1_mask,
+                         edge_rows, edge_cols, active, v: int):
+    an = active[edge_cols]
+    cs, cr, ci = ms[edge_cols], mr[edge_cols], mi[edge_cols]
+    any_out = jax.ops.segment_max(
+        (an & (cs == S_OUT)).astype(jnp.int32), edge_rows, num_segments=v
+    ) > 0
+    any_out = any_out | (ms == S_OUT)
+    neq = (cs != S_UND) | (cr != tr[edge_rows]) | (ci != ti[edge_rows])
+    some_neq = jax.ops.segment_max(
+        (an & neq).astype(jnp.int32), edge_rows, num_segments=v
+    ) > 0
+    self_eq = (ms == S_UND) & (mr == tr) & (mi == ti)
+    all_eq = ~some_neq & self_eq
+    news = jnp.where(any_out, S_OUT, jnp.where(all_eq, S_IN, ts))
+    news = jnp.where(ts == S_UND, news, ts)
+    return jnp.where(wl1_mask, news, ts)
+
+
+def _make_csr_edges(graph: CSRGraph):
+    indptr = np.asarray(graph.indptr)
+    indices = np.asarray(graph.indices)
+    v = len(indptr) - 1
+    rows = np.repeat(np.arange(v, dtype=np.int32), np.diff(indptr))
+    return jnp.asarray(rows), jnp.asarray(indices.astype(np.int32))
+
+
+# ===========================================================================
+# compacted / ablation driver
+# ===========================================================================
+
+def mis2_compacted(graph, active: Optional[np.ndarray] = None,
+                   options: Mis2Options = Mis2Options()) -> Mis2Result:
+    if options.layout == "ell":
+        ell = graph if isinstance(graph, ELLGraph) else csr_to_ell_graph(graph)
+        v = ell.num_vertices
+    elif options.layout == "csr_segment":
+        csr = ell_to_csr_graph(graph) if isinstance(graph, ELLGraph) else graph
+        edge_rows, edge_cols = _make_csr_edges(csr)
+        v = csr.num_vertices
+    else:
+        raise ValueError(options.layout)
+
+    active_np = np.ones(v, bool) if active is None else np.asarray(active)
+    active_j = jnp.asarray(active_np)
+    b = id_bits(v)
+
+    minprop_ops = None
+    if options.use_pallas:
+        if not (options.layout == "ell" and options.packed):
+            raise ValueError("pallas path requires packed tuples + ELL layout")
+        from ..kernels.minprop_ell import ops as minprop_ops  # noqa: F811
+
+    if options.packed:
+        t = jnp.where(active_j, jnp.uint32(1), U32MAX)
+        m = jnp.full(v, U32MAX, dtype=jnp.uint32)
+    else:
+        ts = jnp.where(active_j, S_UND, S_OUT).astype(jnp.uint8)
+        tr = jnp.zeros(v, dtype=jnp.uint32)
+        ti = jnp.arange(v, dtype=jnp.uint32)
+        ms = jnp.full(v, S_OUT, dtype=jnp.uint8)
+        mr = jnp.full(v, U32MAX, dtype=jnp.uint32)
+        mi = jnp.full(v, U32MAX, dtype=jnp.uint32)
+
+    wl1_np = np.flatnonzero(active_np).astype(np.int32)
+    wl2_np = np.arange(v, dtype=np.int32)
+    it = 0
+    while len(wl1_np) and it < options.max_iters:
+        if options.worklists or it == 0:
+            wl1 = _pad_worklist(wl1_np, v)
+            wl2 = _pad_worklist(wl2_np, v)
+            if options.layout == "csr_segment":
+                wl1_mask = jnp.zeros(v, bool).at[wl1].set(True, mode="drop")
+                wl2_mask = jnp.zeros(v, bool).at[wl2].set(True, mode="drop")
+        # without worklists, the full it==0 buffers are reused every iteration
+
+        if options.packed:
+            t = _refresh_rows_packed(t, wl1, np.uint32(it), options.priority, b)
+            if options.layout == "ell":
+                if minprop_ops is not None:
+                    m = minprop_ops.refresh_columns(t, m, wl2, ell.neighbors,
+                                                    len(wl2_np))
+                    t = minprop_ops.decide(t, m, wl1, ell.neighbors, active_j,
+                                           len(wl1_np))
+                else:
+                    m = _refresh_cols_packed_ell(t, m, wl2, ell.neighbors)
+                    t = _decide_packed_ell(t, m, wl1, ell.neighbors, active_j)
+            else:
+                m = _refresh_cols_packed_csr(t, m, wl2_mask, edge_rows,
+                                             edge_cols, v)
+                t = _decide_packed_csr(t, m, wl1_mask, edge_rows, edge_cols,
+                                       active_j, v)
+            t_np = np.asarray(t)
+            und = (t_np != np.uint32(IN)) & (t_np != U32MAX)
+            live = np.asarray(m) != U32MAX
+        else:
+            ts, tr, ti = _refresh_rows_unpacked(ts, tr, ti, wl1, np.uint32(it),
+                                                options.priority, b)
+            if options.layout == "ell":
+                ms, mr, mi = _refresh_cols_unpacked_ell(
+                    ts, tr, ti, ms, mr, mi, wl2, ell.neighbors)
+                ts = _decide_unpacked_ell(ts, tr, ti, ms, mr, mi, wl1,
+                                          ell.neighbors, active_j)
+            else:
+                ms, mr, mi = _refresh_cols_unpacked_csr(
+                    ts, tr, ti, ms, mr, mi, wl2_mask, edge_rows, edge_cols, v)
+                ts = _decide_unpacked_csr(ts, tr, ti, ms, mr, mi, wl1_mask,
+                                          edge_rows, edge_cols, active_j, v)
+            t_np = np.asarray(ts)
+            und = t_np == S_UND
+            live = np.asarray(ms) != S_OUT
+        wl1_np = np.flatnonzero(und).astype(np.int32)
+        wl2_np = np.flatnonzero(live).astype(np.int32)
+        it += 1
+
+    in_set = (np.asarray(t) == np.uint32(IN)) if options.packed \
+        else (np.asarray(ts) == S_IN)
+    return Mis2Result(in_set, it, len(wl1_np) == 0)
+
+
+# ===========================================================================
+# public API
+# ===========================================================================
+
+def mis2(graph, active=None, options: Mis2Options = Mis2Options(),
+         engine: str = "compacted") -> Mis2Result:
+    """Compute a distance-2 maximal independent set (deterministic).
+
+    ``engine='compacted'`` (default; §V-B worklists) or ``'dense'`` (single
+    jitted ``while_loop``).  Both produce identical sets for equal options.
+    """
+    if engine == "dense":
+        return mis2_dense(graph, active, options)
+    if engine == "compacted":
+        return mis2_compacted(graph, active, options)
+    raise ValueError(engine)
+
+
+# Fig. 2 cumulative ablation chain (benchmarks/fig2_optimizations.py)
+ABLATION_CHAIN = {
+    "baseline_bell": Mis2Options(priority="fixed", worklists=False,
+                                 packed=False, layout="csr_segment"),
+    "+rand_priority": Mis2Options(priority="xorshift_star", worklists=False,
+                                  packed=False, layout="csr_segment"),
+    "+worklists": Mis2Options(priority="xorshift_star", worklists=True,
+                              packed=False, layout="csr_segment"),
+    "+packed_status": Mis2Options(priority="xorshift_star", worklists=True,
+                                  packed=True, layout="csr_segment"),
+    "+simd_ell": Mis2Options(priority="xorshift_star", worklists=True,
+                             packed=True, layout="ell"),
+}

@@ -1,0 +1,149 @@
+"""Multilevel graph partitioning via MIS-2 aggregation.
+
+This is the paper's own forward-looking use case (§VII, Gilbert et al.):
+replace heavy-edge matching with MIS-2 coarsening in a multilevel
+partitioner.  The launcher uses it for device placement (pipeline stages /
+expert clusters) in examples/partition_demo.py — the honest integration of
+the paper's technique with the LM-architecture substrate (DESIGN.md
+§Arch-applicability).
+
+Pipeline: coarsen with Algorithm 3 until <= coarse_target vertices, greedy
+balanced partition of the coarsest graph, project labels back up, one
+boundary-refinement sweep per level (deterministic: vertices move only to
+strictly better parts, processed in index order via vectorized gain +
+capacity check).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..graphs.csr import CSRGraph
+from ..graphs.ops import coarse_graph_from_labels
+from .aggregation import aggregate_two_phase
+from .mis2 import Mis2Options
+
+
+@dataclass
+class PartitionResult:
+    parts: np.ndarray          # int32 [V] part id
+    num_parts: int
+    edge_cut: int
+    levels: int
+    history: list = field(default_factory=list)   # (V, E) per level
+
+
+def _edge_list(g: CSRGraph):
+    indptr = np.asarray(g.indptr)
+    indices = np.asarray(g.indices)
+    rows = np.repeat(np.arange(len(indptr) - 1), np.diff(indptr))
+    keep = rows != indices
+    return rows[keep], indices[keep]
+
+
+def edge_cut(g: CSRGraph, parts: np.ndarray) -> int:
+    r, c = _edge_list(g)
+    return int((parts[r] != parts[c]).sum()) // 2
+
+
+def _greedy_coarse_partition(g: CSRGraph, k: int, w: np.ndarray) -> np.ndarray:
+    """BFS-ish weight-balanced greedy partition of a small graph (host)."""
+    v = g.num_vertices
+    indptr = np.asarray(g.indptr)
+    indices = np.asarray(g.indices)
+    total = int(w.sum())
+    parts = np.full(v, -1, dtype=np.int32)
+    order = np.argsort(-np.diff(indptr))          # high degree first seeds
+    loads = np.zeros(k, dtype=np.int64)
+    cur = 0
+    remaining = total
+    for seed in order:
+        if parts[seed] >= 0:
+            continue
+        if cur >= k:
+            cur = int(loads.argmin())
+        frontier = [int(seed)]
+        while frontier:
+            tgt = (remaining + loads[cur]) / max(1, k - cur) if cur < k \
+                else total / k
+            if loads[cur] >= tgt:
+                break
+            u = frontier.pop(0)
+            if parts[u] >= 0:
+                continue
+            # avoid chunky overshoot: push to next part instead
+            if cur < k - 1 and loads[cur] > 0.7 * tgt \
+                    and loads[cur] + int(w[u]) > 1.1 * tgt:
+                break
+            parts[u] = cur
+            loads[cur] += int(w[u])
+            remaining -= int(w[u])
+            for nb in indices[indptr[u]:indptr[u + 1]]:
+                if parts[nb] < 0:
+                    frontier.append(int(nb))
+        tgt = (remaining + loads[cur]) / max(1, k - cur) if cur < k else 0
+        if cur < k and loads[cur] >= 0.9 * tgt:
+            cur += 1
+    for u in np.flatnonzero(parts < 0):            # stragglers -> lightest
+        p = int(loads.argmin())
+        parts[u] = p
+        loads[p] += int(w[u])
+    return parts
+
+
+def _refine(g: CSRGraph, parts: np.ndarray, k: int, w: np.ndarray,
+            rounds: int = 2) -> np.ndarray:
+    """Boundary refinement: move to the majority neighbor part if it strictly
+    reduces cut and keeps weighted balance within 10%."""
+    v = g.num_vertices
+    r, c = _edge_list(g)
+    cap = int(np.ceil(w.sum() / k * 1.10))
+    for _ in range(rounds):
+        counts = np.zeros((v, k), dtype=np.int32)
+        np.add.at(counts, (r, parts[c]), 1)
+        best = counts.argmax(axis=1).astype(np.int32)
+        gain = counts[np.arange(v), best] - counts[np.arange(v), parts]
+        loads = np.bincount(parts, weights=w, minlength=k).astype(np.int64)
+        moved = False
+        for u in np.flatnonzero(gain > 0):       # index order => deterministic
+            b = best[u]
+            if b != parts[u] and loads[b] + w[u] <= cap and loads[parts[u]] > w[u]:
+                loads[parts[u]] -= w[u]
+                loads[b] += w[u]
+                parts[u] = b
+                moved = True
+        if not moved:
+            break
+    return parts
+
+
+def partition(g: CSRGraph, num_parts: int, coarse_target: int | None = None,
+              options: Mis2Options = Mis2Options()) -> PartitionResult:
+    coarse_target = coarse_target or max(16 * num_parts, 256)
+    levels = []
+    graphs = [g]
+    weights = [np.ones(g.num_vertices, dtype=np.int64)]
+    label_maps = []
+    cur = g
+    while cur.num_vertices > coarse_target and len(levels) < 20:
+        agg = aggregate_two_phase(cur, options=options)
+        if agg.num_aggregates >= cur.num_vertices:   # no progress
+            break
+        label_maps.append(agg.labels)
+        weights.append(np.bincount(agg.labels, weights=weights[-1],
+                                   minlength=agg.num_aggregates).astype(np.int64))
+        cur = coarse_graph_from_labels(cur, agg.labels, agg.num_aggregates)
+        graphs.append(cur)
+        levels.append((cur.num_vertices, cur.num_entries))
+
+    parts = _greedy_coarse_partition(cur, num_parts, weights[-1])
+    parts = _refine(cur, parts, num_parts, weights[-1])
+    # project back up
+    for labels, fine_g, fine_w in zip(reversed(label_maps), reversed(graphs[:-1]),
+                                      reversed(weights[:-1])):
+        parts = parts[labels]
+        parts = _refine(fine_g, parts, num_parts, fine_w)
+
+    return PartitionResult(parts.astype(np.int32), num_parts,
+                           edge_cut(g, parts), len(label_maps) + 1, levels)

@@ -1,0 +1,55 @@
+"""Compressed status tuples (paper §V-C).
+
+The 3-field tuple ``(status, rand, id)`` is packed into one ``uint32``:
+
+* ``IN  = 0``
+* ``OUT = 0xFFFFFFFF``
+* undecided: ``(priority << b) | (id + 1)`` where ``b = ceil(log2(V + 2))``.
+
+Equation (1) of the paper guarantees at least one zero bit among the low ``b``
+bits, so no undecided packing collides with IN or OUT, and the ordering
+``IN < UNDECIDED < OUT`` holds.  Lexicographic tuple comparison becomes a
+single integer compare; the unique id is an implicit tiebreak.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+U32 = jnp.uint32
+
+IN = np.uint32(0)
+OUT = np.uint32(0xFFFFFFFF)
+
+
+def id_bits(num_vertices: int) -> int:
+    """b = ceil(log2(V + 2)) — bits reserved for the id component."""
+    return max(1, math.ceil(math.log2(num_vertices + 2)))
+
+
+def effective_priority(priority: jnp.ndarray, b: int) -> jnp.ndarray:
+    """Truncate a 32-bit hash to the 32-b priority bits that fit the packing.
+
+    We keep the *high* bits (xorshift* has the strongest high bits); both the
+    packed and unpacked representations compare this same truncated value, so
+    the two representations produce bit-identical MIS-2 sets.
+    """
+    return priority.astype(U32) >> U32(b)
+
+
+def pack(priority: jnp.ndarray, vertex_ids: jnp.ndarray, b: int) -> jnp.ndarray:
+    """(priority' << b) | (id + 1) on uint32, priority' = high 32-b hash bits."""
+    pr = effective_priority(priority, b) << U32(b)
+    return pr | (vertex_ids.astype(U32) + U32(1))
+
+
+def unpack_id(t: jnp.ndarray, b: int) -> jnp.ndarray:
+    """Recover the vertex id from an undecided packed tuple."""
+    mask = U32((1 << b) - 1)
+    return (t & mask) - U32(1)
+
+
+def is_undecided(t: jnp.ndarray) -> jnp.ndarray:
+    return (t != IN) & (t != OUT)

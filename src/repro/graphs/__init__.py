@@ -1,0 +1,47 @@
+from .csr import (
+    BucketedELL,
+    CSRGraph,
+    CSRMatrix,
+    ELLGraph,
+    ELLMatrix,
+    csr_from_coo,
+    csr_to_bucketed_ell,
+    csr_to_ell_graph,
+    csr_to_ell_matrix,
+    degrees,
+    ell_to_csr_graph,
+    ensure_self_loops,
+    symmetrize,
+)
+from .generators import (
+    elasticity3d,
+    laplace3d,
+    paper_suite,
+    path_graph,
+    random_skewed_graph,
+    random_uniform_graph,
+)
+from .ops import (
+    coarse_graph_from_labels,
+    extract_diagonal,
+    galerkin_coarse_matrix,
+    graph_power2,
+    matrix_to_scipy,
+    neighbor_all_eq,
+    neighbor_any_eq,
+    neighbor_min,
+    spmv_csr_segment,
+    spmv_ell,
+)
+
+__all__ = [
+    "BucketedELL", "CSRGraph", "CSRMatrix", "ELLGraph", "ELLMatrix",
+    "csr_from_coo", "csr_to_bucketed_ell", "csr_to_ell_graph", "csr_to_ell_matrix", "degrees",
+    "ell_to_csr_graph", "ensure_self_loops", "symmetrize",
+    "elasticity3d", "laplace3d", "paper_suite", "path_graph",
+    "random_skewed_graph", "random_uniform_graph",
+    "coarse_graph_from_labels", "extract_diagonal", "galerkin_coarse_matrix",
+    "graph_power2", "matrix_to_scipy",
+    "neighbor_all_eq", "neighbor_any_eq", "neighbor_min",
+    "spmv_csr_segment", "spmv_ell",
+]

@@ -1,0 +1,172 @@
+"""Graph / matrix generators reproducing the paper's generated problem suite.
+
+The paper's Table III and Table V problems come from Trilinos' Galeri package:
+
+* ``Laplace3D nx×ny×nz`` — 7-point stencil Poisson matrix (diag 6, offdiag -1).
+* ``Elasticity3D nx×ny×nz`` — 27-point stencil with 3 dof per grid point
+  (avg degree 78.33, max 81 at 60^3 — matches the paper's Table II row).
+
+SuiteSparse downloads are unavailable offline, so the remaining experiment
+graphs are random suites (uniform + skewed degree) standing in for the
+unstructured matrices; EXPERIMENTS.md states the substitution explicitly.
+Elasticity values are a synthetic SPD surrogate (structure exact, values
+diagonally dominant) — the paper's solver experiments only need SPD.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .csr import CSRGraph, CSRMatrix, csr_from_coo
+
+
+def _grid_offsets_7pt():
+    return [(-1, 0, 0), (1, 0, 0), (0, -1, 0), (0, 1, 0), (0, 0, -1), (0, 0, 1)]
+
+
+def _grid_offsets_27pt():
+    offs = [
+        (dx, dy, dz)
+        for dx in (-1, 0, 1)
+        for dy in (-1, 0, 1)
+        for dz in (-1, 0, 1)
+        if not (dx == dy == dz == 0)
+    ]
+    return offs
+
+
+def _stencil_coo(nx: int, ny: int, nz: int, offsets) -> tuple[np.ndarray, np.ndarray]:
+    """COO (row, col) pairs for a structured grid stencil (no diagonal)."""
+    ids = np.arange(nx * ny * nz, dtype=np.int64).reshape(nx, ny, nz)
+    rows_list, cols_list = [], []
+    for dx, dy, dz in offsets:
+        sx = slice(max(0, -dx), nx - max(0, dx))
+        sy = slice(max(0, -dy), ny - max(0, dy))
+        sz = slice(max(0, -dz), nz - max(0, dz))
+        tx = slice(max(0, dx), nx - max(0, -dx))
+        ty = slice(max(0, dy), ny - max(0, -dy))
+        tz = slice(max(0, dz), nz - max(0, -dz))
+        rows_list.append(ids[sx, sy, sz].ravel())
+        cols_list.append(ids[tx, ty, tz].ravel())
+    return np.concatenate(rows_list), np.concatenate(cols_list)
+
+
+def laplace3d(nx: int, ny: int | None = None, nz: int | None = None) -> CSRMatrix:
+    """Galeri-style Laplace3D: 7-point stencil, diag 6, offdiag -1.
+
+    The graph includes the diagonal (self loop), matching the paper's
+    matrix-as-graph setting.
+    """
+    ny = nx if ny is None else ny
+    nz = nx if nz is None else nz
+    v = nx * ny * nz
+    rows, cols = _stencil_coo(nx, ny, nz, _grid_offsets_7pt())
+    vals = np.full(len(rows), -1.0)
+    diag = np.arange(v, dtype=np.int64)
+    rows = np.concatenate([rows, diag])
+    cols = np.concatenate([cols, diag])
+    vals = np.concatenate([vals, np.full(v, 6.0)])
+    return csr_from_coo(rows, cols, v, vals)
+
+
+def elasticity3d(nx: int, ny: int | None = None, nz: int | None = None,
+                 dof: int = 3) -> CSRMatrix:
+    """Elasticity3D structure: 27-point stencil, ``dof`` dofs per grid point.
+
+    Structure matches Galeri's Elasticity3D (81 entries/row interior at
+    dof=3); values are a diagonally dominant SPD surrogate.
+    """
+    ny = nx if ny is None else ny
+    nz = nx if nz is None else nz
+    npts = nx * ny * nz
+    prow, pcol = _stencil_coo(nx, ny, nz, _grid_offsets_27pt())
+    # block expansion: point p adjacent to q -> dof x dof dense block
+    d = dof
+    pr = np.repeat(prow * d, d * d) + np.tile(np.repeat(np.arange(d), d), len(prow))
+    pc = np.repeat(pcol * d, d * d) + np.tile(np.tile(np.arange(d), d), len(prow))
+    # diagonal block (off-diagonal-within-block entries + self)
+    diagp = np.arange(npts, dtype=np.int64)
+    dr = np.repeat(diagp * d, d * d) + np.tile(np.repeat(np.arange(d), d), npts)
+    dc = np.repeat(diagp * d, d * d) + np.tile(np.tile(np.arange(d), d), npts)
+    rows = np.concatenate([pr, dr])
+    cols = np.concatenate([pc, dc])
+    vals = np.full(len(rows), -1.0)
+    vals[len(pr):] = -0.25            # weaker intra-block coupling
+    vals[len(pr):][dr == dc] = 0.0    # placeholder; set below
+    m = csr_from_coo(rows, cols, npts * d, vals)
+    # make diagonally dominant SPD: diag = sum |offdiag| + 1
+    indptr = np.asarray(m.indptr)
+    indices = np.asarray(m.indices)
+    values = np.asarray(m.values).copy()
+    r = np.repeat(np.arange(npts * d), np.diff(indptr))
+    offd = r != indices
+    rowsum = np.zeros(npts * d)
+    np.add.at(rowsum, r[offd], np.abs(values[offd]))
+    values[~offd] = rowsum[r[~offd]] + 1.0
+    import jax.numpy as jnp
+    return CSRMatrix(m.indptr, m.indices, jnp.asarray(values.astype(np.float32)))
+
+
+def random_uniform_graph(num_vertices: int, avg_degree: float, seed: int = 0,
+                         with_self_loops: bool = True) -> CSRGraph:
+    """Erdos-Renyi-ish symmetric graph with ~avg_degree neighbors/vertex."""
+    rng = np.random.default_rng(seed)
+    m = int(num_vertices * avg_degree / 2)
+    rows = rng.integers(0, num_vertices, size=m, dtype=np.int64)
+    cols = rng.integers(0, num_vertices, size=m, dtype=np.int64)
+    keep = rows != cols
+    rows, cols = rows[keep], cols[keep]
+    all_rows = np.concatenate([rows, cols])
+    all_cols = np.concatenate([cols, rows])
+    if with_self_loops:
+        diag = np.arange(num_vertices, dtype=np.int64)
+        all_rows = np.concatenate([all_rows, diag])
+        all_cols = np.concatenate([all_cols, diag])
+    return csr_from_coo(all_rows, all_cols, num_vertices)
+
+
+def random_skewed_graph(num_vertices: int, avg_degree: float, seed: int = 0,
+                        alpha: float = 1.5, with_self_loops: bool = True) -> CSRGraph:
+    """Preferential-style skewed-degree graph (stress for ELL padding)."""
+    rng = np.random.default_rng(seed)
+    m = int(num_vertices * avg_degree / 2)
+    # power-law endpoint sampling
+    u = rng.random(size=2 * m)
+    end = ((num_vertices ** (1 - alpha) - 1) * u + 1) ** (1 / (1 - alpha))
+    end = np.minimum(num_vertices - 1, end.astype(np.int64))
+    perm = rng.permutation(num_vertices)
+    rows, cols = perm[end[:m]], perm[end[m:]]
+    keep = rows != cols
+    rows, cols = rows[keep], cols[keep]
+    all_rows = np.concatenate([rows, cols])
+    all_cols = np.concatenate([cols, rows])
+    if with_self_loops:
+        diag = np.arange(num_vertices, dtype=np.int64)
+        all_rows = np.concatenate([all_rows, diag])
+        all_cols = np.concatenate([all_cols, diag])
+    return csr_from_coo(all_rows, all_cols, num_vertices)
+
+
+def path_graph(num_vertices: int) -> CSRGraph:
+    r = np.arange(num_vertices - 1, dtype=np.int64)
+    diag = np.arange(num_vertices, dtype=np.int64)
+    rows = np.concatenate([r, r + 1, diag])
+    cols = np.concatenate([r + 1, r, diag])
+    return csr_from_coo(rows, cols, num_vertices)
+
+
+# the suite used by benchmarks standing in for the paper's 17 matrices
+def paper_suite(scale: str = "small"):
+    """Named graph suite. 'small' for tests/benches, 'paper' for Table III."""
+    if scale == "small":
+        return {
+            "laplace3d_16": laplace3d(16).graph,
+            "elasticity3d_8": elasticity3d(8).graph,
+            "uniform_50k": random_uniform_graph(50_000, 8.0, seed=1),
+            "skewed_50k": random_skewed_graph(50_000, 8.0, seed=2),
+        }
+    if scale == "paper":
+        return {
+            "Laplace3D_100": laplace3d(100).graph,
+            "Elasticity3D_60": elasticity3d(60).graph,
+        }
+    raise ValueError(scale)

@@ -1,0 +1,12 @@
+"""Jitted wrapper for the hash+pack kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import hash_pack_pallas
+
+
+def hash_pack(iteration, vertex_ids: jnp.ndarray, b: int, *,
+              interpret: bool = True) -> jnp.ndarray:
+    return hash_pack_pallas(iteration, vertex_ids.astype(jnp.uint32), b,
+                            interpret=interpret)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the hash+pack kernel (== core.hashing/tuples path)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.hashing import priorities_xorshift_star
+from ...core.tuples import pack
+
+
+def hash_pack_ref(iteration, vertex_ids: jnp.ndarray, b: int) -> jnp.ndarray:
+    return pack(priorities_xorshift_star(iteration, vertex_ids), vertex_ids, b)

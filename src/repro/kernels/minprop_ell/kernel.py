@@ -1,0 +1,133 @@
+"""Pallas TPU kernels for the MIS-2 hot loops (paper §V-D, TPU-adapted).
+
+The paper's SIMD optimization reads each vertex's adjacency row with a
+warp so loads coalesce.  The TPU analogue (DESIGN.md §3): rows live in
+ELL layout, a *block* of rows ``[BLOCK_ROWS, D]`` is one VMEM tile, and the
+neighbor-tuple gather + min-reduce runs on the VPU across lanes.  The
+paper's *worklist* optimization maps to block-granular work skipping: the
+live worklist length is scalar-prefetched into SMEM and grid blocks whose
+row range lies entirely past ``count`` exit via ``pl.when`` without touching
+VMEM/HBM — the TPU equivalent of launching fewer thread blocks.
+
+Tiling:
+* ``wl_neighbors [W, D]`` — blocked ``[BLOCK_ROWS, D]`` along the grid.
+* ``t / m / active [V]``  — resident as a single VMEM block (uint32; 4 MB at
+  V = 1M).  For V beyond VMEM, the banded variant would block T by the
+  graph bandwidth (RCM-ordered meshes have O(V^(2/3)) bands); the tests
+  exercise the resident variant, which is the paper's problem regime.
+* gathers ``t[idx]`` inside the kernel are 1-D VMEM vector gathers
+  (``jnp.take``), the Mosaic-supported form.
+
+Validated with ``interpret=True`` on CPU against ref.py (bit-exact — all
+integer math).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+IN = np.uint32(0)
+OUT = np.uint32(0xFFFFFFFF)
+
+BLOCK_ROWS = 256
+
+
+def _refresh_columns_kernel(count_ref, nbrs_ref, t_ref, m_ref):
+    """One grid step: M[block] = poisoned closed-neighborhood min of T."""
+    i = pl.program_id(0)
+    block = nbrs_ref.shape[0]
+
+    @pl.when(i * block < count_ref[0])          # §V-B: skip dead blocks
+    def _():
+        nbrs = nbrs_ref[...]                    # [B, D] int32
+        t = t_ref[...]                          # [V] uint32 (VMEM-resident)
+        tn = jnp.take(t, nbrs.reshape(-1), axis=0).reshape(nbrs.shape)
+        mv = jnp.min(tn, axis=1)
+        mv = jnp.where(mv == IN, OUT, mv)
+        m_ref[...] = mv
+
+    @pl.when(i * block >= count_ref[0])
+    def _():
+        m_ref[...] = jnp.full((block,), OUT, dtype=jnp.uint32)
+
+
+def _decide_kernel(count_ref, nbrs_ref, trow_ref, m_ref, act_ref, out_ref):
+    """One grid step: decide IN/OUT for a block of worklist rows."""
+    i = pl.program_id(0)
+    block = nbrs_ref.shape[0]
+
+    @pl.when(i * block < count_ref[0])
+    def _():
+        nbrs = nbrs_ref[...]                    # [B, D]
+        tv = trow_ref[...]                      # [B]
+        m = m_ref[...]                          # [V]
+        act = act_ref[...]                      # [V]
+        flat = nbrs.reshape(-1)
+        mn = jnp.take(m, flat, axis=0).reshape(nbrs.shape)
+        an = jnp.take(act, flat, axis=0).reshape(nbrs.shape)
+        any_out = jnp.any(jnp.where(an, mn, IN) == OUT, axis=1)
+        all_eq = jnp.all(jnp.where(an, mn, tv[:, None]) == tv[:, None], axis=1)
+        newt = jnp.where(any_out, OUT, jnp.where(all_eq, IN, tv))
+        und = (tv != IN) & (tv != OUT)
+        out_ref[...] = jnp.where(und, newt, tv)
+
+    @pl.when(i * block >= count_ref[0])
+    def _():
+        out_ref[...] = trow_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def refresh_columns_pallas(t: jnp.ndarray, wl_neighbors: jnp.ndarray,
+                           count: jnp.ndarray, *, interpret: bool = True,
+                           block_rows: int = BLOCK_ROWS) -> jnp.ndarray:
+    """M values for the (padded) worklist rows. Rows >= count return OUT."""
+    w, d = wl_neighbors.shape
+    block = min(block_rows, w)
+    grid = pl.cdiv(w, block)
+    v = t.shape[0]
+    return pl.pallas_call(
+        _refresh_columns_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(grid,),
+            in_specs=[
+                pl.BlockSpec((block, d), lambda i, *_: (i, 0)),
+                pl.BlockSpec((v,), lambda i, *_: (0,)),
+            ],
+            out_specs=pl.BlockSpec((block,), lambda i, *_: (i,)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((w,), jnp.uint32),
+        interpret=interpret,
+    )(count.reshape(1), wl_neighbors, t)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def decide_pallas(t_rows: jnp.ndarray, m: jnp.ndarray, active: jnp.ndarray,
+                  wl_neighbors: jnp.ndarray, count: jnp.ndarray, *,
+                  interpret: bool = True,
+                  block_rows: int = BLOCK_ROWS) -> jnp.ndarray:
+    w, d = wl_neighbors.shape
+    block = min(block_rows, w)
+    grid = pl.cdiv(w, block)
+    v = m.shape[0]
+    return pl.pallas_call(
+        _decide_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(grid,),
+            in_specs=[
+                pl.BlockSpec((block, d), lambda i, *_: (i, 0)),
+                pl.BlockSpec((block,), lambda i, *_: (i,)),
+                pl.BlockSpec((v,), lambda i, *_: (0,)),
+                pl.BlockSpec((v,), lambda i, *_: (0,)),
+            ],
+            out_specs=pl.BlockSpec((block,), lambda i, *_: (i,)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((w,), jnp.uint32),
+        interpret=interpret,
+    )(count.reshape(1), wl_neighbors, t_rows, m, active)

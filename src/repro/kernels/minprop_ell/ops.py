@@ -1,0 +1,42 @@
+"""Jitted wrappers wiring the Pallas min-propagation kernels into the
+compacted MIS-2 driver (core/mis2.py, ``use_pallas=True``).
+
+The XLA side does the irregular parts (worklist row gather, scatter-back);
+the Pallas kernels fuse the neighbor-tuple gather + reductions, which is
+the paper's measured hot loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import decide_pallas, refresh_columns_pallas
+
+OUT = np.uint32(0xFFFFFFFF)
+
+
+@jax.jit
+def _gather_rows(neighbors, wl):
+    v = neighbors.shape[0]
+    return neighbors[jnp.clip(wl, 0, v - 1)]
+
+
+def refresh_columns(t, m, wl2, neighbors, count, *, interpret=True):
+    """M.at[wl2] <- poisoned min of T over wl2 rows' closed neighborhoods."""
+    wl_nbrs = _gather_rows(neighbors, wl2)
+    mv = refresh_columns_pallas(t, wl_nbrs, jnp.asarray(count, jnp.int32),
+                                interpret=interpret)
+    return m.at[wl2].set(mv, mode="drop")
+
+
+def decide(t, m, wl1, neighbors, active, count, *, interpret=True):
+    """T.at[wl1] <- IN/OUT decision for wl1 rows."""
+    v = neighbors.shape[0]
+    wl_nbrs = _gather_rows(neighbors, wl1)
+    t_rows = t[jnp.clip(wl1, 0, v - 1)]
+    newt = decide_pallas(t_rows, m, active, wl_nbrs,
+                         jnp.asarray(count, jnp.int32), interpret=interpret)
+    return t.at[wl1].set(newt, mode="drop")

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the min-propagation / decide kernels.
+
+These are exactly the XLA-path bodies from core/mis2.py, restated standalone
+so kernel tests have an independent reference.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+IN = np.uint32(0)
+OUT = np.uint32(0xFFFFFFFF)
+
+
+def refresh_columns_ref(t: jnp.ndarray, wl_neighbors: jnp.ndarray,
+                        count: int) -> jnp.ndarray:
+    """M for each worklist row: closed-neighborhood min of T, IN poisoned.
+
+    wl_neighbors: int32 [W, D] — pre-gathered ELL rows of the worklist.
+    Rows at index >= count are don't-care (returned as OUT).
+    """
+    tn = t[wl_neighbors]                    # [W, D]
+    m = jnp.min(tn, axis=1)
+    m = jnp.where(m == IN, OUT, m)
+    w = wl_neighbors.shape[0]
+    live = jnp.arange(w) < count
+    return jnp.where(live, m, OUT)
+
+
+def decide_ref(t_rows: jnp.ndarray, m: jnp.ndarray, active: jnp.ndarray,
+               wl_neighbors: jnp.ndarray, count: int) -> jnp.ndarray:
+    """New T for each worklist row (IN / OUT / unchanged).
+
+    t_rows: uint32 [W] current tuples of worklist rows.
+    m, active: full [V] arrays.
+    """
+    mn = m[wl_neighbors]                    # [W, D]
+    an = active[wl_neighbors]
+    any_out = jnp.any(jnp.where(an, mn, IN) == OUT, axis=1)
+    all_eq = jnp.all(jnp.where(an, mn, t_rows[:, None]) == t_rows[:, None],
+                     axis=1)
+    newt = jnp.where(any_out, OUT, jnp.where(all_eq, IN, t_rows))
+    und = (t_rows != IN) & (t_rows != OUT)
+    newt = jnp.where(und, newt, t_rows)
+    w = wl_neighbors.shape[0]
+    live = jnp.arange(w) < count
+    return jnp.where(live, newt, t_rows)

@@ -1,0 +1,47 @@
+"""Pallas TPU ELL SpMV — the AMG smoother / Gauss-Seidel hot loop.
+
+Same tiling story as minprop_ell: a ``[BLOCK_ROWS, D]`` tile of (cols, vals)
+per grid step, ``x`` VMEM-resident, 1-D vector gather + fused
+multiply-reduce on the VPU, fp32 accumulation.  Padding slots carry
+``val == 0`` so no mask load is needed — the ELL format itself encodes
+the paper's "no divergence" property.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+
+
+def _spmv_kernel(cols_ref, vals_ref, x_ref, y_ref):
+    cols = cols_ref[...]                        # [B, D] int32
+    vals = vals_ref[...]                        # [B, D] f32
+    x = x_ref[...]                              # [V]  (VMEM-resident)
+    xg = jnp.take(x, cols.reshape(-1), axis=0).reshape(cols.shape)
+    y_ref[...] = jnp.sum(vals.astype(jnp.float32) * xg.astype(jnp.float32),
+                         axis=1).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def spmv_ell_pallas(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray, *,
+                    interpret: bool = True,
+                    block_rows: int = BLOCK_ROWS) -> jnp.ndarray:
+    v, d = cols.shape
+    block = min(block_rows, v)
+    grid = pl.cdiv(v, block)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((x.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((v,), x.dtype),
+        interpret=interpret,
+    )(cols, vals, x)

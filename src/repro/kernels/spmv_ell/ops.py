@@ -1,0 +1,9 @@
+"""Jitted wrapper for the Pallas ELL SpMV."""
+from __future__ import annotations
+
+from ...graphs.csr import ELLMatrix
+from .kernel import spmv_ell_pallas
+
+
+def spmv(m: ELLMatrix, x, *, interpret: bool = True):
+    return spmv_ell_pallas(m.cols, m.vals, x, interpret=interpret)

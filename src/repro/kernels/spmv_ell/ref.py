@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the ELL SpMV kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spmv_ell_ref(cols: jnp.ndarray, vals: jnp.ndarray,
+                 x: jnp.ndarray) -> jnp.ndarray:
+    """y = A @ x, A in ELL (padding: col=row, val=0)."""
+    return jnp.sum(vals * x[cols], axis=1)

@@ -1,0 +1,420 @@
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh)
+cell against the production mesh and record memory / while-aware HLO cost /
+collective analyses (EXPERIMENTS.md §Dry-run, §Roofline).
+
+MUST set XLA_FLAGS before any jax import — jax locks the device count on
+first init.  Run as::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m \
+        --shape train_4k [--multi-pod] [--out artifacts/dryrun]
+
+Memory policy (auto, recorded per cell):
+* train cells use gradient accumulation — microbatch count doubles until
+  the per-device footprint fits HBM (16 GB v5e), starting from a
+  tokens-per-device heuristic;
+* architectures whose params+optimizer exceed ~25% of HBM under pure TP
+  store params in bf16 and shard the fp32 AdamW moments + the fp32 grad
+  accumulator ZeRO-1-style over the data axis ('pure bf16 + fp32 moments'
+  TPU recipe).  We deliberately do NOT FSDP-shard the scanned weight
+  stacks: GSPMD hoists their loop-invariant all-gathers out of the layer
+  scan, un-doing the sharding (measured: chameleon-34b temp 18.3 GB with
+  FSDP-over-layers vs fitting with the bf16+ZeRO-1 recipe — EXPERIMENTS.md
+  §Dry-run notes).
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# ruff: noqa: E402
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.hlo_analysis import analyze as hlo_analyze
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (
+    RULE_SETS,
+    batch_sharding,
+    opt_state_shardings,
+    scalar_sharding,
+    tree_shardings,
+)
+from repro.models import get_model
+from repro.models.config import LM_SHAPES, cell_applicable
+from repro.train import AdamWConfig, adamw_init, make_train_step
+
+# TPU v5e hardware constants (EXPERIMENTS.md §Roofline)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_LINK_BW = 50e9              # bytes/s per link (one direction)
+HBM_BYTES = 16e9                # v5e HBM per chip
+
+
+def count_params(tree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))
+
+
+def active_param_count(cfg, params_spec) -> int:
+    total = count_params(params_spec)
+    if not cfg.num_experts:
+        return total
+    expert_per_layer = 3 * cfg.d_model * cfg.moe_d_ff
+    routed = cfg.num_layers * cfg.num_experts * expert_per_layer
+    active = cfg.num_layers * cfg.num_experts_per_token * expert_per_layer
+    return total - routed + active
+
+
+def input_specs(cfg, cell, microbatches: int = 1):
+    """Abstract inputs for one shape cell (no allocation)."""
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "train" and microbatches > 1:
+        lead = (microbatches, b // microbatches)
+    else:
+        lead = (b,)
+    if cfg.family in ("encdec", "audio"):
+        if cell.kind in ("train", "prefill"):
+            return {"frames": jax.ShapeDtypeStruct(
+                        lead + (cfg.encoder_seq, cfg.d_model), jnp.float32),
+                    "tokens": jax.ShapeDtypeStruct(lead + (s,), jnp.int32)}
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    if cell.kind in ("train", "prefill"):
+        return {"tokens": jax.ShapeDtypeStruct(lead + (s,), jnp.int32)}
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+def _with_sharding(sds_tree, shardings):
+    return jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+        sds_tree, shardings)
+
+
+def _sds(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def max_microbatches(cell, mesh) -> int:
+    """Largest k with (B/k) divisible by the DP width."""
+    dp = int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                      if a in mesh.axis_names]))
+    return max(1, cell.global_batch // dp)
+
+
+def default_microbatches(cfg, cell, mesh) -> int:
+    """Start with ~<=8k tokens per device per microbatch."""
+    dp = int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                      if a in mesh.axis_names]))
+    tokens_per_dev = cell.global_batch * cell.seq_len / dp
+    mb = max(1, int(tokens_per_dev // 8192))
+    while cell.global_batch % mb and mb > 1:
+        mb //= 2
+    return min(mb, max_microbatches(cell, mesh))
+
+
+def wants_zero1(cfg, mesh) -> bool:
+    """params+opt under pure TP > ~25% HBM -> bf16 params + ZeRO-1 opt."""
+    tp = mesh.shape.get("model", 1)
+    n = approx_param_count(cfg)
+    return 3 * 4 * n / tp > 0.25 * HBM_BYTES
+
+
+def approx_param_count(cfg) -> int:
+    d, l, v = cfg.d_model, cfg.num_layers, cfg.padded_vocab
+    dh = cfg.resolved_head_dim
+    n = v * d * (1 if cfg.tie_embeddings else 2)
+    att = d * dh * (cfg.num_heads * 2 + cfg.num_kv_heads * 2)
+    if cfg.family == "ssm":
+        per = 2 * d * cfg.ssm_d_inner + d * (cfg.ssm_d_inner + 2 * cfg.ssm_state
+                                             + cfg.ssm_heads)
+    elif cfg.num_experts:
+        per = att + 3 * cfg.num_experts * d * cfg.moe_d_ff + \
+            3 * cfg.num_shared_experts * d * cfg.moe_d_ff
+    else:
+        per = att + 3 * d * cfg.d_ff
+    return n + l * per
+
+
+def adapt_rules(rules, cfg, cell, mesh):
+    """Per-arch rule adaptation (recorded in the artifact):
+
+    * kv_heads not divisible by TP -> replicate KV projections/caches
+      (Megatron practice; the repeat-to-heads happens locally);
+    * decode cells with replicated KV heads shard the cache SEQUENCE over
+      'model' instead (flash-decoding style partial softmax).
+    """
+    tp = mesh.shape.get("model", 1)
+    rules = dict(rules)
+    if cfg.num_experts and cfg.num_experts % tp != 0:
+        # qwen2-moe: 60 experts don't divide TP=16 -> shard the per-expert
+        # hidden dim (TP-in-expert) instead of the expert axis (EP)
+        rules["expert"] = None
+        rules["expert_mlp"] = "model"
+    if cfg.num_kv_heads and cfg.num_kv_heads % tp != 0:
+        rules["kv_heads"] = None
+        if cell.kind == "decode":
+            rules["cache_seq"] = "model"
+    # batch too small for the DP width (long_500k B=1): drop DP axes the
+    # batch cannot cover; model-axis (TP/SP) parallelism carries the cell
+    dp_axes = rules.get("batch") or ()
+    if isinstance(dp_axes, str):
+        dp_axes = (dp_axes,)
+    dp = int(np.prod([mesh.shape[a] for a in dp_axes])) if dp_axes else 1
+    if dp and cell.global_batch % dp != 0:
+        keep = []
+        rem = cell.global_batch
+        for a in dp_axes:
+            if rem % mesh.shape[a] == 0:
+                keep.append(a)
+                rem //= mesh.shape[a]
+        rules["batch"] = tuple(keep) or None
+    return rules
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               rules_name: str = "default", compile_: bool = True,
+               microbatches: int | None = None, zero1: bool | None = None,
+               max_retries: int = 2):
+    cfg = get_config(arch)
+    cell = next(c for c in LM_SHAPES if c.shape_name == shape_name)
+    ok, why = cell_applicable(cfg, cell)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "rules": rules_name, "applicable": ok}
+    if not ok:
+        rec.update(skipped=why, ok=True)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    nd = int(np.prod(list(mesh.shape.values())))
+    rules = adapt_rules(RULE_SETS[rules_name](mesh), cfg, cell, mesh)
+    model = get_model(cfg)
+    if zero1 is None:
+        zero1 = wants_zero1(cfg, mesh)
+    if microbatches is None:
+        microbatches = default_microbatches(cfg, cell, mesh) \
+            if cell.kind == "train" else 1
+
+    for attempt in range(max_retries + 1):
+        rec.update(zero1=zero1, microbatches=microbatches)
+        r = _lower_once(cfg, cell, model, mesh, nd, rules, rec.copy(),
+                        microbatches, zero1, compile_)
+        if not compile_ or not r.get("ok"):
+            return r
+        cap = max_microbatches(cell, mesh)
+        if r["fits_hbm"] or cell.kind != "train" or microbatches >= cap:
+            return r
+        microbatches = min(cap, microbatches * 2)
+        while cell.global_batch % microbatches and microbatches < cap:
+            microbatches += 1
+    return r
+
+
+def _lower_once(cfg, cell, model, mesh, nd, rules, rec, microbatches, zero1,
+                compile_):
+    from repro.models.layers import clear_sharding_context, set_sharding_context
+    set_sharding_context(mesh, rules)
+    try:
+        return _lower_inner(cfg, cell, model, mesh, nd, rules, rec,
+                            microbatches, zero1, compile_)
+    finally:
+        clear_sharding_context()
+
+
+def _lower_inner(cfg, cell, model, mesh, nd, rules, rec, microbatches, zero1,
+                 compile_):
+    param_sh = tree_shardings(mesh, model.param_axes(), rules)
+    params_spec = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if zero1:   # store params bf16 (fp32 moments carry the precision)
+        params_spec = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(
+                x.shape, jnp.bfloat16 if x.dtype == jnp.float32 else x.dtype),
+            params_spec)
+    n_params = count_params(params_spec)
+    n_active = active_param_count(cfg, params_spec)
+    rec.update(n_params=n_params, n_active_params=n_active, num_devices=nd,
+               rules_resolved={k: (list(v) if isinstance(v, tuple) else v)
+                               for k, v in rules.items()})
+
+    batch = input_specs(cfg, cell, microbatches)
+    mb = cell.kind == "train" and microbatches > 1
+    batch_sh = {k: batch_sharding(mesh, rules, ndim=len(v.shape),
+                                  microbatched=mb and len(v.shape) >= 2)
+                for k, v in batch.items()}
+    batch_spec = _with_sharding(batch, batch_sh)
+
+    t0 = time.time()
+    if cell.kind == "train":
+        opt_spec = jax.eval_shape(adamw_init, params_spec)
+        opt_sh = opt_state_shardings(mesh, param_sh,
+                                     axes_tree=model.param_axes(),
+                                     rules=rules, zero1=zero1,
+                                     shapes_tree=params_spec)
+        step_fn = make_train_step(
+            model, cfg, AdamWConfig(), num_microbatches=microbatches,
+            grad_shardings=opt_sh["m"] if zero1 else None)
+        scal = scalar_sharding(mesh)
+        metrics_sh = {k: scal for k in ("ce", "aux", "loss", "lr",
+                                        "grad_norm")}
+        with mesh:
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(param_sh, opt_sh, batch_sh),
+                out_shardings=(param_sh, opt_sh, metrics_sh),
+                donate_argnums=(0, 1),
+            ).lower(params_spec, opt_spec, batch_spec)
+        tokens = cell.global_batch * cell.seq_len
+        rec["model_flops"] = 6 * n_active * tokens
+    elif cell.kind == "prefill":
+        if cfg.family in ("encdec", "audio"):
+            fn = lambda p, b: model.prefill(p, b, cell.seq_len)  # noqa: E731
+        else:
+            fn = lambda p, t: model.prefill(p, t["tokens"], cell.seq_len)  # noqa: E731
+        with mesh:
+            lowered = jax.jit(
+                fn, in_shardings=(param_sh, batch_sh),
+            ).lower(params_spec, batch_spec)
+        rec["model_flops"] = 2 * n_active * cell.global_batch * cell.seq_len
+    else:  # decode
+        cache_struct = jax.eval_shape(
+            lambda: model.init_cache(cell.global_batch, cell.seq_len))
+        cache_sh = tree_shardings(mesh, model.cache_axes(), rules)
+        cache_spec = _with_sharding(_sds(cache_struct), cache_sh)
+
+        def fn(p, c, t):
+            return model.decode_step(p, c, t["tokens"])
+        with mesh:
+            lowered = jax.jit(
+                fn, in_shardings=(param_sh, cache_sh, batch_sh),
+                donate_argnums=(1,),
+            ).lower(params_spec, cache_spec, batch_spec)
+        rec["model_flops"] = 2 * n_active * cell.global_batch
+    rec["lower_s"] = round(time.time() - t0, 2)
+
+    if not compile_:
+        rec["ok"] = True
+        return rec
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+
+    mem = compiled.memory_analysis()
+    rec["memory_analysis"] = {
+        k: int(getattr(mem, k)) for k in
+        ("argument_size_in_bytes", "output_size_in_bytes",
+         "temp_size_in_bytes", "generated_code_size_in_bytes")
+        if hasattr(mem, k)}
+    # donated args alias outputs; live set ~ max(args, outputs) + temps
+    args_b = rec["memory_analysis"].get("argument_size_in_bytes", 0)
+    out_b = rec["memory_analysis"].get("output_size_in_bytes", 0)
+    temp_b = rec["memory_analysis"].get("temp_size_in_bytes", 0)
+    live = max(args_b, out_b) + temp_b
+    rec["live_bytes_per_device"] = live
+    rec["fits_hbm"] = bool(live <= HBM_BYTES)
+
+    cost = compiled.cost_analysis()
+    rec["cost_analysis_flat"] = {
+        k: float(v) for k, v in cost.items()
+        if isinstance(v, (int, float)) and k in ("flops", "bytes accessed")}
+    hlo = compiled.as_text()
+    rec["hlo_bytes"] = len(hlo)
+    t0 = time.time()
+    hc = hlo_analyze(hlo, nd)
+    rec["analyze_s"] = round(time.time() - t0, 2)
+    rec["hlo_cost"] = {"flops": hc["flops"], "bytes": hc["bytes"]}
+    rec["collectives"] = hc["collectives"]
+
+    flops = hc["flops"]
+    mem_bytes = hc["bytes"]
+    wire = sum(c["wire_bytes"] for c in hc["collectives"].values())
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_mem = mem_bytes / HBM_BW
+    t_coll = wire / ICI_LINK_BW
+    bound = max(t_compute, t_mem, t_coll)
+    dominant = max((("compute", t_compute), ("memory", t_mem),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    rec["roofline"] = {
+        "t_compute_s": t_compute, "t_memory_s": t_mem,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_over_hlo_flops": rec["model_flops"] / max(1.0, flops * nd),
+        "roofline_fraction": (t_compute / bound) if bound else 0.0,
+        "wire_bytes_per_device": wire,
+    }
+    rec["ok"] = True
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id or 'all'")
+    ap.add_argument("--shape", default=None, help="shape cell name or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--rules", default="default", choices=sorted(RULE_SETS))
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--zero1", default=None, choices=(None, "on", "off"))
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch in (None, "all") else [args.arch]
+    shapes = [c.shape_name for c in LM_SHAPES] if args.shape in (None, "all") \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    zero1 = None if args.zero1 is None else (args.zero1 == "on")
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+                if args.rules != "default":
+                    tag += f"__{args.rules}"
+                if args.tag:
+                    tag += f"__{args.tag}"
+                path = outdir / f"{tag}.json"
+                if path.exists() and not args.force:
+                    print(f"[cached] {tag}", flush=True)
+                    continue
+                try:
+                    rec = lower_cell(arch, shape, multi_pod=mp,
+                                     rules_name=args.rules,
+                                     compile_=not args.no_compile,
+                                     microbatches=args.microbatches,
+                                     zero1=zero1)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "rules": args.rules, "ok": False,
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                if not rec.get("ok"):
+                    failures += 1
+                path.write_text(json.dumps(rec, indent=2))
+                status = "SKIP" if rec.get("skipped") else \
+                    ("ok" if rec.get("ok") else "FAIL")
+                extra = ""
+                if rec.get("ok") and "roofline" in rec:
+                    r = rec["roofline"]
+                    extra = (f" dom={r['dominant']}"
+                             f" tc={r['t_compute_s']:.3g} tm={r['t_memory_s']:.3g}"
+                             f" tx={r['t_collective_s']:.3g}"
+                             f" fits={rec['fits_hbm']}"
+                             f" mb={rec.get('microbatches')}"
+                             f" z1={rec.get('zero1')}"
+                             f" compile={rec.get('compile_s')}s")
+                print(f"[{status}] {tag}{extra}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Dry-run + roofline for the DISTRIBUTED MIS-2 itself on the production
+mesh — the paper-representative §Perf cell.
+
+Lowers the shard_map fixpoint for a Laplace3D-100^3-scale graph on the
+16x16 (and 2x16x16) mesh from ShapeDtypeStructs, and compares the two
+collective schedules:
+
+* ``two_gather``    — gather T then gather M (the direct port);
+* ``single_gather`` — gather T once, recompute M locally (beyond-paper).
+
+    PYTHONPATH=src python -m repro.launch.graph_dryrun [--multi-pod]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# ruff: noqa: E402
+import argparse
+import functools
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.dist import _mis2_local_fixpoint
+from repro.launch.hlo_analysis import analyze as hlo_analyze
+from repro.launch.mesh import make_production_mesh
+from repro.launch.dryrun import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16
+
+
+def lower_variant(v: int, d: int, mesh, single_gather: bool,
+                  max_iters: int = 16):
+    nd = int(np.prod(list(mesh.shape.values())))
+    axis = mesh.axis_names
+    # flatten all mesh axes into one logical partition axis via nested spec
+    flat = tuple(mesh.axis_names)
+    spec_rows = P(flat)
+    vp = ((v + nd - 1) // nd) * nd
+    nbrs_spec = jax.ShapeDtypeStruct((vp, d), jnp.int32)
+    act_spec = jax.ShapeDtypeStruct((vp,), jnp.bool_)
+
+    if single_gather:
+        def fn_core(nbrs, act, nbrs_g):
+            return _mis2_local_fixpoint(
+                nbrs, act, axis=flat, total_v=vp, priority="xorshift_star",
+                max_iters=max_iters, single_gather=True,
+                neighbors_global=nbrs_g)
+        in_specs = (spec_rows, spec_rows, P())
+        args = (nbrs_spec, act_spec, nbrs_spec)
+    else:
+        fn_core = functools.partial(
+            _mis2_local_fixpoint, axis=flat, total_v=vp,
+            priority="xorshift_star", max_iters=max_iters)
+        in_specs = (spec_rows, spec_rows)
+        args = (nbrs_spec, act_spec)
+
+    fn = jax.shard_map(fn_core, mesh=mesh, in_specs=in_specs,
+                       out_specs=(spec_rows, P(flat[0])))
+    with mesh:
+        lowered = jax.jit(fn).lower(*[
+            jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                 sharding=NamedSharding(mesh, s))
+            for a, s in zip(args, in_specs)])
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+    hc = hlo_analyze(compiled.as_text(), nd)
+    mem = compiled.memory_analysis()
+    wire = sum(c["wire_bytes"] for c in hc["collectives"].values())
+    rec = {
+        "variant": "single_gather" if single_gather else "two_gather",
+        "V": v, "D": d, "mesh": "x".join(str(s) for s in mesh.shape.values()),
+        "num_devices": nd, "max_iters": max_iters,
+        "compile_s": round(compile_s, 2),
+        "hlo_flops": hc["flops"], "hlo_bytes": hc["bytes"],
+        "collectives": hc["collectives"],
+        "wire_bytes_per_device": wire,
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "roofline": {
+            "t_compute_s": hc["flops"] / PEAK_FLOPS_BF16,
+            "t_memory_s": hc["bytes"] / HBM_BW,
+            "t_collective_s": wire / ICI_LINK_BW,
+        },
+    }
+    r = rec["roofline"]
+    rec["roofline"]["dominant"] = max(r, key=lambda k: r[k])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--v", type=int, default=1_000_000)
+    ap.add_argument("--d", type=int, default=7)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mesh", default=None,
+                    help="custom mesh shape AxB (scaling curves)")
+    ap.add_argument("--out", default="artifacts/dryrun_graph")
+    args = ap.parse_args()
+
+    if args.mesh:
+        import jax as _jax
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        names = ("data", "model")[:len(dims)] if len(dims) == 2 else \
+            ("pod", "data", "model")[:len(dims)]
+        mesh = _jax.make_mesh(dims, names)
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    for single in (False, True):
+        rec = lower_variant(args.v, args.d, mesh, single)
+        tag = f"mis2_{rec['variant']}__{rec['mesh']}"
+        (out / f"{tag}.json").write_text(json.dumps(rec, indent=2))
+        r = rec["roofline"]
+        print(f"[ok] {tag}: wire/dev={rec['wire_bytes_per_device']/1e6:.1f}MB "
+              f"tc={r['t_compute_s']:.3g} tm={r['t_memory_s']:.3g} "
+              f"tx={r['t_collective_s']:.3g} dom={r['dominant']} "
+              f"compile={rec['compile_s']}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,254 @@
+"""While-aware HLO cost analysis (the dry-run profiler).
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, but a scanned
+48-layer model executes it 48 times — so XLA's flat numbers undercount
+FLOPs, bytes and in-loop collectives by ~L x.  This module parses the
+post-optimization HLO text, builds the computation call graph, reads each
+loop's ``known_trip_count`` from ``backend_config`` (fallback: the loop
+condition's comparison constant), and returns trip-scaled totals:
+
+* ``flops``        — 2 * prod(result dims) * prod(contracting dims) per dot
+                     (includes dots inside fusions), x trip counts;
+* ``bytes``        — operand + result bytes per instruction (zero-cost ops
+                     excluded), x trip counts — the same model XLA's
+                     "bytes accessed" uses, but loop-aware;
+* ``collectives``  — per-class counts / result bytes / ring wire-byte
+                     estimates, x trip counts.
+
+This is the profile the §Perf hillclimbing loop reads (together with
+``memory_analysis``), since no real TPU timing exists on this host.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from functools import lru_cache
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+ZERO_COST_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "after-all", "iota", "reshape", "broadcast",
+                 "partition-id", "replica-id"}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{")
+_INSTR = re.compile(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^()]*\)|\S+)\s+([\w\-]+)\(")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS = re.compile(
+    r"replica_groups=(\{\{[^}]*\}[^}]*\}|\[[0-9,]+\]<=\[[0-9,]+\])")
+
+
+def _parse_shapes(type_str):
+    """List of (dtype, dims) in a (possibly tuple) type string."""
+    out = []
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",")] if dims else []
+        out.append((dt, d))
+    return out
+
+
+def _shape_bytes(type_str) -> int:
+    total = 0
+    for dt, dims in _parse_shapes(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS.search(line)
+    if not m:
+        return default
+    g = m.group(1)
+    if g.startswith("{{"):
+        first = g[2:].split("}")[0]
+        return max(1, first.count(",") + 1)
+    dims = g[1:g.index("]")].split(",")
+    return int(dims[1]) if len(dims) == 2 else default
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)   # raw lines
+    shapes: dict = field(default_factory=dict)   # instr name -> type str
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: dict = field(default_factory=dict)
+
+    def scaled(self, k: float) -> "HloCost":
+        return HloCost(
+            self.flops * k, self.bytes * k,
+            {op: {kk: vv * k for kk, vv in rec.items()}
+             for op, rec in self.collectives.items()})
+
+    def add(self, other: "HloCost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for op, rec in other.collectives.items():
+            mine = self.collectives.setdefault(
+                op, {"count": 0, "result_bytes": 0, "wire_bytes": 0.0})
+            for kk, vv in rec.items():
+                mine[kk] += vv
+
+    def as_dict(self):
+        return {"flops": self.flops, "bytes": self.bytes,
+                "collectives": self.collectives}
+
+
+def parse_computations(hlo_text: str):
+    comps = {}
+    cur = None
+    entry = None
+    for line in hlo_text.splitlines():
+        if not line.startswith(" ") and "{" in line and "->" in line:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if m:
+            name, type_str, _op = m.groups()
+            cur.instrs.append(line)
+            cur.shapes[name] = type_str
+    return comps, entry
+
+
+def _instr_parts(line):
+    m = _INSTR.match(line)
+    return m.groups() if m else (None, None, None)
+
+
+def analyze(hlo_text: str, num_devices: int) -> dict:
+    comps, entry = parse_computations(hlo_text)
+    memo: dict[str, HloCost] = {}
+
+    def dot_flops(comp: Computation, line: str, type_str: str) -> float:
+        res = _parse_shapes(type_str)
+        out_elems = 1
+        for _, dims in res[:1]:
+            for d in dims:
+                out_elems *= d
+        cm = _CONTRACT.search(line)
+        contract = 1
+        if cm:
+            cdims = [int(x) for x in cm.group(1).split(",") if x != ""]
+            # lhs operand shape: first operand after the opcode
+            body = line[line.index("dot(") + 4:]
+            ops = _OPERAND.findall(body.split(", metadata")[0])
+            if ops:
+                lhs_type = comp.shapes.get(ops[0])
+                if lhs_type:
+                    shp = _parse_shapes(lhs_type)
+                    if shp:
+                        dims = shp[0][1]
+                        for c in cdims:
+                            if c < len(dims):
+                                contract *= dims[c]
+        return 2.0 * out_elems * contract
+
+    def cost_of(comp_name: str) -> HloCost:
+        if comp_name in memo:
+            return memo[comp_name]
+        comp = comps.get(comp_name)
+        total = HloCost()
+        memo[comp_name] = total          # guard (no true recursion in HLO)
+        if comp is None:
+            return total
+        for line in comp.instrs:
+            name, type_str, op = _instr_parts(line)
+            if op is None:
+                continue
+            if op == "while":
+                tm = _TRIP.search(line)
+                trip = int(tm.group(1)) if tm else _cond_trip(line, comps)
+                called = _CALLS.findall(line)
+                for c in called:
+                    total.add(cost_of(c).scaled(trip))
+                # while's own tuple shuffling ~ free
+                continue
+            if op in ("fusion", "call", "map", "reduce", "reduce-window",
+                      "scatter", "sort", "select-and-scatter",
+                      "conditional"):
+                # count any dots inside called computations (flops only)
+                for c in _CALLS.findall(line):
+                    total.flops += cost_of(c).flops
+            if op in COLLECTIVES or (op.endswith("-start") and
+                                     op[:-6] in COLLECTIVES):
+                base = op[:-6] if op.endswith("-start") else op
+                size = _shape_bytes(type_str)
+                n = _group_size(line, num_devices)
+                if base == "all-reduce":
+                    wire = 2 * size * (n - 1) / max(1, n)
+                elif base == "all-gather":
+                    wire = size * (n - 1) / max(1, n)
+                elif base == "reduce-scatter":
+                    wire = size * (n - 1)
+                elif base == "all-to-all":
+                    wire = size * (n - 1) / max(1, n)
+                else:
+                    wire = size
+                rec = total.collectives.setdefault(
+                    base, {"count": 0, "result_bytes": 0, "wire_bytes": 0.0})
+                rec["count"] += 1
+                rec["result_bytes"] += size
+                rec["wire_bytes"] += wire
+            if op == "dot":
+                total.flops += dot_flops(comp, line, type_str)
+            if op in ZERO_COST_OPS:
+                continue
+            # bytes: result + operands
+            b = _shape_bytes(type_str)
+            body = line.split(", metadata")[0]
+            paren = body.find(op + "(")
+            if paren >= 0:
+                args = body[paren + len(op) + 1:]
+                for oname in _OPERAND.findall(args):
+                    ts = comp.shapes.get(oname)
+                    if ts:
+                        b += _shape_bytes(ts)
+            total.bytes += b
+        return total
+
+    def _cond_trip(line, comps) -> int:
+        m = re.search(r"condition=%?([\w.\-]+)", line)
+        if not m:
+            return 1
+        cond = comps.get(m.group(1))
+        if cond is None:
+            return 1
+        best = 1
+        for li in cond.instrs:
+            cm = re.search(r"constant\((\d+)\)", li)
+            if cm:
+                best = max(best, int(cm.group(1)))
+        return best
+
+    result = cost_of(entry)
+    return result.as_dict()

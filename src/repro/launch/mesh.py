@@ -1,0 +1,30 @@
+"""Production mesh construction (single pod 16x16 / multi-pod 2x16x16).
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before any jax
+device query).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_dev_mesh(data: int | None = None, model: int = 1):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    devs = np.array(jax.devices())
+    n = len(devs)
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Axes that shard the batch (DP): ('pod','data') or ('data',)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,134 @@
+"""Logical-axis -> mesh-axis sharding rules (GSPMD / pjit).
+
+Every model exposes ``param_axes()``: a tree congruent with its params whose
+leaves are tuples of logical axis names.  The rules below map logical axes
+to mesh axes; ``None`` replicates.  GSPMD tolerates non-divisible dims by
+padding (e.g. 60 experts over 16 — noted per-cell in the roofline).
+
+Rule sets are the primary §Perf hillclimbing lever — variants are defined
+here so a dry-run cell can be lowered under each candidate and compared.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# baseline rules: Megatron-style TP on 'model', DP on ('pod','data')
+def default_rules(mesh: Mesh) -> Dict[str, Any]:
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return {
+        "batch": dp,            # activations / inputs
+        "vocab": "model",
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "mlp2": None,           # second axis of square RG-LRU gate mats
+        "mlp_heads": "model",   # SSM heads (di = heads x headdim)
+        "expert": "model",
+        "expert_mlp": None,     # per-expert hidden dim (EP shards 'expert')
+        "layers": None,
+        "seq": None,
+        "seq_sp": "model",      # Megatron-SP: residual stream + saved
+                                # activations sharded over 'model' between
+                                # TP regions (AG on entry, RS on exit)
+        "cache_seq": None,      # decode cells may remap to 'model'
+    }
+
+
+# §Perf variant for long-context decode: shard sequence/state over 'data'
+def seq_sharded_rules(mesh: Mesh) -> Dict[str, Any]:
+    r = default_rules(mesh)
+    r["seq"] = "data"
+    r["batch"] = tuple(a for a in ("pod",) if a in mesh.axis_names) or None
+    return r
+
+
+RULE_SETS = {
+    "default": default_rules,
+    "seq_sharded": seq_sharded_rules,
+}
+
+
+def spec_from_axes(axes, rules, shard_free_axis_over: Optional[str] = None,
+                   shape: Optional[tuple] = None,
+                   mesh: Optional[Mesh] = None) -> P:
+    parts = []
+    for ax in axes:
+        m = rules.get(ax) if ax is not None else None
+        parts.append(m)
+    if shard_free_axis_over is not None:
+        width = mesh.shape[shard_free_axis_over] if mesh is not None else 1
+        for i, p in enumerate(parts):
+            if p is None and (shape is None or
+                              shape[i] % max(1, width) == 0):
+                parts[i] = shard_free_axis_over
+                break
+    return P(*parts)
+
+
+def tree_shardings(mesh: Mesh, axes_tree, rules,
+                   shard_free_axis_over: Optional[str] = None,
+                   shapes_tree=None) -> Any:
+    """NamedSharding tree congruent with a param/cache tree.
+
+    ``shard_free_axis_over='data'`` additionally shards each leaf's first
+    *evenly divisible* unsharded dim over the data axis — ZeRO/FSDP-style
+    sharding (argument shardings must divide evenly, so ``shapes_tree``
+    provides dims to check; without it any free dim is taken).
+    """
+    if shapes_tree is None:
+        def leaf(axes):
+            if not isinstance(axes, tuple):
+                raise TypeError(f"axes leaf must be tuple, got {axes!r}")
+            return NamedSharding(
+                mesh, spec_from_axes(axes, rules, shard_free_axis_over,
+                                     mesh=mesh))
+        return jax.tree.map(leaf, axes_tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    def leaf2(axes, spec):
+        return NamedSharding(
+            mesh, spec_from_axes(axes, rules, shard_free_axis_over,
+                                 shape=tuple(spec.shape), mesh=mesh))
+    return jax.tree.map(leaf2, axes_tree, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_sharding(mesh: Mesh, rules, ndim: int = 2,
+                   microbatched: bool = False) -> NamedSharding:
+    """Input batch [B, S, ...] (or [k, B, S, ...] when microbatched):
+    B over DP axes, rest per rules['seq']."""
+    parts = [rules["batch"]] + [rules.get("seq")] + [None] * max(0, ndim - 2)
+    if microbatched:
+        parts = [None] + parts
+    return NamedSharding(mesh, P(*parts[:ndim]))
+
+
+def scalar_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def opt_state_shardings(mesh: Mesh, param_shardings, *, axes_tree=None,
+                        rules=None, zero1: bool = False,
+                        shapes_tree=None) -> Dict[str, Any]:
+    """AdamW state: m/v shard like params; step replicated.
+
+    ``zero1=True``: m/v additionally shard their first free evenly-dividing
+    dim over 'data' (ZeRO-1) — requires axes_tree + rules (+ shapes_tree
+    for divisibility checks).
+    """
+    mv = param_shardings
+    if zero1:
+        assert axes_tree is not None and rules is not None
+        mv = tree_shardings(mesh, axes_tree, rules,
+                            shard_free_axis_over="data",
+                            shapes_tree=shapes_tree)
+    return {
+        "m": mv,
+        "v": mv,
+        "step": scalar_sharding(mesh),
+    }

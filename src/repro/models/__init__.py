@@ -1,0 +1,28 @@
+from .config import (
+    LM_SHAPES,
+    ModelConfig,
+    ShapeCell,
+    cell_applicable,
+)
+from .griffin import GriffinLM
+from .mamba2 import Mamba2LM
+from .transformer import TransformerLM
+from .whisper import WhisperModel
+
+
+def get_model(cfg: ModelConfig):
+    """Model registry keyed by family."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        return TransformerLM(cfg)
+    if cfg.family == "ssm":
+        return Mamba2LM(cfg)
+    if cfg.family == "hybrid":
+        return GriffinLM(cfg)
+    if cfg.family in ("encdec", "audio"):
+        return WhisperModel(cfg)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+__all__ = ["LM_SHAPES", "ModelConfig", "ShapeCell", "cell_applicable",
+           "GriffinLM", "Mamba2LM", "TransformerLM", "WhisperModel",
+           "get_model"]

@@ -1,0 +1,145 @@
+"""Model configuration covering all ten assigned architectures.
+
+Every architecture is a ``ModelConfig``; family-specific fields are unused
+elsewhere.  ``src/repro/configs/<arch>.py`` builds the exact assigned
+configs; reduced smoke variants come from ``reduced()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+
+def pad_to(x: int, multiple: int) -> int:
+    return ((x + multiple - 1) // multiple) * multiple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec
+    num_layers: int
+    d_model: int
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    d_ff: int = 0
+    vocab_size: int = 32000
+    head_dim: int = 0                # 0 -> d_model // num_heads
+
+    # --- MoE ---
+    num_experts: int = 0
+    num_experts_per_token: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0                # per-expert hidden dim
+    moe_capacity_factor: float = 1.25
+    norm_topk_prob: bool = True
+
+    # --- SSM (mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    ssm_conv_width: int = 4
+    ssm_groups: int = 1
+
+    # --- hybrid (recurrentgemma / griffin) ---
+    block_pattern: tuple = ()        # e.g. ("rglru", "rglru", "local")
+    local_window: int = 2048
+    d_rnn: int = 0                   # RG-LRU width (0 -> d_model)
+    rglru_c: float = 8.0
+
+    # --- encoder-decoder (whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 1500          # whisper 30s @ 50 Hz after conv stub
+
+    # --- common ---
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    vocab_pad_multiple: int = 256
+    tie_embeddings: bool = False
+    act_dtype: str = "bfloat16"
+    remat: str = "layer"             # none | layer | dots
+    attention_block_q: int = 512     # flash attention tiles
+    attention_block_kv: int = 1024
+    notes: str = ""
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded so TP sharding over 16|32 ways divides evenly."""
+        return pad_to(self.vocab_size, self.vocab_pad_multiple)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(1, self.num_heads)
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    @property
+    def rnn_width(self) -> int:
+        return self.d_rnn or self.d_model
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """Tiny same-family variant for CPU smoke tests."""
+        base = dict(
+            num_layers=min(self.num_layers, 2),
+            d_model=128,
+            num_heads=4 if self.num_heads else 0,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads else 0,
+            d_ff=256 if self.d_ff else 0,
+            vocab_size=512,
+            vocab_pad_multiple=64,
+            head_dim=32 if self.num_heads else 0,
+            encoder_layers=min(self.encoder_layers, 2),
+            encoder_seq=16 if self.encoder_layers else self.encoder_seq,
+            local_window=32 if self.block_pattern else self.local_window,
+            d_rnn=128 if self.d_rnn else 0,
+            ssm_state=32 if self.ssm_state else 0,
+            ssm_head_dim=32 if self.ssm_state else 64,
+            ssm_chunk=8 if self.ssm_state else 256,
+            num_experts=min(self.num_experts, 4),
+            num_experts_per_token=min(self.num_experts_per_token, 2),
+            num_shared_experts=min(self.num_shared_experts, 1),
+            moe_d_ff=64 if self.moe_d_ff else 0,
+            attention_block_q=16,
+            attention_block_kv=32,
+            name=self.name + "-reduced",
+        )
+        base.update(overrides)
+        return dataclasses.replace(self, **base)
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    """One (architecture x input-shape) dry-run cell."""
+    shape_name: str       # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str             # train | prefill | decode
+
+
+LM_SHAPES = (
+    ShapeCell("train_4k", 4_096, 256, "train"),
+    ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    ShapeCell("decode_32k", 32_768, 128, "decode"),
+    ShapeCell("long_500k", 524_288, 1, "decode"),
+)
+
+# families that can hold 500k tokens of state (sub-quadratic decode);
+# pure full-attention archs skip long_500k (DESIGN.md §6)
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def cell_applicable(cfg: ModelConfig, cell: ShapeCell) -> tuple[bool, str]:
+    if cell.shape_name == "long_500k" and cfg.family not in SUBQUADRATIC_FAMILIES:
+        return False, ("full-attention KV cache at 512k tokens/seq is "
+                       "unservable; skipped per assignment (sub-quadratic "
+                       "archs only)")
+    return True, ""

@@ -1,0 +1,410 @@
+"""RecurrentGemma / Griffin hybrid [arXiv:2402.19427].
+
+Block pattern (RG-LRU, RG-LRU, local attention) with an MLP after every
+temporal block.  To keep ``lax.scan`` over depth with *static* heterogeneous
+structure (no ``cond`` branches polluting HLO cost analysis), layers are
+scanned in groups of three; ``num_layers % 3`` trailing recurrent layers are
+a separately-scanned tail (26 = 8 groups + 2 tail for the assigned config).
+
+RG-LRU: r_t = sigmoid(W_a x), i_t = sigmoid(W_x x),
+        log a_t = -c * r_t * softplus(-Lambda)   (a = sigmoid(Lambda)^{c r})
+        h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+computed with ``jax.lax.associative_scan`` (log-depth — this is what makes
+the 512k-token cell trainable-shaped) and a 1-step recurrence for decode.
+Local attention uses a *ring-buffer* KV cache of size ``local_window`` so the
+long_500k decode cell carries O(window) state, not O(S).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import (
+    constrain,
+    embed_lookup,
+    decode_attention,
+    dense_init,
+    embed_init,
+    flash_attention,
+    rms_norm,
+    rope,
+)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def _rglru_scan(x, r, i, lam, c: float, h0=None):
+    """x,r,i [b,s,w]; lam [w]; returns y [b,s,w], h_final [b,w]."""
+    log_a = (-c) * r.astype(jnp.float32) * jax.nn.softplus(-lam)
+    a = jnp.exp(log_a)
+    gated = (i.astype(jnp.float32) * x.astype(jnp.float32)) * \
+        jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    if h0 is not None:
+        # fold the incoming state into the first element
+        first = a[:, 0] * h0.astype(jnp.float32) + gated[:, 0]
+        gated = gated.at[:, 0].set(first)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def _rglru_step(x, r, i, lam, c: float, h):
+    log_a = (-c) * r.astype(jnp.float32) * jax.nn.softplus(-lam)
+    a = jnp.exp(log_a)
+    h_new = a * h.astype(jnp.float32) + \
+        jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * \
+        (i.astype(jnp.float32) * x.astype(jnp.float32))
+    return h_new.astype(x.dtype), h_new
+
+
+def _causal_conv(x, w, state=None):
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, j:j + x.shape[1]] * w[j].astype(x.dtype) for j in range(k))
+    return y, xp[:, -(k - 1):]
+
+
+class GriffinLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.groups = cfg.num_layers // 3
+        self.tail = cfg.num_layers % 3          # trailing recurrent layers
+
+    # ------------------------------------------------------------------ init
+    def _rec_params(self, key, stack: int):
+        cfg = self.cfg
+        d, w = cfg.d_model, cfg.rnn_width
+        ks = jax.random.split(key, 6)
+        return {
+            "norm": jnp.ones((stack, d), jnp.float32),
+            "proj_x": dense_init(ks[0], (stack, d, w), in_axis=1),
+            "proj_gate": dense_init(ks[1], (stack, d, w), in_axis=1),
+            "conv_w": dense_init(ks[2], (stack, 4, w), in_axis=1) * 0.5,
+            "wa": dense_init(ks[3], (stack, w, w), in_axis=1),
+            "wx": dense_init(ks[4], (stack, w, w), in_axis=1),
+            "lam": jnp.full((stack, w), 2.0, jnp.float32),
+            "proj_out": dense_init(ks[5], (stack, w, d), in_axis=1),
+        }
+
+    def _attn_params(self, key, stack: int):
+        cfg = self.cfg
+        d, dh = cfg.d_model, cfg.resolved_head_dim
+        ks = jax.random.split(key, 4)
+        return {
+            "norm": jnp.ones((stack, d), jnp.float32),
+            "wq": dense_init(ks[0], (stack, d, cfg.num_heads * dh), in_axis=1),
+            "wk": dense_init(ks[1], (stack, d, cfg.num_kv_heads * dh), in_axis=1),
+            "wv": dense_init(ks[2], (stack, d, cfg.num_kv_heads * dh), in_axis=1),
+            "wo": dense_init(ks[3], (stack, cfg.num_heads * dh, d), in_axis=1),
+        }
+
+    def _mlp_params(self, key, stack: int):
+        cfg = self.cfg
+        d, f = cfg.d_model, cfg.d_ff
+        ks = jax.random.split(key, 3)
+        return {
+            "norm": jnp.ones((stack, d), jnp.float32),
+            "w_gate": dense_init(ks[0], (stack, d, f), in_axis=1),
+            "w_up": dense_init(ks[1], (stack, d, f), in_axis=1),
+            "w_down": dense_init(ks[2], (stack, f, d), in_axis=1),
+        }
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        keys = jax.random.split(key, 12)
+        g = self.groups
+        params = {
+            "embed": embed_init(keys[0], (cfg.padded_vocab, cfg.d_model)),
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "lm_head": dense_init(keys[1], (cfg.d_model, cfg.padded_vocab)),
+            "groups": {
+                "rec1": self._rec_params(keys[2], g),
+                "mlp1": self._mlp_params(keys[3], g),
+                "rec2": self._rec_params(keys[4], g),
+                "mlp2": self._mlp_params(keys[5], g),
+                "attn": self._attn_params(keys[6], g),
+                "mlp3": self._mlp_params(keys[7], g),
+            },
+        }
+        if self.tail:
+            params["tail"] = {
+                "rec": self._rec_params(keys[8], self.tail),
+                "mlp": self._mlp_params(keys[9], self.tail),
+            }
+        return params
+
+    def param_axes(self) -> Params:
+        rec = {"norm": ("layers", "embed"),
+               "proj_x": ("layers", "embed", "mlp"),
+               "proj_gate": ("layers", "embed", "mlp"),
+               "conv_w": ("layers", None, "mlp"),
+               "wa": ("layers", "mlp", "mlp2"),
+               "wx": ("layers", "mlp", "mlp2"),
+               "lam": ("layers", "mlp"),
+               "proj_out": ("layers", "mlp", "embed")}
+        attn = {"norm": ("layers", "embed"),
+                "wq": ("layers", "embed", "heads"),
+                "wk": ("layers", "embed", "kv_heads"),
+                "wv": ("layers", "embed", "kv_heads"),
+                "wo": ("layers", "heads", "embed")}
+        mlp = {"norm": ("layers", "embed"),
+               "w_gate": ("layers", "embed", "mlp"),
+               "w_up": ("layers", "embed", "mlp"),
+               "w_down": ("layers", "mlp", "embed")}
+        axes = {
+            "embed": ("vocab", "embed"),
+            "final_norm": ("embed",),
+            "lm_head": ("embed", "vocab"),
+            "groups": {"rec1": rec, "mlp1": mlp, "rec2": dict(rec),
+                       "mlp2": dict(mlp), "attn": attn, "mlp3": dict(mlp)},
+        }
+        if self.tail:
+            axes["tail"] = {"rec": dict(rec), "mlp": dict(mlp)}
+        return axes
+
+    # ---------------------------------------------------------------- blocks
+    def _rec_block(self, lp, x, conv_state=None, h_state=None,
+                   single_step=False):
+        cfg = self.cfg
+        h = rms_norm(x, lp["norm"], cfg.norm_eps)
+        main = constrain(
+            jnp.einsum("bsd,dw->bsw", h, lp["proj_x"].astype(h.dtype)),
+            ("batch", None, "mlp"))
+        gate = jax.nn.gelu(constrain(
+            jnp.einsum("bsd,dw->bsw", h, lp["proj_gate"].astype(h.dtype)),
+            ("batch", None, "mlp")))
+        main, new_conv = _causal_conv(main, lp["conv_w"], conv_state)
+        r = jax.nn.sigmoid(
+            jnp.einsum("bsw,wu->bsu", main, lp["wa"].astype(main.dtype)))
+        i = jax.nn.sigmoid(
+            jnp.einsum("bsw,wu->bsu", main, lp["wx"].astype(main.dtype)))
+        if single_step:
+            y1, new_h = _rglru_step(main[:, 0], r[:, 0], i[:, 0], lp["lam"],
+                                    cfg.rglru_c, h_state)
+            y = y1[:, None]
+        else:
+            y, new_h = _rglru_scan(main, r, i, lp["lam"], cfg.rglru_c, h_state)
+        y = y * gate
+        out = jnp.einsum("bsw,wd->bsd", y, lp["proj_out"].astype(y.dtype))
+        return x + out, new_conv, new_h
+
+    def _mlp_block(self, lp, x):
+        cfg = self.cfg
+        h = rms_norm(x, lp["norm"], cfg.norm_eps)
+        g = jax.nn.gelu(
+            jnp.einsum("bsd,df->bsf", h, lp["w_gate"].astype(h.dtype)))
+        u = jnp.einsum("bsd,df->bsf", h, lp["w_up"].astype(h.dtype))
+        return x + jnp.einsum("bsf,fd->bsd", g * u,
+                              lp["w_down"].astype(h.dtype))
+
+    def _attn_block(self, lp, x, positions):
+        cfg = self.cfg
+        dh = cfg.resolved_head_dim
+        b, s, _ = x.shape
+        h = rms_norm(x, lp["norm"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dh->bsh", h, lp["wq"].astype(h.dtype))
+        k = jnp.einsum("bsd,dh->bsh", h, lp["wk"].astype(h.dtype))
+        v = jnp.einsum("bsd,dh->bsh", h, lp["wv"].astype(h.dtype))
+        q = constrain(q.reshape(b, s, cfg.num_heads, dh),
+                      ("batch", None, "heads", None))
+        k = constrain(k.reshape(b, s, cfg.num_kv_heads, dh),
+                      ("batch", None, "kv_heads", None))
+        v = constrain(v.reshape(b, s, cfg.num_kv_heads, dh),
+                      ("batch", None, "kv_heads", None))
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        g = cfg.num_heads // cfg.num_kv_heads
+        kr, vr = k, v
+        if g > 1:
+            kr = constrain(jnp.repeat(k, g, axis=2),
+                           ("batch", None, "heads", None))
+            vr = constrain(jnp.repeat(v, g, axis=2),
+                           ("batch", None, "heads", None))
+        attn = flash_attention(q, kr, vr, cfg.num_heads, causal=True,
+                               window=cfg.local_window,
+                               block_q=cfg.attention_block_q,
+                               block_kv=cfg.attention_block_kv)
+        attn = attn.reshape(b, s, cfg.num_heads * dh)
+        return x + jnp.einsum("bsh,hd->bsd", attn, lp["wo"].astype(h.dtype)), \
+            (k, v)
+
+    # --------------------------------------------------------------- forward
+    def forward(self, params: Params, tokens):
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = embed_lookup(params["embed"], tokens)
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+        def group_fn(x, gp):
+            x, _, _ = self._rec_block(gp["rec1"], x)
+            x = self._mlp_block(gp["mlp1"], x)
+            x, _, _ = self._rec_block(gp["rec2"], x)
+            x = self._mlp_block(gp["mlp2"], x)
+            x, _ = self._attn_block(gp["attn"], x, positions)
+            x = self._mlp_block(gp["mlp3"], x)
+            return x, None
+
+        fn = group_fn
+        if cfg.remat == "layer":
+            fn = jax.checkpoint(group_fn,
+                                policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(fn, x, params["groups"])
+        if self.tail:
+            def tail_fn(x, tp):
+                x, _, _ = self._rec_block(tp["rec"], x)
+                x = self._mlp_block(tp["mlp"], x)
+                return x, None
+            x, _ = jax.lax.scan(tail_fn, x, params["tail"])
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+        return logits, jnp.zeros((), jnp.float32)
+
+    # --------------------------------------------------------------- serving
+    def init_cache(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        w = cfg.rnn_width
+        dh = cfg.resolved_head_dim
+        win = min(cfg.local_window, max_seq)
+        g, t = self.groups, self.tail
+        cache = {
+            "g_conv": jnp.zeros((g, 2, batch, 3, w), jnp.bfloat16),
+            "g_h": jnp.zeros((g, 2, batch, w), jnp.float32),
+            "g_k": jnp.zeros((g, batch, win, cfg.num_kv_heads, dh), jnp.bfloat16),
+            "g_v": jnp.zeros((g, batch, win, cfg.num_kv_heads, dh), jnp.bfloat16),
+            "length": jnp.zeros((), jnp.int32),
+        }  # ring window is small (2048): kv replication is cheap
+        if t:
+            cache["t_conv"] = jnp.zeros((t, batch, 3, w), jnp.bfloat16)
+            cache["t_h"] = jnp.zeros((t, batch, w), jnp.float32)
+        return cache
+
+    def cache_axes(self):
+        axes = {"g_conv": (None, None, "batch", None, "mlp"),
+                "g_h": (None, None, "batch", "mlp"),
+                "g_k": (None, "batch", "cache_seq", "kv_heads", None),
+                "g_v": (None, "batch", "cache_seq", "kv_heads", None),
+                "length": ()}
+        if self.tail:
+            axes["t_conv"] = (None, "batch", None, "mlp")
+            axes["t_h"] = (None, "batch", "mlp")
+        return axes
+
+    def prefill(self, params: Params, tokens, max_seq: int):
+        cfg = self.cfg
+        b, s = tokens.shape
+        win = min(cfg.local_window, max_seq)
+        x = embed_lookup(params["embed"], tokens)
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+        def group_fn(x, gp):
+            x, c1, h1 = self._rec_block(gp["rec1"], x)
+            x = self._mlp_block(gp["mlp1"], x)
+            x, c2, h2 = self._rec_block(gp["rec2"], x)
+            x = self._mlp_block(gp["mlp2"], x)
+            x, (k, v) = self._attn_block(gp["attn"], x, positions)
+            x = self._mlp_block(gp["mlp3"], x)
+            # ring-buffer the last `win` keys at slot pos % win
+            kpad = jnp.zeros((b, win, cfg.num_kv_heads,
+                              cfg.resolved_head_dim), jnp.bfloat16)
+            vpad = jnp.zeros_like(kpad)
+            take = min(win, s)
+            src = jnp.arange(s - take, s)
+            slots = src % win
+            kpad = kpad.at[:, slots].set(k[:, src].astype(jnp.bfloat16))
+            vpad = vpad.at[:, slots].set(v[:, src].astype(jnp.bfloat16))
+            conv = jnp.stack([c1, c2]).astype(jnp.bfloat16)
+            hst = jnp.stack([h1.astype(jnp.float32), h2.astype(jnp.float32)])
+            return x, (conv, hst, kpad, vpad)
+
+        x, (convs, hs, ks, vs) = jax.lax.scan(group_fn, x, params["groups"])
+        cache = {"g_conv": convs, "g_h": hs, "g_k": ks, "g_v": vs,
+                 "length": jnp.asarray(s, jnp.int32)}
+        if self.tail:
+            def tail_fn(x, tp):
+                x, c, h = self._rec_block(tp["rec"], x)
+                x = self._mlp_block(tp["mlp"], x)
+                return x, (c.astype(jnp.bfloat16), h.astype(jnp.float32))
+            x, (tc, th) = jax.lax.scan(tail_fn, x, params["tail"])
+            cache["t_conv"], cache["t_h"] = tc, th
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", x[:, -1],
+                            params["lm_head"].astype(x.dtype))
+        return logits, cache
+
+    def decode_step(self, params: Params, cache, tokens):
+        cfg = self.cfg
+        dh = cfg.resolved_head_dim
+        b = tokens.shape[0]
+        pos = cache["length"]
+        win = cache["g_k"].shape[2]
+        x = embed_lookup(params["embed"], tokens)
+        positions = jnp.full((b, 1), pos, jnp.int32)
+
+        def group_fn(x, xs):
+            gp, conv, hst, kc, vc = xs
+            x, c1, h1 = self._rec_block(gp["rec1"], x, conv[0].astype(x.dtype),
+                                        hst[0], single_step=True)
+            x = self._mlp_block(gp["mlp1"], x)
+            x, c2, h2 = self._rec_block(gp["rec2"], x, conv[1].astype(x.dtype),
+                                        hst[1], single_step=True)
+            x = self._mlp_block(gp["mlp2"], x)
+            # ring-buffer attention
+            h = rms_norm(x, gp["attn"]["norm"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dh->bsh", h, gp["attn"]["wq"].astype(h.dtype))
+            k = jnp.einsum("bsd,dh->bsh", h, gp["attn"]["wk"].astype(h.dtype))
+            v = jnp.einsum("bsd,dh->bsh", h, gp["attn"]["wv"].astype(h.dtype))
+            q = rope(q.reshape(b, 1, cfg.num_heads, dh), positions,
+                     cfg.rope_theta)
+            k = rope(k.reshape(b, 1, cfg.num_kv_heads, dh), positions,
+                     cfg.rope_theta)
+            v = v.reshape(b, 1, cfg.num_kv_heads, dh)
+            slot = pos % win
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                kc, k.astype(jnp.bfloat16), slot, 1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                vc, v.astype(jnp.bfloat16), slot, 1)
+            valid = jnp.minimum(pos + 1, win)
+            attn = decode_attention(q, kc, vc, valid, cfg.num_kv_heads)
+            attn = attn.reshape(b, 1, cfg.num_heads * dh)
+            x = x + jnp.einsum("bsh,hd->bsd", attn,
+                               gp["attn"]["wo"].astype(h.dtype))
+            x = self._mlp_block(gp["mlp3"], x)
+            conv = jnp.stack([c1, c2]).astype(jnp.bfloat16)
+            hst = jnp.stack([h1.astype(jnp.float32), h2.astype(jnp.float32)])
+            return x, (conv, hst, kc, vc)
+
+        x, (convs, hs, ks, vs) = jax.lax.scan(
+            group_fn, x,
+            (params["groups"], cache["g_conv"], cache["g_h"], cache["g_k"],
+             cache["g_v"]))
+        new_cache = {"g_conv": convs, "g_h": hs, "g_k": ks, "g_v": vs,
+                     "length": pos + 1}
+        if self.tail:
+            def tail_fn(x, xs):
+                tp, conv, h = xs
+                x, c, hn = self._rec_block(tp["rec"], x, conv.astype(x.dtype),
+                                           h, single_step=True)
+                x = self._mlp_block(tp["mlp"], x)
+                return x, (c.astype(jnp.bfloat16), hn.astype(jnp.float32))
+            x, (tc, th) = jax.lax.scan(
+                tail_fn, x, (params["tail"], cache["t_conv"], cache["t_h"]))
+            new_cache["t_conv"], new_cache["t_h"] = tc, th
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", x[:, -1],
+                            params["lm_head"].astype(x.dtype))
+        return logits, new_cache

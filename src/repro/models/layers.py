@@ -1,0 +1,401 @@
+"""Shared model layers: RMSNorm, RoPE, flash attention (pure-JAX online
+softmax), GQA without KV materialization, SwiGLU FFN, dropless MoE with
+sort-based dispatch, initializers.
+
+Conventions:
+* activations ``[B, S, d]``; attention heads ``[B, S, H, dh]``.
+* params are plain dicts of jnp arrays; per-layer weights carry a leading
+  ``L`` axis and are consumed by ``lax.scan`` (compile-time critical).
+* compute dtype bf16, accumulation/loss fp32, params fp32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# activation-sharding context (set by the launcher; no-op in plain tests)
+#
+# Models are mesh-agnostic: they annotate activations with *logical* axes
+# ("batch", "heads", "kv_heads", "expert", "cache_seq", ...); the launcher
+# installs (mesh, rules) and `constrain` turns annotations into
+# with_sharding_constraint.  This is what keeps GSPMD from inventing
+# pathological reshard patterns around head reshapes (DESIGN.md §7).
+# ---------------------------------------------------------------------------
+
+_SHARDING_CTX: Optional[tuple] = None
+
+
+def set_sharding_context(mesh, rules) -> None:
+    global _SHARDING_CTX
+    _SHARDING_CTX = (mesh, rules) if mesh is not None else None
+
+
+def clear_sharding_context() -> None:
+    set_sharding_context(None, None)
+
+
+def constrain(x, axes: tuple):
+    """Annotate activation x with logical axes; no-op without context."""
+    if _SHARDING_CTX is None:
+        return x
+    mesh, rules = _SHARDING_CTX
+    from jax.sharding import NamedSharding, PartitionSpec
+    parts = []
+    for ax in axes:
+        m = rules.get(ax) if ax is not None else None
+        parts.append(m)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*parts)))
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis: int = 0):
+    fan_in = shape[in_axis]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32) * std)
+
+
+def embed_init(key, shape):
+    return jax.random.normal(key, shape, jnp.float32) * 0.02
+
+
+def embed_lookup(embed, tokens, dtype=jnp.bfloat16):
+    """Embedding lookup that shards over a TP'd vocab axis.
+
+    Under a sharding context the gather becomes a one-hot matmul (the
+    MaxText trick): both forward and the backward *scatter-add* lower to
+    dots partitioned over the vocab axis — a plain gather's backward
+    otherwise materializes an unsharded f32 [V, d] grad buffer.
+    """
+    if _SHARDING_CTX is None:
+        return embed[tokens].astype(dtype)
+    v = embed.shape[0]
+    one_hot = jax.nn.one_hot(tokens, v, dtype=dtype)
+    return jnp.einsum("...v,vd->...d", one_hot, embed.astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# norms / positional
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * weight).astype(dt)
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding. x [..., S, H, dh], positions [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freq     # [..., S, half]
+    cos = jnp.cos(angles)[..., :, None, :]                           # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k):
+    """q [B,Sq,KV,G,dh] x k [B,Sk,KV,dh] -> [B,KV,G,Sq,Sk] (no KV repeat)."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def naive_attention(q, k, v, num_kv_heads: int, *, causal: bool = True,
+                    window: int = 0, q_offset=0):
+    """Reference attention (tests + decode single-step)."""
+    b, sq, h, dh = q.shape
+    kv = num_kv_heads
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, dh)
+    scores = _gqa_scores(qg, k) / np.sqrt(dh)                 # [B,KV,G,Sq,Sk]
+    sk = k.shape[1]
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, h, dh)
+
+
+def _visited_blocks(qi, bq, nq, nkv, bkv, sk, causal, window):
+    """Static list of KV block indices block qi must visit."""
+    lo = 0
+    hi = nkv - 1
+    if causal:
+        hi = min(hi, ((qi + 1) * bq - 1) // bkv)
+    if window:
+        lo = max(lo, (qi * bq - window) // bkv)
+    return list(range(lo, hi + 1))
+
+
+def _block_mask(q_start, k_start, bq, bkv, sq, sk, causal, window):
+    qpos = q_start + jnp.arange(bq)[:, None]
+    kpos = k_start + jnp.arange(bkv)[None, :]
+    mask = (kpos < sk) & (qpos < sq)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    return mask
+
+
+def _flash_fwd(q, k, v, num_kv_heads, causal, window, block_q, block_kv):
+    """Returns out [b,sq,h,dh] and lse [b,kv,g,sq] (for the custom VJP)."""
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    kv = num_kv_heads
+    g = h // kv
+    bq = min(block_q, sq)
+    bkv = min(block_kv, sk)
+    nq = (sq + bq - 1) // bq
+    nkv = (sk + bkv - 1) // bkv
+    scale = 1.0 / np.sqrt(dh)
+    qp = jnp.pad(q, ((0, 0), (0, nq * bq - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nkv * bkv - sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nkv * bkv - sk), (0, 0), (0, 0)))
+    outs, lses = [], []
+    for qi in range(nq):                       # static unroll over Q blocks
+        q_blk = qp[:, qi * bq:(qi + 1) * bq].reshape(b, bq, kv, g, dh)
+        acc = jnp.zeros((b, kv, g, bq, dh), jnp.float32)
+        m_run = jnp.full((b, kv, g, bq), NEG_INF, jnp.float32)
+        l_run = jnp.zeros((b, kv, g, bq), jnp.float32)
+        for kj in _visited_blocks(qi, bq, nq, nkv, bkv, sk, causal, window):
+            k_blk = kp[:, kj * bkv:(kj + 1) * bkv]
+            v_blk = vp[:, kj * bkv:(kj + 1) * bkv]
+            s = _gqa_scores(q_blk, k_blk) * scale      # [b,kv,g,bq,bkv] f32
+            mask = _block_mask(qi * bq, kj * bkv, bq, bkv, sq, sk,
+                               causal, window)
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_run = l_run * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v_blk.dtype), v_blk)
+            acc = acc * corr[..., None] + pv.astype(jnp.float32)
+            m_run = m_new
+        out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+        lse = jnp.where(l_run > 0, m_run + jnp.log(jnp.maximum(l_run, 1e-30)),
+                        0.0)
+        outs.append(jnp.moveaxis(out, 3, 1).reshape(b, bq, h, dh))
+        lses.append(lse)
+    out = jnp.concatenate(outs, axis=1)[:, :sq].astype(q.dtype)
+    lse = jnp.concatenate(lses, axis=3)                # [b,kv,g,nq*bq]
+    return out, lse
+
+
+def _flash_bwd(q, k, v, out, lse, dout, num_kv_heads, causal, window,
+               block_q, block_kv):
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    kv = num_kv_heads
+    g = h // kv
+    bq = min(block_q, sq)
+    bkv = min(block_kv, sk)
+    nq = (sq + bq - 1) // bq
+    nkv = (sk + bkv - 1) // bkv
+    scale = 1.0 / np.sqrt(dh)
+    qp = jnp.pad(q, ((0, 0), (0, nq * bq - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nkv * bkv - sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nkv * bkv - sk), (0, 0), (0, 0)))
+    dop = jnp.pad(dout, ((0, 0), (0, nq * bq - sq), (0, 0), (0, 0)))
+    op = jnp.pad(out, ((0, 0), (0, nq * bq - sq), (0, 0), (0, 0)))
+    dq = jnp.zeros_like(qp, dtype=jnp.float32)
+    dk = jnp.zeros_like(kp, dtype=jnp.float32)
+    dv = jnp.zeros_like(vp, dtype=jnp.float32)
+    # D_i = rowsum(dO * O) per head
+    d_all = jnp.sum(dop.astype(jnp.float32) * op.astype(jnp.float32), axis=-1)
+    d_all = jnp.moveaxis(d_all.reshape(b, nq * bq, kv, g), 1, 3)  # [b,kv,g,S]
+    for qi in range(nq):
+        q_blk = qp[:, qi * bq:(qi + 1) * bq].reshape(b, bq, kv, g, dh)
+        do_blk = dop[:, qi * bq:(qi + 1) * bq].reshape(b, bq, kv, g, dh)
+        do_blk = jnp.moveaxis(do_blk, 1, 3)            # [b,kv,g,bq,dh]
+        lse_blk = lse[:, :, :, qi * bq:(qi + 1) * bq]
+        d_blk = d_all[:, :, :, qi * bq:(qi + 1) * bq]
+        dq_acc = jnp.zeros((b, kv, g, bq, dh), jnp.float32)
+        for kj in _visited_blocks(qi, bq, nq, nkv, bkv, sk, causal, window):
+            k_blk = kp[:, kj * bkv:(kj + 1) * bkv]
+            v_blk = vp[:, kj * bkv:(kj + 1) * bkv]
+            s = _gqa_scores(q_blk, k_blk) * scale
+            mask = _block_mask(qi * bq, kj * bkv, bq, bkv, sq, sk,
+                               causal, window)
+            s = jnp.where(mask, s, NEG_INF)
+            p = jnp.exp(s - lse_blk[..., None])        # [b,kv,g,bq,bkv]
+            dv_b = jnp.einsum("bkgqs,bkgqd->bskd", p,
+                              do_blk.astype(jnp.float32))
+            dp = jnp.einsum("bkgqd,bskd->bkgqs",
+                            do_blk.astype(jnp.float32),
+                            v_blk.astype(jnp.float32))
+            ds = p * (dp - d_blk[..., None])
+            dq_acc = dq_acc + jnp.einsum(
+                "bkgqs,bskd->bkgqd", ds, k_blk.astype(jnp.float32)) * scale
+            dk_b = jnp.einsum("bkgqs,bqkgd->bskd", ds,
+                              jnp.moveaxis(q_blk, (1, 2, 3), (1, 2, 3))
+                              .astype(jnp.float32)) * scale
+            dk = dk.at[:, kj * bkv:(kj + 1) * bkv].add(dk_b)
+            dv = dv.at[:, kj * bkv:(kj + 1) * bkv].add(dv_b)
+        dq_blk = jnp.moveaxis(dq_acc, 3, 1).reshape(b, bq, h, dh)
+        dq = dq.at[:, qi * bq:(qi + 1) * bq].set(dq_blk)
+    return (dq[:, :sq].astype(q.dtype), dk[:, :sk].astype(k.dtype),
+            dv[:, :sk].astype(v.dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, num_kv_heads: int, causal: bool = True,
+                    window: int = 0, block_q: int = 512,
+                    block_kv: int = 1024):
+    """IO-aware blocked attention with an explicit (flash) VJP.
+
+    Forward streams KV blocks with online softmax (O(bq*bkv) live memory);
+    backward recomputes per-block probabilities from the saved logsumexp —
+    the FlashAttention recipe, in pure JAX.  Q-block loop is a *static*
+    unroll so causal/windowed block skipping costs nothing at trace time
+    and the HLO contains only the visited lower-triangle blocks (honest
+    cost_analysis, no cond both-branch inflation).
+    """
+    out, _ = _flash_fwd(q, k, v, num_kv_heads, causal, window,
+                        block_q, block_kv)
+    return out
+
+
+def _fa_fwd(q, k, v, num_kv_heads, causal, window, block_q, block_kv):
+    out, lse = _flash_fwd(q, k, v, num_kv_heads, causal, window,
+                          block_q, block_kv)
+    return out, (q, k, v, out, lse)
+
+
+def _fa_bwd(num_kv_heads, causal, window, block_q, block_kv, res, dout):
+    q, k, v, out, lse = res
+    dq, dk, dv = _flash_bwd(q, k, v, out, lse, dout, num_kv_heads, causal,
+                            window, block_q, block_kv)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# keep the old name importable for tests that compare against the reference
+flash_attention_reference_path = naive_attention
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, num_kv_heads: int):
+    """Single-position attention against a cache (q [B,1,H,dh])."""
+    b, _, h, dh = q.shape
+    kv = num_kv_heads
+    g = h // kv
+    qg = q.reshape(b, 1, kv, g, dh)
+    s = _gqa_scores(qg, k_cache) / np.sqrt(dh)        # [B,KV,G,1,S]
+    pos = jnp.arange(k_cache.shape[1])
+    s = jnp.where(pos[None, None, None, None, :] < cache_len, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache)
+    return out.reshape(b, 1, h, dh)
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU FFN: down( silu(gate(x)) * up(x) )."""
+    g = jnp.einsum("bsd,df->bsf", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, w_up.astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u,
+                      w_down.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MoE: dropless-ish sort-based dispatch (capacity-bounded, deterministic)
+# ---------------------------------------------------------------------------
+
+class MoEMetrics(NamedTuple):
+    aux_loss: jnp.ndarray      # load-balance loss (Switch-style)
+    dropped_frac: jnp.ndarray
+
+
+def moe_ffn(x, router_w, w_gate, w_up, w_down, *, num_experts: int, top_k: int,
+            capacity_factor: float = 1.25, norm_topk: bool = True):
+    """Token-choice top-k MoE with GROUPED sort-based dispatch.
+
+    x [B,S,d]; router_w [d,E]; expert weights [E,d,f]/[E,f,d].
+
+    Dispatch (sort / cumsum / scatter) runs independently per batch row
+    (= per DP shard), so under pjit every dispatch op is device-local and
+    the only cross-device movement is the expert all-to-all on the
+    ("batch", "expert") constrained buffers.  A global-token dispatch
+    formulation replicates the E*C buffer on every device — measured 11 TB
+    of per-step all-reduce on granite-moe before this change (EXPERIMENTS.md
+    §Perf iteration moe-1).  FLOPs scale with *active* experts.
+    """
+    b, s, d = x.shape
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, top_k)                    # [B,S,k]
+    if norm_topk:
+        topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+    capacity = int(np.ceil(s * top_k / num_experts * capacity_factor))
+
+    def dispatch_row(xt, ti, tv):
+        """xt [S,d]; ti/tv [S,k] -> buf [E*C,d], (dest, src_token, w, keep)."""
+        flat_e = ti.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(s), top_k)
+        flat_w = tv.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+        counts = jnp.bincount(flat_e, length=num_experts)
+        seg_off = jnp.cumsum(counts) - counts
+        pos = jnp.arange(s * top_k) - seg_off[se]
+        keep = pos < capacity
+        dest = jnp.where(keep, se * capacity + pos, num_experts * capacity)
+        buf = jnp.zeros((num_experts * capacity, d), xt.dtype)
+        buf = buf.at[dest].set(xt[st], mode="drop")
+        return buf, dest, st, sw, keep
+
+    bufs, dest, st, sw, keep = jax.vmap(dispatch_row)(x, topi, topv)
+    ein = constrain(bufs.reshape(b, num_experts, capacity, d),
+                    ("batch", "expert", None, None))
+    g = jnp.einsum("becd,edf->becf", ein, w_gate.astype(x.dtype))
+    u = jnp.einsum("becd,edf->becf", ein, w_up.astype(x.dtype))
+    eout = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u,
+                      w_down.astype(x.dtype))
+    eout = constrain(eout, ("batch", "expert", None, None))
+    eflat = eout.reshape(b, num_experts * capacity, d)
+
+    def combine_row(erow, dest_r, st_r, sw_r, keep_r):
+        contrib = erow[jnp.clip(dest_r, 0, num_experts * capacity - 1)]
+        contrib = contrib * (sw_r * keep_r)[:, None].astype(erow.dtype)
+        return jnp.zeros((s, d), erow.dtype).at[st_r].add(contrib)
+
+    y = jax.vmap(combine_row)(eflat, dest, st, sw, keep)
+
+    # Switch-style load balance loss
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(topi[..., 0], num_experts), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = num_experts * jnp.sum(frac_tokens * frac_probs)
+    dropped = 1.0 - jnp.sum(keep) / (b * s * top_k)
+    return y, MoEMetrics(aux, dropped)

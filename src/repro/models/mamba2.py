@@ -1,0 +1,315 @@
+"""Mamba-2 (SSD — state-space duality) language model [arXiv:2405.21060].
+
+Chunked SSD forward: within a chunk the recurrence is computed in its dual
+quadratic-attention form (L x L decay-masked scores), across chunks a linear
+recurrence carries the [heads, headdim, state] SSM state — the standard
+work-optimal formulation.  Decode is the O(1)-per-token recurrence, which is
+why this arch (and Griffin) carry the ``long_500k`` cell the full-attention
+archs must skip.
+
+Layer: in_proj -> (z gate | xBC | dt), causal conv1d(width 4) on xBC, SSD,
+gated RMSNorm, out_proj.  Scanned over layers like the transformer.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import constrain, dense_init, embed_init, embed_lookup, rms_norm
+
+Params = Dict[str, Any]
+
+
+def _ssd_chunked(x, dt, a_log, bmat, cmat, chunk: int, h_init=None):
+    """Chunked SSD.
+
+    x [b,s,h,p]; dt [b,s,h] (>0); a_log [h] (A = -exp(a_log));
+    bmat/cmat [b,s,g,n]; returns y [b,s,h,p], h_final [b,h,p,n]
+    (h_init likewise; zero if None).
+    """
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    hpg = h // g
+    l = min(chunk, s)
+    pad = (-s) % l
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc = sp // l
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                     # [h] < 0
+    xg = x.reshape(b, nc, l, g, hpg, p)
+    dtg = dt.reshape(b, nc, l, g, hpg).astype(jnp.float32)
+    bg = bmat.reshape(b, nc, l, g, n)
+    cg = cmat.reshape(b, nc, l, g, n)
+    la = dtg * a.reshape(g, hpg)                                # log a_t
+    lc = jnp.cumsum(la, axis=2)                                 # inclusive
+
+    # intra-chunk (dual quadratic form)
+    scores = jnp.einsum("bctgn,bcsgn->bcgts", cg, bg,
+                        preferred_element_type=jnp.float32)     # [b,nc,g,L,L]
+    decay = lc[:, :, :, None, :, :] - lc[:, :, None, :, :, :]   # [b,nc,t,s,g,hpg]
+    tril = (jnp.arange(l)[:, None] >= jnp.arange(l)[None, :])
+    w = jnp.where(tril[None, None, :, :, None, None],
+                  jnp.exp(decay), 0.0)
+    w = w * dtg[:, :, None, :, :, :]                            # dt_s factor
+    w = w * jnp.transpose(scores, (0, 1, 3, 4, 2))[..., None]   # bcgts->bcts g, bcast hpg
+    y_intra = jnp.einsum("btsgh,bsghp->btghp",
+                         w.reshape(b * nc, l, l, g, hpg),
+                         xg.reshape(b * nc, l, g, hpg, p))
+    y_intra = y_intra.reshape(b, nc, l, g, hpg, p)
+
+    # chunk-final states
+    sdecay = jnp.exp(lc[:, :, -1:, :, :] - lc) * dtg            # [b,nc,L,g,hpg]
+    s_chunk = jnp.einsum("bclgn,bclgh,bclghp->bcghpn",
+                         bg, sdecay, xg.astype(jnp.float32))
+
+    # inter-chunk recurrence
+    cdecay = jnp.exp(lc[:, :, -1, :, :])                        # [b,nc,g,hpg]
+    h0 = jnp.zeros((b, g, hpg, p, n), jnp.float32) if h_init is None \
+        else h_init.reshape(b, g, hpg, p, n).astype(jnp.float32)
+
+    def step(hprev, inp):
+        dcy, s_c = inp
+        h_new = dcy[..., None, None] * hprev + s_c
+        return h_new, hprev
+
+    (h_fin, h_ins) = jax.lax.scan(
+        step, h0, (jnp.moveaxis(cdecay, 1, 0), jnp.moveaxis(s_chunk, 1, 0)))
+    h_in = jnp.moveaxis(h_ins, 0, 1)                            # state entering c
+
+    y_inter = jnp.einsum("bclgn,bclgh,bcghpn->bclghp",
+                         cg, jnp.exp(lc), h_in)
+    y = (y_intra + y_inter).reshape(b, sp, h, p)[:, :s]
+    return y.astype(x.dtype), h_fin.reshape(b, h, p, n)
+
+
+def _ssd_step(xt, dtt, a_log, bt, ct, h):
+    """Single-token recurrence. xt [b,h,p], dtt [b,h], bt/ct [b,g,n],
+    h [b,h,p,n]."""
+    b, hh, p = xt.shape
+    g = bt.shape[1]
+    hpg = hh // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dtt = dtt.astype(jnp.float32)
+    decay = jnp.exp(dtt * a)                                   # [b,h]
+    bx = jnp.einsum("bghp,bgn,bgh->bghpn",
+                    xt.astype(jnp.float32).reshape(b, g, hpg, p),
+                    bt.astype(jnp.float32),
+                    dtt.reshape(b, g, hpg)).reshape(b, hh, p, -1)
+    h_new = decay[..., None, None] * h + bx
+    y = jnp.einsum("bghpn,bgn->bghp",
+                   h_new.reshape(b, g, hpg, p, -1), ct).reshape(b, hh, p)
+    return y.astype(xt.dtype), h_new
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv1d. x [b,s,c], w [k,c]; state [b,k-1,c] or None.
+    Returns y [b,s,c], new state [b,k-1,c]."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(k))
+    return y, xp[:, -(k - 1):] if k > 1 else state
+
+
+class Mamba2LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def _dims(self):
+        cfg = self.cfg
+        di = cfg.ssm_d_inner
+        nh = cfg.ssm_heads
+        g, n = cfg.ssm_groups, cfg.ssm_state
+        return di, nh, g, n
+
+    def init(self, key) -> Params:
+        """Projections are SEPARATE weights (wz/wx/wb/wc/wdt) rather than
+        one fused in_proj: slicing a TP-sharded fused output at offsets
+        that cross shard boundaries makes GSPMD reshard every layer —
+        split projections shard cleanly (z/x on 'mlp'; the small B/C/dt
+        heads replicated).  Depthwise conv splits the same way."""
+        cfg = self.cfg
+        l, d, vp = cfg.num_layers, cfg.d_model, cfg.padded_vocab
+        di, nh, g, n = self._dims()
+        k = cfg.ssm_conv_width
+        keys = jax.random.split(key, 12)
+        layers = {
+            "norm": jnp.ones((l, d), jnp.float32),
+            "wz": dense_init(keys[0], (l, d, di), in_axis=1),
+            "wx": dense_init(keys[1], (l, d, di), in_axis=1),
+            "wb": dense_init(keys[2], (l, d, g * n), in_axis=1),
+            "wc": dense_init(keys[3], (l, d, g * n), in_axis=1),
+            "wdt": dense_init(keys[4], (l, d, nh), in_axis=1),
+            "conv_x": dense_init(keys[5], (l, k, di), in_axis=1) * 0.5,
+            "conv_b": dense_init(keys[6], (l, k, g * n), in_axis=1) * 0.5,
+            "conv_c": dense_init(keys[7], (l, k, g * n), in_axis=1) * 0.5,
+            "dt_bias": jnp.zeros((l, nh), jnp.float32),
+            "a_log": jnp.zeros((l, nh), jnp.float32),
+            "d_skip": jnp.ones((l, nh), jnp.float32),
+            "out_norm": jnp.ones((l, di), jnp.float32),
+            "out_proj": dense_init(keys[8], (l, di, d), in_axis=1),
+        }
+        return {
+            "embed": embed_init(keys[9], (vp, d)),
+            "final_norm": jnp.ones((d,), jnp.float32),
+            "lm_head": dense_init(keys[10], (d, vp)),
+            "layers": layers,
+        }
+
+    def param_axes(self) -> Params:
+        return {
+            "embed": ("vocab", "embed"),
+            "final_norm": ("embed",),
+            "lm_head": ("embed", "vocab"),
+            "layers": {
+                "norm": ("layers", "embed"),
+                "wz": ("layers", "embed", "mlp"),
+                "wx": ("layers", "embed", "mlp"),
+                "wb": ("layers", "embed", None),
+                "wc": ("layers", "embed", None),
+                "wdt": ("layers", "embed", None),
+                "conv_x": ("layers", None, "mlp"),
+                "conv_b": ("layers", None, None),
+                "conv_c": ("layers", None, None),
+                "dt_bias": ("layers", None),
+                "a_log": ("layers", None),
+                "d_skip": ("layers", None),
+                "out_norm": ("layers", "mlp"),
+                "out_proj": ("layers", "mlp", "embed"),
+            },
+        }
+
+    def _layer_core(self, lp, x, conv_state=None, ssm_state=None,
+                    single_step=False):
+        cfg = self.cfg
+        di, nh, g, n = self._dims()
+        p = cfg.ssm_head_dim
+        bsz = x.shape[0]
+        h = rms_norm(x, lp["norm"], cfg.norm_eps)
+        z = constrain(jnp.einsum("bsd,do->bso", h, lp["wz"].astype(h.dtype)),
+                      ("batch", None, "mlp"))
+        xs = constrain(jnp.einsum("bsd,do->bso", h, lp["wx"].astype(h.dtype)),
+                       ("batch", None, "mlp"))
+        braw = jnp.einsum("bsd,do->bso", h, lp["wb"].astype(h.dtype))
+        craw = jnp.einsum("bsd,do->bso", h, lp["wc"].astype(h.dtype))
+        dt = jnp.einsum("bsd,do->bso", h, lp["wdt"].astype(h.dtype))
+        cs_x = conv_state[0] if conv_state is not None else None
+        cs_b = conv_state[1] if conv_state is not None else None
+        cs_c = conv_state[2] if conv_state is not None else None
+        xs, nc_x = _causal_conv(xs, lp["conv_x"], cs_x)
+        braw, nc_b = _causal_conv(braw, lp["conv_b"], cs_b)
+        craw, nc_c = _causal_conv(craw, lp["conv_c"], cs_c)
+        new_conv = (nc_x, nc_b, nc_c)
+        xs = jax.nn.silu(xs)
+        bmat = jax.nn.silu(braw).reshape(*braw.shape[:-1], g, n)
+        cmat = jax.nn.silu(craw).reshape(*craw.shape[:-1], g, n)
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+        if single_step:
+            xt = xs[:, 0].reshape(bsz, nh, p)
+            y, new_ssm = _ssd_step(xt, dt[:, 0], lp["a_log"],
+                                   bmat[:, 0], cmat[:, 0], ssm_state)
+            y = y + lp["d_skip"].astype(jnp.float32)[None, :, None] * \
+                xt.astype(jnp.float32)
+            y = y.reshape(bsz, 1, di).astype(x.dtype)
+        else:
+            s = xs.shape[1]
+            xh = xs.reshape(bsz, s, nh, p)
+            y, new_ssm = _ssd_chunked(xh, dt, lp["a_log"], bmat, cmat,
+                                      cfg.ssm_chunk, ssm_state)
+            y = y + (lp["d_skip"][None, None, :, None] *
+                     xh.astype(jnp.float32)).astype(y.dtype)
+            y = y.reshape(bsz, s, di)
+        y = y * jax.nn.silu(z)
+        y = rms_norm(y, lp["out_norm"], cfg.norm_eps)
+        out = jnp.einsum("bso,od->bsd", y, lp["out_proj"].astype(y.dtype))
+        return x + out, new_conv, new_ssm
+
+    def forward(self, params: Params, tokens):
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], tokens)
+        layer = self._layer_core
+        if cfg.remat == "layer":
+            layer = jax.checkpoint(
+                layer, policy=jax.checkpoint_policies.nothing_saveable)
+
+        def body(carry, lp):
+            y, _, _ = layer(lp, carry)
+            return y, None
+
+        x, _ = jax.lax.scan(lambda c, lp: body(c, lp), x, params["layers"])
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+        return logits, jnp.zeros((), jnp.float32)
+
+    # --------------------------------------------------------------- serving
+    def init_cache(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        di, nh, g, n = self._dims()
+        p = cfg.ssm_head_dim
+        l = cfg.num_layers
+        k = cfg.ssm_conv_width
+        return {
+            "conv_x": jnp.zeros((l, batch, k - 1, di), jnp.bfloat16),
+            "conv_b": jnp.zeros((l, batch, k - 1, g * n), jnp.bfloat16),
+            "conv_c": jnp.zeros((l, batch, k - 1, g * n), jnp.bfloat16),
+            "ssm": jnp.zeros((l, batch, nh, p, n), jnp.float32),
+            "length": jnp.zeros((), jnp.int32),
+        }
+
+    def cache_axes(self):
+        return {"conv_x": (None, "batch", None, "mlp"),
+                "conv_b": (None, "batch", None, None),
+                "conv_c": (None, "batch", None, None),
+                "ssm": (None, "batch", "mlp_heads", None, None),
+                "length": ()}
+
+    def prefill(self, params: Params, tokens, max_seq: int):
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], tokens)
+
+        def body(carry, lp):
+            y, conv, ssm = self._layer_core(lp, carry)
+            return y, (conv[0].astype(jnp.bfloat16),
+                       conv[1].astype(jnp.bfloat16),
+                       conv[2].astype(jnp.bfloat16), ssm)
+
+        x, (cx, cb, cc, ssms) = jax.lax.scan(body, x, params["layers"])
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", x[:, -1],
+                            params["lm_head"].astype(x.dtype))
+        cache = {"conv_x": cx, "conv_b": cb, "conv_c": cc, "ssm": ssms,
+                 "length": jnp.asarray(tokens.shape[1], jnp.int32)}
+        return logits, cache
+
+    def decode_step(self, params: Params, cache, tokens):
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], tokens)      # [B,1,d]
+
+        def body(carry, xs):
+            lp, cx, cb, cc, ssm = xs
+            y, new_conv, new_ssm = self._layer_core(
+                lp, carry,
+                (cx.astype(carry.dtype), cb.astype(carry.dtype),
+                 cc.astype(carry.dtype)), ssm, single_step=True)
+            return y, (new_conv[0].astype(jnp.bfloat16),
+                       new_conv[1].astype(jnp.bfloat16),
+                       new_conv[2].astype(jnp.bfloat16), new_ssm)
+
+        x, (cx, cb, cc, ssms) = jax.lax.scan(
+            body, x, (params["layers"], cache["conv_x"], cache["conv_b"],
+                      cache["conv_c"], cache["ssm"]))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", x[:, -1],
+                            params["lm_head"].astype(x.dtype))
+        return logits, {"conv_x": cx, "conv_b": cb, "conv_c": cc,
+                        "ssm": ssms, "length": cache["length"] + 1}

@@ -1,0 +1,329 @@
+"""Decoder-only transformer LM covering the dense, MoE and VLM-token
+architectures (smollm x2, llama3.2-3b, granite-8b, chameleon-34b,
+granite-moe, qwen2-moe).
+
+* layers are stacked along a leading L axis and consumed by ``lax.scan``
+  (one trace regardless of depth — compile-time critical for the 512-device
+  dry-run on this 1-core host);
+* attention = pure-JAX flash attention (layers.py), GQA without KV repeat;
+* MoE FFN = sort-based capacity-bounded dispatch (active-FLOPs faithful);
+* KV-cache prefill/decode paths for the serving shapes.
+
+Param logical axes (for pjit sharding) come from ``param_axes()`` — a tree
+congruent with ``init()``'s output.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import (
+    constrain,
+    embed_lookup,
+    decode_attention,
+    dense_init,
+    embed_init,
+    flash_attention,
+    moe_ffn,
+    rms_norm,
+    rope,
+    swiglu,
+)
+
+Params = Dict[str, Any]
+
+
+class TransformerLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        dh = cfg.resolved_head_dim
+        l = cfg.num_layers
+        keys = jax.random.split(key, 16)
+        d, f, vp = cfg.d_model, cfg.d_ff, cfg.padded_vocab
+
+        def stack(k, shape):
+            return dense_init(k, (l,) + shape, in_axis=1)
+
+        layers = {
+            "attn_norm": jnp.ones((l, d), jnp.float32),
+            "wq": stack(keys[0], (d, cfg.num_heads * dh)),
+            "wk": stack(keys[1], (d, cfg.num_kv_heads * dh)),
+            "wv": stack(keys[2], (d, cfg.num_kv_heads * dh)),
+            "wo": stack(keys[3], (cfg.num_heads * dh, d)),
+            "ffn_norm": jnp.ones((l, d), jnp.float32),
+        }
+        if cfg.num_experts:
+            e, fe = cfg.num_experts, cfg.moe_d_ff
+            layers.update({
+                "router": stack(keys[4], (d, e)),
+                "e_gate": dense_init(keys[5], (l, e, d, fe), in_axis=2),
+                "e_up": dense_init(keys[6], (l, e, d, fe), in_axis=2),
+                "e_down": dense_init(keys[7], (l, e, fe, d), in_axis=2),
+            })
+            if cfg.num_shared_experts:
+                fs = cfg.num_shared_experts * fe
+                layers.update({
+                    "s_gate": stack(keys[8], (d, fs)),
+                    "s_up": stack(keys[9], (d, fs)),
+                    "s_down": stack(keys[10], (fs, d)),
+                })
+        else:
+            layers.update({
+                "w_gate": stack(keys[4], (d, f)),
+                "w_up": stack(keys[5], (d, f)),
+                "w_down": stack(keys[6], (f, d)),
+            })
+        params = {
+            "embed": embed_init(keys[11], (vp, d)),
+            "final_norm": jnp.ones((d,), jnp.float32),
+            "layers": layers,
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(keys[12], (d, vp))
+        return params
+
+    def param_axes(self) -> Params:
+        cfg = self.cfg
+        layers = {
+            "attn_norm": ("layers", "embed"),
+            "wq": ("layers", "embed", "heads"),
+            "wk": ("layers", "embed", "kv_heads"),
+            "wv": ("layers", "embed", "kv_heads"),
+            "wo": ("layers", "heads", "embed"),
+            "ffn_norm": ("layers", "embed"),
+        }
+        if cfg.num_experts:
+            layers.update({
+                "router": ("layers", "embed", None),
+                "e_gate": ("layers", "expert", "embed", "expert_mlp"),
+                "e_up": ("layers", "expert", "embed", "expert_mlp"),
+                "e_down": ("layers", "expert", "expert_mlp", "embed"),
+            })
+            if cfg.num_shared_experts:
+                layers.update({
+                    "s_gate": ("layers", "embed", "mlp"),
+                    "s_up": ("layers", "embed", "mlp"),
+                    "s_down": ("layers", "mlp", "embed"),
+                })
+        else:
+            layers.update({
+                "w_gate": ("layers", "embed", "mlp"),
+                "w_up": ("layers", "embed", "mlp"),
+                "w_down": ("layers", "mlp", "embed"),
+            })
+        axes = {
+            "embed": ("vocab", "embed"),
+            "final_norm": ("embed",),
+            "layers": layers,
+        }
+        if not cfg.tie_embeddings:
+            axes["lm_head"] = ("embed", "vocab")
+        return axes
+
+    # --------------------------------------------------------------- forward
+    def _layer(self, x, lp, positions):
+        cfg = self.cfg
+        dh = cfg.resolved_head_dim
+        b, s, d = x.shape
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dh->bsh", h, lp["wq"].astype(x.dtype))
+        k = jnp.einsum("bsd,dh->bsh", h, lp["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dh->bsh", h, lp["wv"].astype(x.dtype))
+        q = constrain(q.reshape(b, s, cfg.num_heads, dh),
+                      ("batch", None, "heads", None))
+        k = constrain(k.reshape(b, s, cfg.num_kv_heads, dh),
+                      ("batch", None, "kv_heads", None))
+        v = constrain(v.reshape(b, s, cfg.num_kv_heads, dh),
+                      ("batch", None, "kv_heads", None))
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        # Megatron-style: repeat local KV to full heads so q/k/v share one
+        # clean head sharding through the flash blocks (repeat is local)
+        g = cfg.num_heads // cfg.num_kv_heads
+        if g > 1:
+            k = constrain(jnp.repeat(k, g, axis=2),
+                          ("batch", None, "heads", None))
+            v = constrain(jnp.repeat(v, g, axis=2),
+                          ("batch", None, "heads", None))
+        attn = flash_attention(q, k, v, cfg.num_heads, causal=True,
+                               block_q=cfg.attention_block_q,
+                               block_kv=cfg.attention_block_kv)
+        attn = attn.reshape(b, s, cfg.num_heads * dh)
+        x = x + jnp.einsum("bsh,hd->bsd", attn, lp["wo"].astype(x.dtype))
+        x = constrain(x, ("batch", "seq_sp", None))
+
+        h = rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.num_experts:
+            y, metrics = moe_ffn(
+                h, lp["router"], lp["e_gate"], lp["e_up"], lp["e_down"],
+                num_experts=cfg.num_experts,
+                top_k=cfg.num_experts_per_token,
+                capacity_factor=cfg.moe_capacity_factor,
+                norm_topk=cfg.norm_topk_prob)
+            if cfg.num_shared_experts:
+                y = y + swiglu(h, lp["s_gate"], lp["s_up"], lp["s_down"])
+            aux = metrics.aux_loss
+        else:
+            y = swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+        return constrain(x + y, ("batch", "seq_sp", None)), aux
+
+    def forward(self, params: Params, tokens: jnp.ndarray):
+        """tokens [B,S] -> (logits [B,S,Vp] in bf16, aux loss scalar)."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = constrain(embed_lookup(params["embed"], tokens),
+                      ("batch", "seq_sp", None))
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+        layer = self._layer
+        if cfg.remat == "layer":
+            layer = jax.checkpoint(layer,
+                                   policy=jax.checkpoint_policies.nothing_saveable)
+        elif cfg.remat == "dots":
+            layer = jax.checkpoint(
+                layer, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+        def body(carry, lp):
+            y, aux = layer(carry, lp, positions)
+            return y, aux
+
+        x, auxs = jax.lax.scan(body, x, params["layers"])
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+        return logits, jnp.mean(auxs)
+
+    # --------------------------------------------------------------- serving
+    def init_cache(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        dh = cfg.resolved_head_dim
+        shape = (cfg.num_layers, batch, max_seq, cfg.num_kv_heads, dh)
+        return {
+            "k": jnp.zeros(shape, jnp.bfloat16),
+            "v": jnp.zeros(shape, jnp.bfloat16),
+            "length": jnp.zeros((), jnp.int32),
+        }
+
+    def cache_axes(self):
+        return {"k": (None, "batch", "cache_seq", "kv_heads", None),
+                "v": (None, "batch", "cache_seq", "kv_heads", None),
+                "length": ()}
+
+    def prefill(self, params: Params, tokens: jnp.ndarray, max_seq: int):
+        """Full-sequence forward that also emits the KV cache."""
+        cfg = self.cfg
+        dh = cfg.resolved_head_dim
+        b, s = tokens.shape
+        x = constrain(embed_lookup(params["embed"], tokens),
+                      ("batch", "seq_sp", None))
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+        def body(carry, lp):
+            h = rms_norm(carry, lp["attn_norm"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dh->bsh", h, lp["wq"].astype(h.dtype))
+            k = jnp.einsum("bsd,dh->bsh", h, lp["wk"].astype(h.dtype))
+            v = jnp.einsum("bsd,dh->bsh", h, lp["wv"].astype(h.dtype))
+            q = constrain(q.reshape(b, s, cfg.num_heads, dh),
+                          ("batch", None, "heads", None))
+            k = constrain(k.reshape(b, s, cfg.num_kv_heads, dh),
+                          ("batch", None, "kv_heads", None))
+            v = constrain(v.reshape(b, s, cfg.num_kv_heads, dh),
+                          ("batch", None, "kv_heads", None))
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+            g = cfg.num_heads // cfg.num_kv_heads
+            kr, vr = k, v
+            if g > 1:
+                kr = constrain(jnp.repeat(k, g, axis=2),
+                               ("batch", None, "heads", None))
+                vr = constrain(jnp.repeat(v, g, axis=2),
+                               ("batch", None, "heads", None))
+            attn = flash_attention(q, kr, vr, cfg.num_heads, causal=True,
+                                   block_q=cfg.attention_block_q,
+                                   block_kv=cfg.attention_block_kv)
+            attn = attn.reshape(b, s, cfg.num_heads * dh)
+            x2 = carry + jnp.einsum("bsh,hd->bsd", attn, lp["wo"].astype(h.dtype))
+            h2 = rms_norm(x2, lp["ffn_norm"], cfg.norm_eps)
+            if cfg.num_experts:
+                y, _ = moe_ffn(h2, lp["router"], lp["e_gate"], lp["e_up"],
+                               lp["e_down"], num_experts=cfg.num_experts,
+                               top_k=cfg.num_experts_per_token,
+                               capacity_factor=cfg.moe_capacity_factor,
+                               norm_topk=cfg.norm_topk_prob)
+                if cfg.num_shared_experts:
+                    y = y + swiglu(h2, lp["s_gate"], lp["s_up"], lp["s_down"])
+            else:
+                y = swiglu(h2, lp["w_gate"], lp["w_up"], lp["w_down"])
+            kc = jnp.zeros((b, max_seq, cfg.num_kv_heads, dh), jnp.bfloat16)
+            vc = jnp.zeros_like(kc)
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(jnp.bfloat16), 0, 1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(jnp.bfloat16), 0, 1)
+            return constrain(x2 + y, ("batch", "seq_sp", None)), (kc, vc)
+
+        x, (kcs, vcs) = jax.lax.scan(body, x, params["layers"])
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bd,dv->bv", x[:, -1], head.astype(x.dtype))
+        cache = {"k": kcs, "v": vcs, "length": jnp.asarray(s, jnp.int32)}
+        return logits, cache
+
+    def decode_step(self, params: Params, cache, tokens: jnp.ndarray):
+        """One decode step. tokens [B,1]; cache as from init_cache/prefill."""
+        cfg = self.cfg
+        dh = cfg.resolved_head_dim
+        b = tokens.shape[0]
+        pos = cache["length"]
+        x = embed_lookup(params["embed"], tokens)               # [B,1,d]
+        positions = jnp.full((b, 1), pos, jnp.int32)
+
+        def body(carry, xs):
+            lp, kc, vc = xs
+            h = rms_norm(carry, lp["attn_norm"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dh->bsh", h, lp["wq"].astype(h.dtype))
+            k = jnp.einsum("bsd,dh->bsh", h, lp["wk"].astype(h.dtype))
+            v = jnp.einsum("bsd,dh->bsh", h, lp["wv"].astype(h.dtype))
+            q = constrain(q.reshape(b, 1, cfg.num_heads, dh),
+                          ("batch", None, None, None))
+            k = constrain(k.reshape(b, 1, cfg.num_kv_heads, dh),
+                          ("batch", None, "kv_heads", None))
+            v = constrain(v.reshape(b, 1, cfg.num_kv_heads, dh),
+                          ("batch", None, "kv_heads", None))
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                kc, k.astype(jnp.bfloat16), pos, 1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                vc, v.astype(jnp.bfloat16), pos, 1)
+            attn = decode_attention(q, kc, vc, pos + 1, cfg.num_kv_heads)
+            attn = attn.reshape(b, 1, cfg.num_heads * dh)
+            x2 = carry + jnp.einsum("bsh,hd->bsd", attn, lp["wo"].astype(h.dtype))
+            h2 = rms_norm(x2, lp["ffn_norm"], cfg.norm_eps)
+            if cfg.num_experts:
+                y, _ = moe_ffn(h2, lp["router"], lp["e_gate"], lp["e_up"],
+                               lp["e_down"], num_experts=cfg.num_experts,
+                               top_k=cfg.num_experts_per_token,
+                               capacity_factor=max(2.0, cfg.moe_capacity_factor),
+                               norm_topk=cfg.norm_topk_prob)
+                if cfg.num_shared_experts:
+                    y = y + swiglu(h2, lp["s_gate"], lp["s_up"], lp["s_down"])
+            else:
+                y = swiglu(h2, lp["w_gate"], lp["w_up"], lp["w_down"])
+            return x2 + y, (kc, vc)
+
+        x, (kcs, vcs) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                               cache["v"]))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bd,dv->bv", x[:, -1], head.astype(x.dtype))
+        new_cache = {"k": kcs, "v": vcs, "length": pos + 1}
+        return logits, new_cache

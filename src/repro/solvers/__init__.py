@@ -1,0 +1,13 @@
+from .amg import AGGREGATORS, AMGHierarchy, build_hierarchy, v_cycle
+from .krylov import SolveResult, cg, gmres
+from .multicolor_gs import (
+    MulticolorGSPreconditioner,
+    setup_cluster_gs,
+    setup_point_gs,
+)
+
+__all__ = [
+    "AGGREGATORS", "AMGHierarchy", "build_hierarchy", "v_cycle",
+    "SolveResult", "cg", "gmres",
+    "MulticolorGSPreconditioner", "setup_cluster_gs", "setup_point_gs",
+]

@@ -1,0 +1,151 @@
+"""Point and cluster multicolor Gauss-Seidel (paper Alg. 4 + §III-C).
+
+Point multicolor GS [Deveci et al. 2016, the paper's baseline]: color the
+*fine* matrix graph; rows of one color are independent and update in
+parallel; colors sweep sequentially.
+
+Cluster multicolor GS (the paper's contribution): coarsen the graph with
+MIS-2 aggregation (Alg. 2 or 3), color the *coarse* graph, then within one
+coarse color update all clusters in parallel while rows inside a cluster
+update sequentially — locally exact Gauss-Seidel, so fewer Krylov
+iterations than point multicolor GS, and the (expensive) greedy coloring
+runs on the much smaller coarse graph, cutting setup time (Table VI).
+
+Data layout: per color a padded int32 matrix ``rows[c][n_clusters_c,
+max_len_c]`` (sentinel = V, scatter-dropped).  The apply sweeps are a single
+jitted function per direction; sequential depth = sum_c max_len_c, exactly
+the paper's parallelism structure.  Point GS is the cluster structure with
+singleton clusters.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graphs.csr import CSRMatrix, ELLMatrix, csr_to_ell_matrix
+from ..graphs.ops import coarse_graph_from_labels, extract_diagonal
+from ..core.aggregation import aggregate_basic, aggregate_two_phase
+from ..core.coloring import color_graph
+from ..core.mis2 import Mis2Options
+
+
+@dataclass
+class MulticolorGSPreconditioner:
+    ell: ELLMatrix
+    diag: jnp.ndarray
+    color_rows: tuple           # tuple of int32 [n_clusters_c, max_len_c]
+    num_colors: int
+    num_clusters: int
+    setup_seconds: float
+    kind: str                   # 'point' | 'cluster'
+
+    def apply(self, b: jnp.ndarray, sweeps: int = 1,
+              symmetric: bool = True) -> jnp.ndarray:
+        """Approximate A^-1 b by `sweeps` (S)GS sweeps from x0 = 0."""
+        return _apply_sweeps(self.ell.cols, self.ell.vals, self.diag,
+                             self.color_rows, b, sweeps, symmetric)
+
+    def as_precond(self, sweeps: int = 1, symmetric: bool = True) -> Callable:
+        return functools.partial(self.apply, sweeps=sweeps, symmetric=symmetric)
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+def _row_update(cols, vals, diag, x, b, rows):
+    """GS update of `rows` (parallel across rows; rows are independent)."""
+    v = cols.shape[0]
+    safe = jnp.clip(rows, 0, v - 1)
+    a_cols = cols[safe]                         # [R, D]
+    a_vals = vals[safe]
+    ax = jnp.sum(a_vals * x[a_cols], axis=1)    # A_i . x
+    xi = x[safe]
+    new = xi + (b[safe] - ax) / diag[safe]
+    return x.at[rows].set(new, mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("sweeps", "symmetric"))
+def _apply_sweeps(cols, vals, diag, color_rows, b, sweeps: int,
+                  symmetric: bool):
+    x = jnp.zeros_like(b)
+    for _ in range(sweeps):
+        for rows_c in color_rows:               # forward color sweep
+            for s in range(rows_c.shape[1]):    # sequential within cluster
+                x = _row_update(cols, vals, diag, x, b, rows_c[:, s])
+        if symmetric:
+            for rows_c in reversed(color_rows):
+                for s in reversed(range(rows_c.shape[1])):
+                    x = _row_update(cols, vals, diag, x, b, rows_c[:, s])
+    return x
+
+
+# ---------------------------------------------------------------------------
+# setup
+# ---------------------------------------------------------------------------
+
+def _pack_clusters(labels: np.ndarray, cluster_colors: np.ndarray,
+                   num_colors: int, v: int):
+    """Group rows by (color(cluster), cluster) into padded per-color arrays."""
+    order = np.lexsort((np.arange(v), labels))
+    sorted_labels = labels[order]
+    # row lists per cluster (ascending vertex ids — deterministic)
+    starts = np.flatnonzero(np.r_[True, sorted_labels[1:] != sorted_labels[:-1]])
+    ends = np.r_[starts[1:], v]
+    cluster_ids = sorted_labels[starts]
+    color_rows = []
+    for c in range(num_colors):
+        sel = np.flatnonzero(cluster_colors[cluster_ids] == c)
+        if len(sel) == 0:
+            continue
+        lens = ends[sel] - starts[sel]
+        max_len = int(lens.max())
+        mat = np.full((len(sel), max_len), v, dtype=np.int32)
+        for i, s in enumerate(sel):
+            mat[i, : lens[i]] = order[starts[s]:ends[s]]
+        color_rows.append(jnp.asarray(mat))
+    return tuple(color_rows)
+
+
+def setup_cluster_gs(a: CSRMatrix, aggregation: str = "two_phase",
+                     options: Mis2Options = Mis2Options(),
+                     coarsen_levels: int = 1) -> MulticolorGSPreconditioner:
+    import time
+    t0 = time.time()
+    v = a.num_rows
+    agg_fn = {"two_phase": aggregate_two_phase, "basic": aggregate_basic}[aggregation]
+    agg = agg_fn(a.graph, options=options)
+    labels = agg.labels
+    nagg = agg.num_aggregates
+    for _ in range(coarsen_levels - 1):        # optional deeper clustering
+        cg = coarse_graph_from_labels(a.graph, labels, nagg)
+        agg2 = agg_fn(cg, options=options)
+        labels = agg2.labels[labels]
+        nagg = agg2.num_aggregates
+    coarse = coarse_graph_from_labels(a.graph, labels, nagg)
+    coloring = color_graph(coarse)
+    color_rows = _pack_clusters(labels, coloring.colors, coloring.num_colors, v)
+    ell = csr_to_ell_matrix(a)
+    diag = extract_diagonal(a)
+    return MulticolorGSPreconditioner(
+        ell, diag, color_rows, coloring.num_colors, nagg,
+        time.time() - t0, "cluster")
+
+
+def setup_point_gs(a: CSRMatrix) -> MulticolorGSPreconditioner:
+    import time
+    t0 = time.time()
+    v = a.num_rows
+    coloring = color_graph(a.graph)            # colors the FINE graph
+    labels = np.arange(v, dtype=np.int32)      # singleton clusters
+    color_rows = _pack_clusters(labels, coloring.colors, coloring.num_colors, v)
+    ell = csr_to_ell_matrix(a)
+    diag = extract_diagonal(a)
+    return MulticolorGSPreconditioner(
+        ell, diag, color_rows, coloring.num_colors, v,
+        time.time() - t0, "point")

@@ -1,0 +1,12 @@
+from .optimizer import AdamWConfig, adamw_init, adamw_update, schedule
+from .step import (
+    cross_entropy,
+    init_train_state,
+    make_eval_step,
+    make_loss_fn,
+    make_train_step,
+)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "schedule",
+           "cross_entropy", "init_train_state", "make_eval_step",
+           "make_loss_fn", "make_train_step"]

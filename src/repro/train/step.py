@@ -1,0 +1,113 @@
+"""Train / eval step construction for every architecture family.
+
+``make_train_step(model, cfg, opt_cfg)`` returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable for
+``jax.jit`` with in/out shardings — the exact object the multi-pod dry-run
+lowers.
+
+Loss: next-token cross entropy in fp32 over the padded vocab (padded ids
+never occur as labels).  MoE aux (load-balance) loss is added with a small
+coefficient.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+AUX_COEF = 0.01
+
+
+def cross_entropy(logits, labels, mask=None):
+    """logits [B,S,V] (any float), labels int32 [B,S] -> scalar mean CE."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_loss_fn(model, cfg: ModelConfig) -> Callable:
+    if cfg.family in ("encdec", "audio"):
+        def loss_fn(params, batch):
+            logits, aux = model.forward(
+                params, {"frames": batch["frames"], "tokens": batch["tokens"]})
+            loss = cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+            return loss + AUX_COEF * aux, {"ce": loss, "aux": aux}
+    else:
+        def loss_fn(params, batch):
+            logits, aux = model.forward(params, batch["tokens"])
+            loss = cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+            return loss + AUX_COEF * aux, {"ce": loss, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(model, cfg: ModelConfig,
+                    opt_cfg: AdamWConfig = AdamWConfig(),
+                    num_microbatches: int = 1,
+                    grad_shardings=None) -> Callable:
+    """num_microbatches > 1: batch leaves carry a leading microbatch axis
+    [k, B/k, ...]; gradients are accumulated over a ``lax.scan`` so live
+    activation memory is one microbatch's worth (the standard fit-in-HBM
+    lever for the train_4k cells)."""
+    loss_fn = make_loss_fn(model, cfg)
+
+    if num_microbatches == 1:
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            params, opt_state, opt_metrics = adamw_update(
+                params, grads, opt_state, opt_cfg)
+            metrics = dict(metrics, loss=loss, **opt_metrics)
+            return params, opt_state, metrics
+        return train_step
+
+    def _constrain(g):
+        if grad_shardings is None:
+            return g
+        return jax.lax.with_sharding_constraint(g, grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        def micro(gsum, mb):
+            (loss, metrics), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            # reshard the (bf16) grads to the accumulator's (ZeRO-1)
+            # sharding BEFORE the f32 upcast: the full-size f32 grad tree
+            # never materializes (buffer-assignment-verified)
+            g = _constrain(g)
+            gsum = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), gsum, g)
+            return gsum, dict(metrics, loss=loss)
+
+        g0 = _constrain(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        gsum, ms = jax.lax.scan(micro, g0, batch)
+        grads = jax.tree.map(lambda g: g / num_microbatches, gsum)
+        metrics = jax.tree.map(jnp.mean, ms)
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg)
+        return params, opt_state, dict(metrics, **opt_metrics)
+
+    return train_step
+
+
+def make_eval_step(model, cfg: ModelConfig) -> Callable:
+    loss_fn = make_loss_fn(model, cfg)
+
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return dict(metrics, loss=loss)
+
+    return eval_step
+
+
+def init_train_state(model, cfg: ModelConfig, key):
+    params = model.init(key)
+    return params, adamw_init(params)

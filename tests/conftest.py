@@ -1,0 +1,30 @@
+import os
+import sys
+
+# tests run single-device (the dry-run sets its own XLA_FLAGS in a subprocess)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.graphs import graph_power2  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def verify_mis2(graph, in_set: np.ndarray) -> None:
+    """Independence + maximality via G^2 (paper Lemma IV.2)."""
+    g2 = graph_power2(graph)
+    indptr = np.asarray(g2.indptr)
+    indices = np.asarray(g2.indices)
+    v = len(indptr) - 1
+    rows = np.repeat(np.arange(v), np.diff(indptr))
+    bad = in_set[rows] & in_set[indices] & (rows != indices)
+    assert not bad.any(), "distance-2 independence violated"
+    covered = np.zeros(v, dtype=bool)
+    np.logical_or.at(covered, rows, in_set[indices])
+    covered |= in_set
+    assert covered.all(), "maximality violated"

@@ -1,0 +1,97 @@
+"""Aggregation (Alg. 2/3) and coloring invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import verify_mis2
+from repro.core import (
+    aggregate_basic,
+    aggregate_serial_greedy,
+    aggregate_two_phase,
+    check_coloring,
+    color_graph,
+    edge_cut,
+    partition,
+)
+from repro.graphs import (
+    coarse_graph_from_labels,
+    laplace3d,
+    random_uniform_graph,
+)
+
+
+@pytest.mark.parametrize("agg_fn", [aggregate_basic, aggregate_two_phase,
+                                    aggregate_serial_greedy])
+def test_aggregation_total_coverage(agg_fn):
+    g = laplace3d(10).graph
+    a = agg_fn(g)
+    assert (a.labels >= 0).all()
+    assert a.labels.max() + 1 == a.num_aggregates
+    assert a.num_aggregates < g.num_vertices
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 1000), st.integers(50, 500))
+def test_aggregation_random_coverage(seed, n):
+    g = random_uniform_graph(n, 5.0, seed=seed)
+    for fn in (aggregate_basic, aggregate_two_phase):
+        a = fn(g)
+        assert (a.labels >= 0).all()
+        # aggregates are connected to their members (every member is within
+        # distance 2 of some member — weak sanity via sizes)
+        sizes = np.bincount(a.labels)
+        assert sizes.min() >= 1
+
+
+def test_aggregation_roots_form_mis2():
+    g = laplace3d(12).graph
+    a = aggregate_basic(g)
+    # phase-1 roots of Algorithm 2 are exactly an MIS-2
+    phase1_roots = a.roots
+    verify_mis2(g, phase1_roots)
+
+
+def test_aggregation_deterministic():
+    g = random_uniform_graph(2000, 6.0, seed=17)
+    a = aggregate_two_phase(g)
+    b = aggregate_two_phase(g)
+    assert (a.labels == b.labels).all()
+
+
+def test_two_phase_beats_basic_on_aggregate_count():
+    """Alg. 3's secondary aggregates give finer coarsening than Alg. 2
+    (more, smaller aggregates — the paper's quality mechanism)."""
+    g = laplace3d(14).graph
+    basic = aggregate_basic(g)
+    two = aggregate_two_phase(g)
+    assert two.num_aggregates >= basic.num_aggregates
+    assert np.bincount(two.labels).max() <= np.bincount(basic.labels).max()
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 100), st.integers(50, 400))
+def test_coloring_valid(seed, n):
+    g = random_uniform_graph(n, 4.0, seed=seed)
+    c = color_graph(g)
+    assert check_coloring(g, c.colors)
+    assert c.num_colors >= 1
+
+
+def test_coarse_graph_coloring_pipeline():
+    g = laplace3d(10).graph
+    a = aggregate_two_phase(g)
+    cg = coarse_graph_from_labels(g, a.labels, a.num_aggregates)
+    c = color_graph(cg)
+    assert check_coloring(cg, c.colors)
+
+
+def test_partition_balance_and_determinism():
+    g = laplace3d(12).graph
+    p1 = partition(g, 8)
+    p2 = partition(g, 8)
+    assert (p1.parts == p2.parts).all()
+    sizes = np.bincount(p1.parts, minlength=8)
+    assert sizes.min() > 0
+    assert sizes.max() <= np.ceil(g.num_vertices / 8 * 1.3)
+    assert p1.edge_cut < g.num_entries // 2

@@ -1,0 +1,96 @@
+"""Dry-run machinery tests: production mesh, input specs, HLO analyzer,
+and one real lower+compile cell via subprocess (512 host devices)."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def test_hlo_analyzer_scales_while_loops():
+    """Synthetic HLO: a dot inside a while body must be scaled by the
+    known_trip_count."""
+    from repro.launch.hlo_analysis import analyze
+    hlo = """
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %dot.1 = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ip, %dot.1)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8] parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%z, %a)
+  %while.1 = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+  ROOT %out = f32[8,8] get-tuple-element(%while.1), index=1
+}
+"""
+    res = analyze(hlo, 1)
+    # one 8x8x8 dot = 2*8*8*8 = 1024 flops, x7 trips
+    assert res["flops"] == pytest.approx(7 * 1024)
+
+
+def test_collective_wire_model():
+    from repro.launch.hlo_analysis import analyze
+    hlo = """
+ENTRY %main (a: f32[1024]) -> f32[1024] {
+  %a = f32[1024] parameter(0)
+  ROOT %ar = f32[1024]{0} all-reduce(%a), replica_groups=[32,16]<=[512], to_apply=%add
+}
+
+%add (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %s = f32[] add(%x, %y)
+}
+"""
+    res = analyze(hlo, 512)
+    rec = res["collectives"]["all-reduce"]
+    assert rec["count"] == 1
+    # ring all-reduce of 4096 bytes over groups of 16: 2*4096*15/16
+    assert rec["wire_bytes"] == pytest.approx(2 * 4096 * 15 / 16)
+
+
+def test_cell_applicability_rules():
+    from repro.configs import get_config
+    from repro.models.config import LM_SHAPES, cell_applicable
+    long = next(c for c in LM_SHAPES if c.shape_name == "long_500k")
+    ok, _ = cell_applicable(get_config("mamba2-780m"), long)
+    assert ok
+    ok, why = cell_applicable(get_config("granite-8b"), long)
+    assert not ok and "512k" in why
+
+
+@pytest.mark.slow
+def test_dryrun_cell_compiles_on_512_devices(tmp_path):
+    """Real lower+compile of one cell on the production mesh (subprocess
+    because the dry-run forces 512 host devices)."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "smollm-135m",
+         "--shape", "decode_32k", "--out", str(tmp_path), "--force"],
+        capture_output=True, text=True, timeout=580,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/root"}, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads((tmp_path / "smollm-135m__decode_32k__16x16.json")
+                     .read_text())
+    assert rec["ok"] and rec["fits_hbm"]
+    assert rec["num_devices"] == 256
+    assert rec["roofline"]["dominant"] in ("memory", "collective", "compute")

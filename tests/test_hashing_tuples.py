@@ -1,0 +1,47 @@
+"""Hash limb-emulation bit-exactness + compressed-tuple properties (§V-A/C)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import hashing
+from repro.core.tuples import IN, OUT, effective_priority, id_bits, pack, unpack_id
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 60))
+def test_hash_bit_exact_vs_uint64_oracle(seed, iteration):
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, 2**31 - 1, size=64, dtype=np.uint32)
+    for kind in ("xorshift", "xorshift_star", "fixed"):
+        ours = np.asarray(hashing.PRIORITY_FNS[kind](iteration, jnp.asarray(ids)))
+        ref = hashing.np_priorities(kind, iteration, ids)
+        assert (ours == ref).all(), kind
+
+
+def test_hash_iteration_decorrelation():
+    """xorshift* outputs differ across iterations for the same vertex."""
+    ids = jnp.arange(1000, dtype=jnp.uint32)
+    a = np.asarray(hashing.priorities_xorshift_star(1, ids))
+    b = np.asarray(hashing.priorities_xorshift_star(2, ids))
+    assert (a != b).mean() > 0.99
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 2**20))
+def test_pack_range_and_ordering(num_vertices):
+    """Equation (1): no packed tuple collides with IN or OUT; ids recoverable."""
+    b = id_bits(num_vertices)
+    rng = np.random.default_rng(num_vertices)
+    ids = rng.integers(0, num_vertices, size=128, dtype=np.uint32)
+    prios = rng.integers(0, 2**32 - 1, size=128, dtype=np.uint32)
+    packed = np.asarray(pack(jnp.asarray(prios), jnp.asarray(ids), b))
+    assert (packed != IN).all()
+    assert (packed != OUT).all()
+    assert (np.asarray(unpack_id(jnp.asarray(packed), b)) == ids).all()
+    # lexicographic: equal effective priorities are tie-broken by id
+    eff = np.asarray(effective_priority(jnp.asarray(prios), b))
+    same = eff[:, None] == eff[None, :]
+    lt = packed[:, None] < packed[None, :]
+    id_lt = ids[:, None] < ids[None, :]
+    assert (lt[same] == id_lt[same]).all()

@@ -1,0 +1,125 @@
+"""MIS-2 invariants (paper Alg. 1): independence, maximality, determinism,
+engine/representation agreement, induced-subgraph (active-mask) semantics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import verify_mis2
+from repro.core.mis2 import ABLATION_CHAIN, Mis2Options, mis2
+from repro.graphs import (
+    graph_power2,
+    laplace3d,
+    path_graph,
+    random_skewed_graph,
+    random_uniform_graph,
+)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000), st.integers(10, 400),
+       st.floats(1.0, 8.0))
+def test_mis2_invariants_random(seed, n, avg_deg):
+    g = random_uniform_graph(n, avg_deg, seed=seed)
+    r = mis2(g)
+    assert r.converged
+    verify_mis2(g, r.in_set)
+
+
+@pytest.mark.parametrize("maker", [
+    lambda: path_graph(17),
+    lambda: laplace3d(8).graph,
+    lambda: random_skewed_graph(3000, 6.0, seed=3),
+])
+def test_mis2_invariants_structured(maker):
+    g = maker()
+    r = mis2(g)
+    assert r.converged
+    verify_mis2(g, r.in_set)
+
+
+def test_all_ablation_variants_valid_and_packed_equivalence():
+    g = random_uniform_graph(1500, 5.0, seed=11)
+    results = {}
+    for name, opt in ABLATION_CHAIN.items():
+        r = mis2(g, options=opt)
+        assert r.converged, name
+        verify_mis2(g, r.in_set)
+        results[name] = r
+    # same priorities + worklists -> representation/layout must not matter
+    a = results["+worklists"].in_set
+    assert (a == results["+packed_status"].in_set).all()
+    assert (a == results["+simd_ell"].in_set).all()
+
+
+def test_dense_engine_bit_identical():
+    g = random_uniform_graph(2500, 7.0, seed=5)
+    rc = mis2(g, engine="compacted")
+    rd = mis2(g, engine="dense")
+    assert (rc.in_set == rd.in_set).all()
+    assert rc.iterations == rd.iterations
+
+
+def test_determinism_across_runs():
+    g = random_uniform_graph(4000, 6.0, seed=9)
+    a = mis2(g)
+    b = mis2(g)
+    assert (a.in_set == b.in_set).all()
+
+
+def test_pallas_path_bit_identical():
+    g = random_uniform_graph(2000, 8.0, seed=4)
+    base = mis2(g)
+    pal = mis2(g, options=Mis2Options(use_pallas=True))
+    assert (base.in_set == pal.in_set).all()
+    assert base.iterations == pal.iterations
+
+
+def test_active_mask_induced_subgraph():
+    """MIS-2 with an active mask == MIS-2 of the induced subgraph."""
+    g = random_uniform_graph(600, 5.0, seed=21)
+    rng = np.random.default_rng(0)
+    active = rng.random(600) < 0.6
+    r = mis2(g, active=np.asarray(active))
+    in_set = r.in_set
+    assert not in_set[~active].any()
+    # verify against the explicitly-built induced subgraph
+    import scipy.sparse as sp
+    indptr = np.asarray(g.indptr)
+    indices = np.asarray(g.indices)
+    rows = np.repeat(np.arange(600), np.diff(indptr))
+    keep = active[rows] & active[indices]
+    a = sp.csr_matrix((np.ones(keep.sum(), np.int8),
+                       (rows[keep], indices[keep])), shape=(600, 600))
+    a = a + sp.identity(600, dtype=np.int8, format="csr")
+    a2 = (a @ a).tocoo()
+    bad = in_set[a2.row] & in_set[a2.col] & (a2.row != a2.col)
+    assert not bad.any(), "induced independence violated"
+    covered = np.zeros(600, bool)
+    np.logical_or.at(covered, a2.row, in_set[a2.col])
+    covered |= in_set
+    assert covered[active].all(), "induced maximality violated"
+
+
+def test_table3_laplace_regression():
+    """Paper Table III scaling: MIS-2 ~9% of V and <=10 iterations for
+    Laplace 7-point problems."""
+    m = laplace3d(20)
+    r = mis2(m.graph)
+    frac = r.size / m.graph.num_vertices
+    assert 0.07 < frac < 0.11
+    assert r.iterations <= 12
+
+
+def test_paper_fig1_example():
+    """The walkthrough graph of paper Fig. 1 yields a valid MIS-2 quickly."""
+    import repro.graphs as G
+    edges = [(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (0, 5), (1, 4)]
+    rows = np.array([e[0] for e in edges] + [e[1] for e in edges] +
+                    list(range(6)))
+    cols = np.array([e[1] for e in edges] + [e[0] for e in edges] +
+                    list(range(6)))
+    g = G.csr_from_coo(rows, cols, 6)
+    r = mis2(g)
+    verify_mis2(g, r.in_set)
+    assert r.iterations <= 4
