@@ -4,10 +4,14 @@ absolute numbers do not transfer, the cumulative ordering is the claim).
 
 Chain: baseline(Bell) -> +rand_priority -> +worklists -> +packed_status ->
 +simd_ell (== production defaults).
+
+Runs entirely against the ``repro.api`` facade; the shared ``Graph``
+handles from ``bench_suite`` cache the ELL/CSR/edge-list conversions so
+the five ablation variants measure the solve, not format churn.
 """
 from __future__ import annotations
 
-from repro.core.mis2 import ABLATION_CHAIN, mis2
+from repro.api import ABLATION_CHAIN, mis2
 
 from .common import bench_suite, emit, timeit
 

@@ -16,7 +16,7 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-from repro.core.mis2 import mis2
+from repro.api import Graph, mis2
 from repro.graphs import laplace3d
 
 from .common import emit, timeit
@@ -29,7 +29,7 @@ def run(quick: bool = False):
     # A: algorithmic weak scaling (wall time per vertex)
     sizes = (16, 24, 32) if quick else (16, 24, 32, 48, 64)
     for n in sizes:
-        g = laplace3d(n).graph
+        g = Graph(laplace3d(n).graph)
         t = timeit(lambda: mis2(g), repeats=1)
         rows.append({
             "axis": "A_weak_scaling", "case": f"laplace_{n}^3",

@@ -5,7 +5,7 @@ Claim validated: xorshift* needs the fewest iterations; plain xorshift is
 """
 from __future__ import annotations
 
-from repro.core.mis2 import Mis2Options, mis2
+from repro.api import Mis2Options, mis2
 
 from .common import bench_suite, emit
 

@@ -5,7 +5,7 @@ own numbers are listed beside ours.
 """
 from __future__ import annotations
 
-from repro.core.mis2 import mis2
+from repro.api import Graph, mis2
 from repro.graphs import elasticity3d, laplace3d
 
 from .common import emit, timeit
@@ -30,8 +30,8 @@ def run(quick: bool = False):
                   ("elasticity", (60, 30, 30)), ("elasticity", (60, 60, 30))]
     rows = []
     for kind, dims in cases:
-        g = (laplace3d(*dims) if kind == "laplace"
-             else elasticity3d(*dims)).graph
+        g = Graph((laplace3d(*dims) if kind == "laplace"
+                   else elasticity3d(*dims)).graph)
         r = mis2(g)
         t = timeit(lambda: mis2(g), repeats=1)
         psize, piters = PAPER[(kind, dims)]

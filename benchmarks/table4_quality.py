@@ -5,7 +5,7 @@ priorities, unpacked, no worklists) vs the dense jitted engine.
 """
 from __future__ import annotations
 
-from repro.core.mis2 import ABLATION_CHAIN, mis2
+from repro.api import ABLATION_CHAIN, mis2
 
 from .common import bench_suite, emit
 

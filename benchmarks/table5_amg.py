@@ -13,32 +13,32 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.graphs import csr_to_ell_matrix, laplace3d
+from repro.api import Graph, amg
+from repro.graphs import laplace3d
 from repro.graphs.ops import spmv_ell
-from repro.solvers import build_hierarchy, cg
+from repro.solvers import cg
 
 from .common import emit
 
 
 def run(quick: bool = False):
     n = 16 if quick else 32
-    a = laplace3d(n)
-    ell = csr_to_ell_matrix(a)
+    a = Graph(laplace3d(n))
+    ell = a.ell_matrix
     b = jnp.asarray(np.random.default_rng(0)
-                    .standard_normal(a.num_rows).astype(np.float32))
+                    .standard_normal(a.num_vertices).astype(np.float32))
     mv = lambda x: spmv_ell(ell, x)  # noqa: E731
     rows = []
-    for agg in ("serial", "mis2_basic", "mis2_agg"):
-        h = build_hierarchy(a, aggregation=agg,
-                            coarse_size=200)
+    for agg in ("serial", "basic", "two_phase"):
+        h = amg(a, aggregation=agg, coarse_size=200)
         t0 = time.time()
         res = cg(mv, b, precond=h.as_precond(), tol=1e-10, maxiter=300)
         solve_s = time.time() - t0
         # determinism: rebuild + resolve must match iteration count
-        h2 = build_hierarchy(a, aggregation=agg, coarse_size=200)
+        h2 = amg(a, aggregation=agg, coarse_size=200)
         res2 = cg(mv, b, precond=h2.as_precond(), tol=1e-10, maxiter=300)
         rows.append({
-            "aggregation": agg, "V": a.num_rows,
+            "aggregation": agg, "V": a.num_vertices,
             "cg_iters": res.iterations,
             "agg_seconds": round(h.aggregation_seconds, 3),
             "setup_seconds": round(h.setup_seconds, 3),

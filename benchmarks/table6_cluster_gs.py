@@ -11,7 +11,8 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.graphs import csr_to_ell_matrix, elasticity3d, laplace3d
+from repro.api import Graph
+from repro.graphs import elasticity3d, laplace3d
 from repro.graphs.ops import spmv_ell
 from repro.solvers import gmres, setup_cluster_gs, setup_point_gs
 
@@ -27,10 +28,11 @@ def run(quick: bool = False):
         problems["Laplace3D_24"] = laplace3d(24)
         problems["Elasticity3D_8"] = elasticity3d(8)
     rows = []
-    for pname, a in problems.items():
-        ell = csr_to_ell_matrix(a)
+    for pname, mat in problems.items():
+        a = Graph(mat)
+        ell = a.ell_matrix
         b = jnp.asarray(np.random.default_rng(0)
-                        .standard_normal(a.num_rows).astype(np.float32))
+                        .standard_normal(a.num_vertices).astype(np.float32))
         mv = lambda x: spmv_ell(ell, x)  # noqa: E731
         for kind, setup in (("point", setup_point_gs),
                             ("cluster", setup_cluster_gs)):
@@ -40,7 +42,7 @@ def run(quick: bool = False):
                         tol=1e-6, maxiter=800)
             apply_s = time.time() - t0
             rows.append({
-                "problem": pname, "kind": kind, "V": a.num_rows,
+                "problem": pname, "kind": kind, "V": a.num_vertices,
                 "setup_seconds": round(pre.setup_seconds, 3),
                 "apply_seconds": round(apply_s, 3),
                 "gmres_iters": res.iterations,

@@ -13,9 +13,10 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.graphs import csr_to_ell_matrix, laplace3d  # noqa: E402
+from repro.api import Graph, amg  # noqa: E402
+from repro.graphs import laplace3d  # noqa: E402
 from repro.graphs.ops import spmv_ell  # noqa: E402
-from repro.solvers import build_hierarchy, cg  # noqa: E402
+from repro.solvers import cg  # noqa: E402
 
 
 def main():
@@ -24,26 +25,24 @@ def main():
     ap.add_argument("--tol", type=float, default=1e-10)
     args = ap.parse_args()
 
-    a = laplace3d(args.n)
-    ell = csr_to_ell_matrix(a)
+    a = Graph(laplace3d(args.n))
+    ell = a.ell_matrix
     rng = np.random.default_rng(0)
-    b = jnp.asarray(rng.standard_normal(a.num_rows).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal(a.num_vertices).astype(np.float32))
     mv = lambda x: spmv_ell(ell, x)  # noqa: E731
-    print(f"Laplace3D {args.n}^3: V={a.num_rows} nnz={a.num_entries}")
+    print(f"Laplace3D {args.n}^3: V={a.num_vertices} nnz={a.num_entries}")
 
     plain = cg(mv, b, tol=args.tol, maxiter=3000)
     print(f"plain CG:        {plain.iterations} iterations")
 
-    for agg in ("serial", "mis2_basic", "mis2_agg"):
-        t0 = time.time()
-        h = build_hierarchy(a, aggregation=agg)
-        setup_s = time.time() - t0
+    for agg in ("serial", "basic", "two_phase"):
+        h = amg(a, aggregation=agg)
         t0 = time.time()
         res = cg(mv, b, precond=h.as_precond(), tol=args.tol, maxiter=300)
         solve_s = time.time() - t0
         levels = " -> ".join(str(v) for v, _ in h.level_sizes)
         print(f"AMG[{agg:10s}]: {res.iterations:3d} iterations "
-              f"(setup {setup_s:.2f}s of which aggregation "
+              f"(setup {h.wall_time_s:.2f}s of which aggregation "
               f"{h.aggregation_seconds:.2f}s, solve {solve_s:.2f}s) "
               f"levels {levels}")
 

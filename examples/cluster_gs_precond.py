@@ -13,7 +13,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.graphs import csr_to_ell_matrix, laplace3d  # noqa: E402
+from repro.api import Graph  # noqa: E402
+from repro.graphs import laplace3d  # noqa: E402
 from repro.graphs.ops import spmv_ell  # noqa: E402
 from repro.solvers import gmres, setup_cluster_gs, setup_point_gs  # noqa: E402
 
@@ -23,12 +24,12 @@ def main():
     ap.add_argument("--n", type=int, default=16)
     args = ap.parse_args()
 
-    a = laplace3d(args.n)
-    ell = csr_to_ell_matrix(a)
+    a = Graph(laplace3d(args.n))
+    ell = a.ell_matrix
     b = jnp.asarray(np.random.default_rng(0)
-                    .standard_normal(a.num_rows).astype(np.float32))
+                    .standard_normal(a.num_vertices).astype(np.float32))
     mv = lambda x: spmv_ell(ell, x)  # noqa: E731
-    print(f"Laplace3D {args.n}^3: V={a.num_rows}")
+    print(f"Laplace3D {args.n}^3: V={a.num_vertices}")
 
     for kind, setup in (("point", setup_point_gs),
                         ("cluster", setup_cluster_gs)):

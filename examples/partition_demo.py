@@ -15,8 +15,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np  # noqa: E402
 
-from repro.core import partition  # noqa: E402
-from repro.graphs import csr_from_coo, laplace3d, random_uniform_graph  # noqa: E402
+from repro.api import Graph, partition  # noqa: E402
+from repro.graphs import csr_from_coo, laplace3d  # noqa: E402
 
 
 def expert_coactivation_graph(num_experts=60, seed=0):
@@ -40,7 +40,7 @@ def expert_coactivation_graph(num_experts=60, seed=0):
 
 def main():
     # 1. operator graph over devices
-    g = laplace3d(24).graph
+    g = Graph(laplace3d(24).graph)
     res = partition(g, 16)
     sizes = np.bincount(res.parts, minlength=16)
     print(f"mesh operator graph: V={g.num_vertices} -> 16 devices, "
@@ -49,7 +49,7 @@ def main():
           f"load balance {sizes.max() / sizes.mean():.2f}")
 
     # 2. MoE expert clusters (qwen2-moe has 60 routed experts)
-    eg = expert_coactivation_graph(60)
+    eg = Graph(expert_coactivation_graph(60))
     res = partition(eg, 4, coarse_target=16)
     print(f"expert co-activation graph: 60 experts -> 4 EP groups, "
           f"cut {res.edge_cut}, groups "

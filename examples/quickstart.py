@@ -1,4 +1,4 @@
-"""Quickstart: MIS-2 + two-phase aggregation on a generated mesh problem.
+"""Quickstart: the `repro.api` facade on a generated mesh problem.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,29 +9,34 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np  # noqa: E402
 
-from repro.core import Mis2Options, aggregate_two_phase, mis2  # noqa: E402
-from repro.graphs import laplace3d  # noqa: E402
+from repro.api import Graph, Mis2Options, coarsen, list_engines, mis2  # noqa: E402
+from repro.api.generators import laplace3d  # noqa: E402
 
 
 def main():
-    # the paper's Laplace3D generator (7-point stencil)
-    matrix = laplace3d(32)
-    graph = matrix.graph
+    # the paper's Laplace3D generator (7-point stencil), wrapped in the
+    # cached-format handle: ELL/CSR conversions happen once, on first use
+    graph = Graph(laplace3d(32))
     print(f"graph: V={graph.num_vertices} E={graph.num_entries}")
 
     # distance-2 maximal independent set (Algorithm 1, all optimizations)
     result = mis2(graph, options=Mis2Options(priority="xorshift_star"))
     print(f"MIS-2: size={result.size} "
           f"({100 * result.size / graph.num_vertices:.1f}% of V), "
-          f"iterations={result.iterations}")
+          f"iterations={result.iterations}, "
+          f"wall={result.wall_time_s * 1e3:.1f}ms")
 
-    # deterministic: identical on every run / device count
-    again = mis2(graph)
-    assert (again.in_set == result.in_set).all()
-    print("deterministic: re-run produced the identical set")
+    # portable: every engine returns the bit-identical set — one digest
+    for engine in list_engines("mis2")["mis2"]:
+        again = mis2(graph, engine=engine)
+        assert again.digest == result.digest, engine
+    print(f"deterministic: engines {list_engines('mis2')['mis2']} all "
+          f"produced digest {result.digest}")
+    print(f"format cache: {graph.conversions} (ELL built once, reused "
+          f"by every engine)")
 
     # two-phase MIS-2 aggregation (Algorithm 3)
-    agg = aggregate_two_phase(graph)
+    agg = coarsen(graph, method="two_phase")
     sizes = np.bincount(agg.labels)
     print(f"aggregation: {agg.num_aggregates} aggregates, "
           f"coarsening ratio {agg.coarsening_ratio:.1f}, "

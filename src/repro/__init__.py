@@ -1,0 +1,35 @@
+"""repro — parallel, portable distance-2 MIS and graph coarsening
+(Kelley & Rajamanickam 2022) on JAX/Pallas.
+
+``import repro`` presents the facade directly (``repro.mis2``,
+``repro.Graph``, ...); ``repro.api`` is the same surface with the full
+registry/backend toolkit.  Subpackages (``graphs``, ``core``, ``solvers``,
+``kernels``, ``launch``) remain importable for power users.
+
+Facade attributes resolve lazily (PEP 562): tooling that must configure
+``XLA_FLAGS`` before anything touches jax (``python -m
+repro.launch.dryrun`` forces 512 host devices) still works, because
+importing the bare ``repro`` package pulls in nothing.
+"""
+from importlib import import_module
+
+__version__ = "0.2.0"
+
+_FACADE = {
+    "Graph", "Backend", "Mis2Options",
+    "mis2", "misk", "color", "coarsen", "partition", "amg",
+}
+
+__all__ = ["api", "__version__", *sorted(_FACADE)]
+
+
+def __getattr__(name: str):
+    if name == "api":
+        return import_module(".api", __name__)
+    if name in _FACADE:
+        return getattr(import_module(".api", __name__), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,0 +1,34 @@
+"""Deprecation plumbing shared by the legacy entry points.
+
+Bottom-layer module (imports nothing from ``repro``) so that ``core/`` and
+``solvers/`` can emit migration warnings without importing ``repro.api``
+(which imports them back).  The old->new mapping lives in API.md.
+"""
+from __future__ import annotations
+
+import warnings
+
+REMOVAL_POLICY = "kept at least until 0.3; see API.md for the migration table"
+
+
+def warn_deprecated(old: str, new: str, *, stacklevel: int = 3) -> None:
+    """Emit the standard migration DeprecationWarning for an old entry point."""
+    warnings.warn(
+        f"{old} is deprecated ({REMOVAL_POLICY}); use {new} instead",
+        DeprecationWarning,
+        stacklevel=stacklevel,
+    )
+
+
+class DeprecatedMapping(dict):
+    """A dict that warns on access — for legacy registry dicts like
+    ``solvers.amg.AGGREGATORS`` whose role moved to ``repro.api.registry``."""
+
+    def __init__(self, data, old: str, new: str):
+        super().__init__(data)
+        self._old = old
+        self._new = new
+
+    def __getitem__(self, key):
+        warn_deprecated(self._old, self._new, stacklevel=4)
+        return super().__getitem__(key)

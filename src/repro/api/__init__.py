@@ -1,0 +1,62 @@
+"""``repro.api`` — the single public surface of the reproduction.
+
+One algorithm, many backends, bit-identical results (the paper's
+portability claim) expressed as three orthogonal concepts:
+
+* :class:`Graph`   — cached-format handle (CSR/ELL/COO/bucketed computed
+  lazily, exactly once, shared across every pipeline call);
+* :class:`Backend` — execution policy (Pallas kernels on/off, interpret
+  mode auto-derived from the attached accelerator, device placement),
+  threaded down to ``kernels/*/ops.py``;
+* engine registry  — ``(pipeline, engine-name)`` dispatch replacing the
+  seed's ad-hoc per-engine entry points; all engines of a pipeline return
+  the common :class:`Result` protocol (host-numpy payload + iterations +
+  convergence + wall time + determinism digest).
+
+Legacy entry points (``repro.core.mis2.mis2``, ``solvers.amg.AGGREGATORS``,
+``Mis2Options(use_pallas=...)``, ...) still work but emit
+``DeprecationWarning``; the old->new table is in API.md.
+"""
+from .backend import (
+    Backend,
+    accelerator_present,
+    default_interpret,
+    get_default_backend,
+    set_default_backend,
+    using_backend,
+)
+from .graph import Graph, as_csr_graph, as_ell_graph, as_graph
+from .registry import get_engine, get_engine_spec, list_engines, register_engine
+from .result import (
+    AggregationResult,
+    AmgSetup,
+    ColoringResult,
+    Mis2Result,
+    PartitionResult,
+    Result,
+    ResultLike,
+    determinism_digest,
+)
+from . import engines as _engines  # noqa: F401  (registers built-in engines)
+from .facade import amg, coarsen, color, mis2, misk, partition
+from ..core.mis2 import ABLATION_CHAIN, Mis2Options
+from . import generators  # noqa: F401  (problem generators, re-exported)
+
+__all__ = [
+    # facade calls
+    "mis2", "misk", "color", "coarsen", "partition", "amg",
+    # graph handle
+    "Graph", "as_graph", "as_ell_graph", "as_csr_graph",
+    # backend policy
+    "Backend", "accelerator_present", "default_interpret",
+    "get_default_backend", "set_default_backend", "using_backend",
+    # engine registry
+    "register_engine", "get_engine", "get_engine_spec", "list_engines",
+    # problem generators (repro.api.generators.laplace3d, ...)
+    "generators",
+    # options / results
+    "Mis2Options", "ABLATION_CHAIN",
+    "Result", "ResultLike", "Mis2Result", "ColoringResult",
+    "AggregationResult", "PartitionResult", "AmgSetup",
+    "determinism_digest",
+]

@@ -1,0 +1,80 @@
+"""Backend execution policy: one object that answers "where and how do the
+hot loops run", threaded from the facade down to ``kernels/*/ops.py``.
+
+Replaces the seed's scattered knobs — ``Mis2Options.use_pallas``, per-call
+``interpret=True`` kwargs — with a single config:
+
+* ``pallas``     route the measured hot loops through the Pallas kernels
+  (``kernels/minprop_ell``); the XLA fallback otherwise.
+* ``interpret``  tri-state.  ``None`` (default) = *auto*: run the Pallas
+  interpreter only when no accelerator is attached (CPU hosts); compile
+  for real on TPU/GPU.  The seed hard-coded ``interpret=True``, which
+  silently ran the interpreter even on accelerators.
+* ``device``     optional JAX device for graph/array placement.
+
+This module is import-cycle-safe by construction: it depends only on
+``jax`` so both ``kernels/`` (below ``core``) and the facade (above it)
+can consult the same policy.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import dataclass, replace
+from typing import Any, Optional
+
+import jax
+
+
+def accelerator_present() -> bool:
+    """True iff the default JAX backend is an accelerator (TPU/GPU)."""
+    return jax.default_backend() not in ("cpu",)
+
+
+def default_interpret() -> bool:
+    """The auto policy: interpret Pallas kernels only off-accelerator."""
+    return not accelerator_present()
+
+
+@dataclass(frozen=True)
+class Backend:
+    """Execution policy for one pipeline invocation (hashable, reusable)."""
+
+    pallas: bool = False
+    interpret: Optional[bool] = None   # None = auto (interpret iff no accel)
+    device: Any = None                 # optional jax.Device for placement
+
+    def resolve_interpret(self) -> bool:
+        if self.interpret is not None:
+            return bool(self.interpret)
+        return default_interpret()
+
+    def with_(self, **changes) -> "Backend":
+        return replace(self, **changes)
+
+
+_DEFAULT = Backend()
+
+
+def get_default_backend() -> Backend:
+    return _DEFAULT
+
+
+def set_default_backend(backend: Backend) -> Backend:
+    """Install ``backend`` as the process-wide default; returns the old one."""
+    global _DEFAULT
+    old, _DEFAULT = _DEFAULT, backend
+    return old
+
+
+@contextmanager
+def using_backend(backend: Backend):
+    """Scoped default backend (restores the previous default on exit)."""
+    old = set_default_backend(backend)
+    try:
+        yield backend
+    finally:
+        set_default_backend(old)
+
+
+def resolve_backend(backend: Optional[Backend]) -> Backend:
+    return backend if backend is not None else _DEFAULT

@@ -1,0 +1,102 @@
+"""Built-in engine registrations.
+
+Imported by ``repro.api.__init__`` so that every process that touches the
+facade (or looks an engine up lazily from a lower layer, e.g.
+``solvers/amg.py``) sees the full engine table.
+
+Engine call conventions
+-----------------------
+* ``mis2``:        fn(graph, active, options, backend) -> core Mis2Result
+* ``aggregation``: fn(graph, options=None, mis2_engine="compacted",
+                      interpret=None) -> core AggregationResult
+* ``coloring``:    fn(graph, max_rounds, backend) -> core ColoringResult
+* ``partition``:   fn(graph, num_parts, coarse_target, options, backend)
+                   -> core PartitionResult
+"""
+from __future__ import annotations
+
+from ..core.aggregation import (
+    _aggregate_basic_impl,
+    _aggregate_serial_greedy_impl,
+    _aggregate_two_phase_impl,
+)
+from ..core.coloring import _color_graph_impl
+from ..core.mis2 import Mis2Options, _mis2_compacted_impl, _mis2_dense_impl
+from ..core.partition import _partition_impl
+from .backend import Backend
+from .registry import register_engine
+
+
+def _opts(options) -> Mis2Options:
+    return Mis2Options() if options is None else options
+
+
+# -- mis2 -------------------------------------------------------------------
+
+@register_engine("mis2", "dense",
+                 doc="single jitted lax.while_loop fixed point (masks, no "
+                     "worklist compaction); safe inside larger jitted code")
+def _mis2_dense(graph, active, options, backend: Backend):
+    return _mis2_dense_impl(graph, active, _opts(options))
+
+
+@register_engine("mis2", "compacted",
+                 doc="host-orchestrated §V-B worklist compaction; the "
+                     "production CPU/TPU path behind the Fig. 2 ablation")
+def _mis2_compacted(graph, active, options, backend: Backend):
+    return _mis2_compacted_impl(graph, active, _opts(options), pallas=False,
+                                interpret=backend.resolve_interpret())
+
+
+@register_engine("mis2", "pallas",
+                 doc="compacted driver with the Pallas min-propagation "
+                     "kernels on the measured hot loop")
+def _mis2_pallas(graph, active, options, backend: Backend):
+    return _mis2_compacted_impl(graph, active, _opts(options), pallas=True,
+                                interpret=backend.resolve_interpret())
+
+
+# -- aggregation (coarsening) ----------------------------------------------
+
+@register_engine("aggregation", "basic", aliases=("mis2_basic",),
+                 doc="paper Alg. 2 (Bell-style): MIS-2 roots + neighbors")
+def _agg_basic(graph, options=None, mis2_engine="compacted", interpret=None,
+               min_secondary_neighbors=2):
+    return _aggregate_basic_impl(graph, _opts(options), mis2_engine,
+                                 interpret=interpret)
+
+
+@register_engine("aggregation", "two_phase", aliases=("mis2_agg",),
+                 doc="paper Alg. 3 (ML-style): two MIS-2 phases + "
+                     "max-coupling cleanup")
+def _agg_two_phase(graph, options=None, mis2_engine="compacted",
+                   interpret=None, min_secondary_neighbors=2):
+    return _aggregate_two_phase_impl(graph, _opts(options), mis2_engine,
+                                     min_secondary_neighbors,
+                                     interpret=interpret)
+
+
+@register_engine("aggregation", "serial",
+                 doc="host-sequential greedy reference (Table V 'Serial Agg')")
+def _agg_serial(graph, options=None, mis2_engine="compacted", interpret=None,
+                min_secondary_neighbors=2):
+    return _aggregate_serial_greedy_impl(graph)
+
+
+# -- coloring ---------------------------------------------------------------
+
+@register_engine("coloring", "luby",
+                 doc="Luby-style rounds with xorshift* packed priorities")
+def _color_luby(graph, max_rounds, backend: Backend):
+    return _color_graph_impl(graph, max_rounds)
+
+
+# -- partition --------------------------------------------------------------
+
+@register_engine("partition", "multilevel",
+                 doc="MIS-2 multilevel coarsen + greedy coarse split + "
+                     "boundary refinement per level")
+def _partition_multilevel(graph, num_parts, coarse_target, options,
+                          backend: Backend):
+    return _partition_impl(graph, num_parts, coarse_target, _opts(options),
+                           interpret=backend.resolve_interpret())

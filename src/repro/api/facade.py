@@ -1,0 +1,153 @@
+"""The public facade: one call per pipeline, engines dispatched by name,
+results in the common :class:`~repro.api.result.Result` protocol.
+
+    import repro
+
+    g = repro.Graph(repro.graphs.laplace3d(32))
+    r = repro.mis2(g, engine="pallas")          # Mis2Result
+    agg = repro.coarsen(g, method="two_phase")  # AggregationResult
+    parts = repro.partition(g, num_parts=16)    # PartitionResult
+
+Every function accepts a :class:`Graph` handle (conversions cached across
+calls) or any bare structural container (``CSRGraph``/``CSRMatrix``/
+``ELLGraph``/``ELLMatrix``), and an optional :class:`Backend` controlling
+the Pallas/interpret/device policy.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+from ..core.mis2 import Mis2Options
+from ..core.misk import _mis_k_impl
+from ..graphs.handle import Graph, as_graph
+from .backend import Backend, resolve_backend
+from .registry import get_engine
+from .result import (
+    AggregationResult,
+    AmgSetup,
+    ColoringResult,
+    Mis2Result,
+    PartitionResult,
+    determinism_digest,
+)
+
+
+def _prepare(graph, backend: Backend) -> Graph:
+    gh = as_graph(graph)
+    if backend.device is not None:
+        gh.place(backend.device)
+    return gh
+
+
+def mis2(graph, *, active=None, options: Optional[Mis2Options] = None,
+         engine: str = "compacted",
+         backend: Optional[Backend] = None) -> Mis2Result:
+    """Distance-2 maximal independent set (paper Alg. 1), deterministic
+    across engines: ``dense`` | ``compacted`` | ``pallas`` return
+    bit-identical sets (equal ``digest``) for equal options."""
+    be = resolve_backend(backend)
+    gh = _prepare(graph, be)
+    if be.pallas and engine == "compacted":
+        engine = "pallas"       # Backend(pallas=True) upgrades the default
+    fn = get_engine("mis2", engine)
+    t0 = time.perf_counter()
+    r = fn(gh, active, options, be)
+    dt = time.perf_counter() - t0
+    return Mis2Result(r.in_set, r.iterations, r.converged, dt, engine=engine)
+
+
+def misk(graph, k: int = 2, *, priority: str = "xorshift_star",
+         max_iters: int = 256,
+         backend: Optional[Backend] = None) -> Mis2Result:
+    """Distance-k maximal independent set (k-fold min-propagation)."""
+    be = resolve_backend(backend)
+    gh = _prepare(graph, be)
+    t0 = time.perf_counter()
+    r = _mis_k_impl(gh, k, priority, max_iters)
+    dt = time.perf_counter() - t0
+    return Mis2Result(r.in_set, r.iterations, r.converged, dt,
+                      engine=f"misk{k}")
+
+
+def color(graph, *, max_rounds: int = 256, engine: str = "luby",
+          backend: Optional[Backend] = None) -> ColoringResult:
+    """Deterministic parallel greedy distance-1 coloring."""
+    be = resolve_backend(backend)
+    gh = _prepare(graph, be)
+    fn = get_engine("coloring", engine)
+    t0 = time.perf_counter()
+    r = fn(gh, max_rounds, be)
+    dt = time.perf_counter() - t0
+    return ColoringResult(r.colors, r.rounds, True, dt,
+                          num_colors=r.num_colors)
+
+
+def coarsen(graph, *, method: str = "two_phase",
+            options: Optional[Mis2Options] = None,
+            mis2_engine: str = "compacted",
+            min_secondary_neighbors: int = 2,
+            backend: Optional[Backend] = None) -> AggregationResult:
+    """MIS-2 graph coarsening: ``method`` is ``two_phase`` (paper Alg. 3),
+    ``basic`` (Alg. 2) or ``serial`` (host-sequential reference)."""
+    be = resolve_backend(backend)
+    gh = _prepare(graph, be)
+    fn = get_engine("aggregation", method)
+    t0 = time.perf_counter()
+    r = fn(gh, options=options, mis2_engine=mis2_engine,
+           interpret=be.resolve_interpret(),
+           min_secondary_neighbors=min_secondary_neighbors)
+    dt = time.perf_counter() - t0
+    return AggregationResult(r.labels, r.mis2_iterations, r.converged, dt,
+                             num_aggregates=r.num_aggregates, roots=r.roots,
+                             phase=r.phase)
+
+
+def partition(graph, num_parts: int, *, coarse_target: Optional[int] = None,
+              options: Optional[Mis2Options] = None,
+              engine: str = "multilevel",
+              backend: Optional[Backend] = None) -> PartitionResult:
+    """Multilevel graph partitioning via MIS-2 aggregation (paper §VII)."""
+    be = resolve_backend(backend)
+    gh = _prepare(graph, be)
+    fn = get_engine("partition", engine)
+    t0 = time.perf_counter()
+    r = fn(gh, num_parts, coarse_target, options, be)
+    dt = time.perf_counter() - t0
+    return PartitionResult(r.parts, r.levels, r.converged, dt,
+                           num_parts=r.num_parts, edge_cut=r.edge_cut,
+                           levels=r.levels, history=list(r.history))
+
+
+def amg(matrix, *, aggregation: str = "two_phase", max_levels: int = 10,
+        coarse_size: int = 200, omega: float = 2.0 / 3.0,
+        jacobi_weight: float = 2.0 / 3.0, smoother_sweeps: int = 2,
+        options: Optional[Mis2Options] = None,
+        backend: Optional[Backend] = None) -> AmgSetup:
+    """Smoothed-aggregation AMG setup (paper Table V).  Returns an
+    :class:`AmgSetup` whose ``.as_precond()`` plugs into ``solvers.cg``."""
+    import numpy as np
+
+    from ..solvers.amg import _build_hierarchy_impl
+
+    be = resolve_backend(backend)
+    gh = _prepare(matrix, be)
+    t0 = time.perf_counter()
+    h = _build_hierarchy_impl(
+        gh.csr_matrix, aggregation=aggregation, max_levels=max_levels,
+        coarse_size=coarse_size, omega=omega, jacobi_weight=jacobi_weight,
+        smoother_sweeps=smoother_sweeps,
+        options=Mis2Options() if options is None else options,
+        interpret=be.resolve_interpret())
+    dt = time.perf_counter() - t0
+    sizes = np.asarray(h.level_sizes, dtype=np.int64).reshape(-1, 2)
+    return AmgSetup(sizes, len(h.levels), True, dt,
+                    hierarchy=h, aggregation=aggregation,
+                    setup_seconds=h.setup_seconds,
+                    aggregation_seconds=h.aggregation_seconds)
+
+
+__all__ = [
+    "mis2", "misk", "color", "coarsen", "partition", "amg",
+    "Graph", "Backend", "Mis2Options", "determinism_digest",
+]

@@ -1,0 +1,18 @@
+"""Problem generators re-exported on the facade (`repro.api.generators`).
+
+Implementation lives in ``repro.graphs.generators``; this module keeps
+examples/benchmarks importable against the ``repro.api`` surface alone.
+"""
+from ..graphs.generators import (
+    elasticity3d,
+    laplace3d,
+    paper_suite,
+    path_graph,
+    random_skewed_graph,
+    random_uniform_graph,
+)
+
+__all__ = [
+    "elasticity3d", "laplace3d", "paper_suite", "path_graph",
+    "random_skewed_graph", "random_uniform_graph",
+]

@@ -1,0 +1,9 @@
+"""Public home of the :class:`Graph` handle.
+
+The implementation lives in ``repro.graphs.handle`` (the bottom structural
+layer) so that ``core/`` and ``solvers/`` can coerce handles without
+importing the facade; this module is the supported import path.
+"""
+from ..graphs.handle import Graph, as_csr_graph, as_ell_graph, as_graph
+
+__all__ = ["Graph", "as_graph", "as_ell_graph", "as_csr_graph"]

@@ -1,0 +1,81 @@
+"""Engine registry: backend dispatch as a first-class layer.
+
+The seed encoded each execution strategy as a separate ad-hoc entry point
+(``mis2`` vs ``mis2_dense`` vs ``mis2_compacted``, a ``use_pallas`` bool, a
+string-keyed ``AGGREGATORS`` dict in ``solvers/amg.py``).  The registry
+makes the (pipeline kind, engine name) pair the single dispatch mechanism:
+
+    @register_engine("mis2", "dense", doc="single jitted while_loop")
+    def _dense(graph, active, options, backend): ...
+
+    get_engine("mis2", "dense")(graph, None, opts, backend)
+
+Engines are registered in ``repro.api.engines`` at import time; callers in
+lower layers (e.g. ``solvers/amg.py``) look engines up lazily so importing
+``repro.api`` anywhere in the process is sufficient.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+@dataclass(frozen=True)
+class EngineSpec:
+    kind: str
+    name: str
+    fn: Callable
+    doc: str = ""
+    aliases: tuple = field(default_factory=tuple)
+
+
+_ENGINES: dict[tuple[str, str], EngineSpec] = {}
+_ALIASES: dict[tuple[str, str], str] = {}
+
+
+def register_engine(kind: str, name: str, *, aliases: tuple = (),
+                    doc: str = "") -> Callable:
+    """Decorator registering ``fn`` as the engine ``name`` for pipeline
+    ``kind``.  ``aliases`` keep legacy spellings routable (e.g. the old
+    ``AGGREGATORS`` keys ``mis2_basic``/``mis2_agg``)."""
+
+    def deco(fn: Callable) -> Callable:
+        key = (kind, name)
+        if key in _ENGINES:
+            raise ValueError(f"engine {key} already registered")
+        _ENGINES[key] = EngineSpec(kind, name, fn, doc, tuple(aliases))
+        for alias in aliases:
+            _ALIASES[(kind, alias)] = name
+        return fn
+
+    return deco
+
+
+def _canonical(kind: str, name: str) -> str:
+    return _ALIASES.get((kind, name), name)
+
+
+def get_engine(kind: str, name: str) -> Callable:
+    """Resolve an engine callable; raises with the available names listed."""
+    spec = _ENGINES.get((kind, _canonical(kind, name)))
+    if spec is None:
+        avail = ", ".join(sorted(n for k, n in _ENGINES if k == kind)) or "none"
+        raise ValueError(
+            f"unknown {kind!r} engine {name!r} (available: {avail})")
+    return spec.fn
+
+
+def get_engine_spec(kind: str, name: str) -> EngineSpec:
+    get_engine(kind, name)  # raise uniformly on unknown names
+    return _ENGINES[(kind, _canonical(kind, name))]
+
+
+def list_engines(kind: Optional[str] = None) -> dict[str, list[str]]:
+    """Mapping kind -> sorted engine names (optionally one kind only)."""
+    out: dict[str, list[str]] = {}
+    for k, n in _ENGINES:
+        if kind is None or k == kind:
+            out.setdefault(k, []).append(n)
+    for names in out.values():
+        names.sort()
+    return out

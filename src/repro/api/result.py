@@ -1,0 +1,151 @@
+"""Common Result protocol shared by every pipeline in ``repro.api``.
+
+Every facade call returns a :class:`Result` subclass with the same core
+contract:
+
+* ``payload``      the primary output as a **host** ``np.ndarray`` (the
+  seed mixed ``np.ndarray``/``jnp.ndarray`` depending on engine; the
+  protocol normalizes in ``__post_init__`` so downstream numpy code never
+  trips on device arrays),
+* ``iterations``   fixed-point / setup iteration count,
+* ``converged``    whether the pipeline reached its fixed point,
+* ``wall_time_s``  facade-measured wall time of the engine call,
+* ``digest``       a determinism digest of the payload — two runs (or two
+  engines) produced bit-identical output iff their digests match, which is
+  the paper's portability claim made checkable in one string compare.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+
+def determinism_digest(arr: np.ndarray) -> str:
+    """Stable 16-hex digest over dtype, shape and raw bytes."""
+    arr = np.ascontiguousarray(np.asarray(arr))
+    h = hashlib.sha256()
+    h.update(str(arr.dtype).encode())
+    h.update(str(arr.shape).encode())
+    h.update(arr.tobytes())
+    return h.hexdigest()[:16]
+
+
+@runtime_checkable
+class ResultLike(Protocol):
+    payload: np.ndarray
+    iterations: int
+    converged: bool
+    wall_time_s: float
+    digest: str
+
+
+@dataclass
+class Result:
+    payload: np.ndarray
+    iterations: int = 0
+    converged: bool = True
+    wall_time_s: float = 0.0
+    digest: str = ""
+
+    def __post_init__(self):
+        # protocol guarantee: host numpy payload, digest always present
+        self.payload = np.asarray(self.payload)
+        if not self.digest:
+            self.digest = determinism_digest(self.payload)
+
+
+@dataclass
+class Mis2Result(Result):
+    """Distance-2 (or -k) MIS: ``payload`` is the bool membership mask."""
+
+    engine: str = ""
+
+    @property
+    def in_set(self) -> np.ndarray:
+        return self.payload
+
+    @property
+    def size(self) -> int:
+        return int(self.payload.sum())
+
+
+@dataclass
+class ColoringResult(Result):
+    """Distance-1 coloring: ``payload`` is the int32 color per vertex."""
+
+    num_colors: int = 0
+
+    @property
+    def colors(self) -> np.ndarray:
+        return self.payload
+
+    @property
+    def rounds(self) -> int:
+        return self.iterations
+
+
+@dataclass
+class AggregationResult(Result):
+    """MIS-2 coarsening: ``payload`` is the int32 aggregate label per vertex."""
+
+    num_aggregates: int = 0
+    roots: np.ndarray | None = None
+    phase: np.ndarray | None = None
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.roots is not None:
+            self.roots = np.asarray(self.roots)
+        if self.phase is not None:
+            self.phase = np.asarray(self.phase)
+
+    @property
+    def labels(self) -> np.ndarray:
+        return self.payload
+
+    @property
+    def mis2_iterations(self) -> int:
+        return self.iterations
+
+    @property
+    def coarsening_ratio(self) -> float:
+        return len(self.payload) / max(1, self.num_aggregates)
+
+
+@dataclass
+class PartitionResult(Result):
+    """Multilevel partition: ``payload`` is the int32 part id per vertex."""
+
+    num_parts: int = 0
+    edge_cut: int = 0
+    levels: int = 0
+    history: list = field(default_factory=list)
+
+    @property
+    def parts(self) -> np.ndarray:
+        return self.payload
+
+
+@dataclass
+class AmgSetup(Result):
+    """AMG hierarchy setup: ``payload`` is the [levels, 2] (n, nnz) table;
+    the usable hierarchy hangs off ``.hierarchy`` / ``.as_precond()``."""
+
+    hierarchy: object | None = None
+    aggregation: str = ""
+    setup_seconds: float = 0.0
+    aggregation_seconds: float = 0.0
+
+    @property
+    def level_sizes(self) -> list:
+        return [tuple(int(x) for x in row) for row in self.payload]
+
+    @property
+    def num_levels(self) -> int:
+        return int(self.payload.shape[0])
+
+    def as_precond(self):
+        return self.hierarchy.as_precond()

@@ -22,6 +22,7 @@ from .mis2 import (
     mis2_compacted,
     mis2_dense,
     mis2_dense_jittable,
+    run_mis2,
 )
 from .misk import mis_k
 from .partition import PartitionResult, edge_cut, partition
@@ -34,7 +35,7 @@ __all__ = [
     "PRIORITY_FNS", "priorities_fixed", "priorities_xorshift",
     "priorities_xorshift_star",
     "ABLATION_CHAIN", "Mis2Options", "Mis2Result", "mis2", "mis2_compacted",
-    "mis2_dense", "mis2_dense_jittable",
+    "mis2_dense", "mis2_dense_jittable", "run_mis2",
     "mis_k",
     "PartitionResult", "edge_cut", "partition",
     "IN", "OUT", "id_bits", "is_undecided", "pack",

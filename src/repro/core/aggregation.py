@@ -22,8 +22,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..graphs.csr import CSRGraph, ELLGraph, csr_to_ell_graph
-from .mis2 import Mis2Options, mis2
+from .._compat import warn_deprecated
+from ..graphs.csr import ELLGraph
+from ..graphs.handle import as_graph
+from .mis2 import Mis2Options, run_mis2
 
 INT32_MAX = np.int32(2**31 - 1)
 
@@ -35,6 +37,13 @@ class AggregationResult:
     roots: np.ndarray        # bool [V] (phase-1 + phase-2 roots)
     phase: np.ndarray        # uint8 [V]: phase that aggregated each vertex
     mis2_iterations: int     # total MIS-2 iterations spent
+    converged: bool = True   # every underlying MIS-2 reached its fixed point
+
+    def __post_init__(self):
+        # Result-protocol guarantee: host numpy payloads on every engine.
+        self.labels = np.asarray(self.labels)
+        self.roots = np.asarray(self.roots)
+        self.phase = np.asarray(self.phase)
 
     @property
     def coarsening_ratio(self) -> float:
@@ -120,10 +129,12 @@ def _labels_from_roots(ell: ELLGraph, roots: np.ndarray):
 # Algorithm 2
 # ---------------------------------------------------------------------------
 
-def aggregate_basic(graph, options: Mis2Options = Mis2Options(),
-                    engine: str = "compacted") -> AggregationResult:
-    ell = graph if isinstance(graph, ELLGraph) else csr_to_ell_graph(graph)
-    r = mis2(ell, options=options, engine=engine)
+def _aggregate_basic_impl(graph, options: Mis2Options = Mis2Options(),
+                          engine: str = "compacted",
+                          interpret=None) -> AggregationResult:
+    gh = as_graph(graph)
+    ell = gh.ell
+    r = run_mis2(gh, options=options, engine=engine, interpret=interpret)
     labels, nagg = _labels_from_roots(ell, r.in_set)
     phase = np.where(labels >= 0, 1, 0).astype(np.uint8)
 
@@ -138,31 +149,36 @@ def aggregate_basic(graph, options: Mis2Options = Mis2Options(),
         rounds += 1
     labels, nagg = _finalize_singletons(labels, nagg, phase)
     return AggregationResult(labels.astype(np.int32), nagg, r.in_set, phase,
-                             r.iterations)
+                             r.iterations, r.converged)
 
 
 # ---------------------------------------------------------------------------
 # Algorithm 3
 # ---------------------------------------------------------------------------
 
-def aggregate_two_phase(graph, options: Mis2Options = Mis2Options(),
-                        engine: str = "compacted",
-                        min_secondary_neighbors: int = 2) -> AggregationResult:
-    ell = graph if isinstance(graph, ELLGraph) else csr_to_ell_graph(graph)
+def _aggregate_two_phase_impl(graph, options: Mis2Options = Mis2Options(),
+                              engine: str = "compacted",
+                              min_secondary_neighbors: int = 2,
+                              interpret=None) -> AggregationResult:
+    gh = as_graph(graph)
+    ell = gh.ell
     v = ell.num_vertices
 
     # Phase 1: MIS-2 roots + direct neighbors
-    r1 = mis2(ell, options=options, engine=engine)
+    r1 = run_mis2(gh, options=options, engine=engine, interpret=interpret)
     labels, nagg = _labels_from_roots(ell, r1.in_set)
     phase = np.where(labels >= 0, 1, 0).astype(np.uint8)
     total_iters = r1.iterations
+    converged = r1.converged
 
     # Phase 2: MIS-2 on the induced unaggregated subgraph
     unagg = labels < 0
     roots2 = np.zeros(v, dtype=bool)
     if unagg.any():
-        r2 = mis2(ell, active=jnp.asarray(unagg), options=options, engine=engine)
+        r2 = run_mis2(gh, active=jnp.asarray(unagg), options=options,
+                      engine=engine, interpret=interpret)
         total_iters += r2.iterations
+        converged = converged and r2.converged
         n_unagg_nbrs = np.asarray(_count_unagg_neighbors(
             ell.neighbors, ell.mask, jnp.asarray(labels)))
         roots2 = r2.in_set & (n_unagg_nbrs >= min_secondary_neighbors)
@@ -189,7 +205,8 @@ def aggregate_two_phase(graph, options: Mis2Options = Mis2Options(),
 
     labels, nagg = _finalize_singletons(labels, nagg, phase)
     return AggregationResult(labels.astype(np.int32), nagg,
-                             r1.in_set | roots2, phase, total_iters)
+                             r1.in_set | roots2, phase, total_iters,
+                             converged)
 
 
 def _finalize_singletons(labels: np.ndarray, nagg: int, phase: np.ndarray):
@@ -207,11 +224,8 @@ def _finalize_singletons(labels: np.ndarray, nagg: int, phase: np.ndarray):
 # host-sequential reference (Table V "Serial Agg" stand-in)
 # ---------------------------------------------------------------------------
 
-def aggregate_serial_greedy(graph) -> AggregationResult:
-    csr = graph
-    if isinstance(graph, ELLGraph):
-        from ..graphs.csr import ell_to_csr_graph
-        csr = ell_to_csr_graph(graph)
+def _aggregate_serial_greedy_impl(graph) -> AggregationResult:
+    csr = as_graph(graph).csr
     indptr = np.asarray(csr.indptr)
     indices = np.asarray(csr.indices)
     v = csr.num_vertices
@@ -240,3 +254,32 @@ def aggregate_serial_greedy(graph) -> AggregationResult:
                 nagg += 1
     phase = np.ones(v, dtype=np.uint8)
     return AggregationResult(labels, nagg, roots, phase, 0)
+
+
+# ---------------------------------------------------------------------------
+# legacy public entry points (deprecated — use repro.api.coarsen)
+# ---------------------------------------------------------------------------
+
+def aggregate_basic(graph, options: Mis2Options = Mis2Options(),
+                    engine: str = "compacted") -> AggregationResult:
+    """Deprecated entry point — use ``repro.api.coarsen(method="basic")``."""
+    warn_deprecated("repro.core.aggregation.aggregate_basic",
+                    'repro.api.coarsen(..., method="basic")')
+    return _aggregate_basic_impl(graph, options, engine)
+
+
+def aggregate_two_phase(graph, options: Mis2Options = Mis2Options(),
+                        engine: str = "compacted",
+                        min_secondary_neighbors: int = 2) -> AggregationResult:
+    """Deprecated entry point — use ``repro.api.coarsen(method="two_phase")``."""
+    warn_deprecated("repro.core.aggregation.aggregate_two_phase",
+                    'repro.api.coarsen(..., method="two_phase")')
+    return _aggregate_two_phase_impl(graph, options, engine,
+                                     min_secondary_neighbors)
+
+
+def aggregate_serial_greedy(graph) -> AggregationResult:
+    """Deprecated entry point — use ``repro.api.coarsen(method="serial")``."""
+    warn_deprecated("repro.core.aggregation.aggregate_serial_greedy",
+                    'repro.api.coarsen(..., method="serial")')
+    return _aggregate_serial_greedy_impl(graph)

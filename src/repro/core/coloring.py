@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..graphs.csr import ELLGraph, csr_to_ell_graph
+from .._compat import warn_deprecated
+from ..graphs.handle import as_ell_graph
 from .hashing import priorities_xorshift_star
 from .tuples import id_bits, pack
 
@@ -27,6 +28,10 @@ class ColoringResult:
     colors: np.ndarray      # int32 [V], in [0, num_colors)
     num_colors: int
     rounds: int
+
+    def __post_init__(self):
+        # Result-protocol guarantee: host numpy payloads on every engine.
+        self.colors = np.asarray(self.colors)
 
 
 @jax.jit
@@ -71,8 +76,8 @@ def _lowest_set_bit(x: jnp.ndarray) -> jnp.ndarray:
     return exp.astype(jnp.int32)
 
 
-def color_graph(graph, max_rounds: int = 256) -> ColoringResult:
-    ell = graph if isinstance(graph, ELLGraph) else csr_to_ell_graph(graph)
+def _color_graph_impl(graph, max_rounds: int = 256) -> ColoringResult:
+    ell = as_ell_graph(graph)
     v = ell.num_vertices
     colors = jnp.full(v, -1, dtype=jnp.int32)
     rnd = 0
@@ -90,9 +95,15 @@ def color_graph(graph, max_rounds: int = 256) -> ColoringResult:
     return ColoringResult(c, num, rnd)
 
 
+def color_graph(graph, max_rounds: int = 256) -> ColoringResult:
+    """Deprecated entry point — use :func:`repro.api.color`."""
+    warn_deprecated("repro.core.coloring.color_graph", "repro.api.color")
+    return _color_graph_impl(graph, max_rounds)
+
+
 def check_coloring(graph, colors: np.ndarray) -> bool:
     """Validity: no two adjacent distinct vertices share a color."""
-    ell = graph if isinstance(graph, ELLGraph) else csr_to_ell_graph(graph)
+    ell = as_ell_graph(graph)
     nbrs = np.asarray(ell.neighbors)
     mask = np.asarray(ell.mask)
     v = nbrs.shape[0]

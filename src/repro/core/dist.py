@@ -29,11 +29,30 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..graphs.csr import ELLGraph, csr_to_ell_graph
+from ..graphs.csr import ELLGraph
+from ..graphs.handle import as_ell_graph
 from .hashing import PRIORITY_FNS
 from .tuples import IN, OUT, id_bits, is_undecided, pack
 
+try:                                   # jax >= 0.5 promotes it to jax.*
+    _shard_map_raw = jax.shard_map
+    _NOREP_KWARGS = ({"check_vma": False}, {"check_rep": False}, {})
+except AttributeError:                 # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_raw
+    # the while_loop fixpoint has no replication rule in 0.4.x shard_map
+    _NOREP_KWARGS = ({"check_rep": False}, {})
+
 U32MAX = np.uint32(0xFFFFFFFF)
+
+
+def _shard_map(fn, *, mesh, in_specs, out_specs):
+    for kw in _NOREP_KWARGS:
+        try:
+            return _shard_map_raw(fn, mesh=mesh, in_specs=in_specs,
+                                  out_specs=out_specs, **kw)
+        except TypeError:              # kwarg renamed across jax versions
+            continue
+    raise RuntimeError("no compatible shard_map signature found")
 
 
 def pad_graph_for_mesh(ell: ELLGraph, num_devices: int):
@@ -119,7 +138,7 @@ def mis2_distributed(graph, mesh: Mesh | None = None, axis: str | None = None,
 
     Returns (in_set bool [V], iterations). Bit-identical to mis2_dense.
     """
-    ell = graph if isinstance(graph, ELLGraph) else csr_to_ell_graph(graph)
+    ell = as_ell_graph(graph)
     if mesh is None:
         devs = np.array(jax.devices())
         mesh = Mesh(devs, ("x",))
@@ -151,8 +170,8 @@ def mis2_distributed(graph, mesh: Mesh | None = None, axis: str | None = None,
         fn_core = functools.partial(
             _mis2_local_fixpoint, axis=axis, total_v=vp_total,
             priority=priority, max_iters=max_iters)
-    fn = jax.shard_map(fn_core, mesh=mesh, in_specs=tuple(in_specs),
-                       out_specs=(spec_rows, P(axis)))
+    fn = _shard_map(fn_core, mesh=mesh, in_specs=tuple(in_specs),
+                    out_specs=(spec_rows, P(axis)))
     t, iters = fn(*args)
     t_np = np.asarray(t)[:v]
     return t_np == np.uint32(IN), int(np.asarray(iters)[0])
@@ -163,7 +182,7 @@ def lower_mis2_distributed(ell_spec, mesh: Mesh, axis: str,
     """Dry-run hook: lower+compile the distributed fixpoint from
     ShapeDtypeStructs (no allocation). Returns the lowered object."""
     spec_rows = P(axis)
-    fn = jax.shard_map(
+    fn = _shard_map(
         functools.partial(_mis2_local_fixpoint, axis=axis,
                           total_v=ell_spec.shape[0], priority=priority,
                           max_iters=max_iters),

@@ -40,7 +40,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..graphs.csr import CSRGraph, ELLGraph, csr_to_ell_graph, ell_to_csr_graph
+from .._compat import warn_deprecated
+from ..graphs.handle import as_graph
 from .hashing import PRIORITY_FNS
 from .tuples import IN, OUT, effective_priority, id_bits, is_undecided, pack
 
@@ -57,7 +58,12 @@ class Mis2Options:
     packed: bool = True                 # §V-C
     layout: str = "ell"                 # ell | csr_segment  (§V-D)
     max_iters: int = MAX_ITERS_DEFAULT
-    use_pallas: bool = False            # route hot loops through kernels/
+    use_pallas: bool = False            # deprecated: use engine="pallas"
+
+    def __post_init__(self):
+        if self.use_pallas:
+            warn_deprecated("Mis2Options(use_pallas=True)",
+                            'repro.api.mis2(..., engine="pallas")')
 
 
 @dataclass
@@ -65,6 +71,11 @@ class Mis2Result:
     in_set: np.ndarray        # bool [V]
     iterations: int
     converged: bool
+
+    def __post_init__(self):
+        # Result-protocol guarantee: payloads are host numpy arrays
+        # regardless of which engine produced them.
+        self.in_set = np.asarray(self.in_set)
 
     @property
     def size(self) -> int:
@@ -117,9 +128,9 @@ def mis2_dense_jittable(neighbors: jnp.ndarray, active: jnp.ndarray,
     return t, iters
 
 
-def mis2_dense(graph, active: Optional[jnp.ndarray] = None,
-               options: Mis2Options = Mis2Options()) -> Mis2Result:
-    ell = graph if isinstance(graph, ELLGraph) else csr_to_ell_graph(graph)
+def _mis2_dense_impl(graph, active: Optional[jnp.ndarray] = None,
+                     options: Mis2Options = Mis2Options()) -> Mis2Result:
+    ell = as_graph(graph).ell
     v = ell.num_vertices
     if active is None:
         active = jnp.ones(v, dtype=bool)
@@ -311,27 +322,21 @@ def _decide_unpacked_csr(ts, tr, ti, ms, mr, mi, wl1_mask,
     return jnp.where(wl1_mask, news, ts)
 
 
-def _make_csr_edges(graph: CSRGraph):
-    indptr = np.asarray(graph.indptr)
-    indices = np.asarray(graph.indices)
-    v = len(indptr) - 1
-    rows = np.repeat(np.arange(v, dtype=np.int32), np.diff(indptr))
-    return jnp.asarray(rows), jnp.asarray(indices.astype(np.int32))
-
-
 # ===========================================================================
 # compacted / ablation driver
 # ===========================================================================
 
-def mis2_compacted(graph, active: Optional[np.ndarray] = None,
-                   options: Mis2Options = Mis2Options()) -> Mis2Result:
+def _mis2_compacted_impl(graph, active: Optional[np.ndarray] = None,
+                         options: Mis2Options = Mis2Options(), *,
+                         pallas: Optional[bool] = None,
+                         interpret: Optional[bool] = None) -> Mis2Result:
+    gh = as_graph(graph)
     if options.layout == "ell":
-        ell = graph if isinstance(graph, ELLGraph) else csr_to_ell_graph(graph)
+        ell = gh.ell
         v = ell.num_vertices
     elif options.layout == "csr_segment":
-        csr = ell_to_csr_graph(graph) if isinstance(graph, ELLGraph) else graph
-        edge_rows, edge_cols = _make_csr_edges(csr)
-        v = csr.num_vertices
+        edge_rows, edge_cols = gh.csr_edges
+        v = gh.num_vertices
     else:
         raise ValueError(options.layout)
 
@@ -339,8 +344,9 @@ def mis2_compacted(graph, active: Optional[np.ndarray] = None,
     active_j = jnp.asarray(active_np)
     b = id_bits(v)
 
+    use_pallas = options.use_pallas if pallas is None else pallas
     minprop_ops = None
-    if options.use_pallas:
+    if use_pallas:
         if not (options.layout == "ell" and options.packed):
             raise ValueError("pallas path requires packed tuples + ELL layout")
         from ..kernels.minprop_ell import ops as minprop_ops  # noqa: F811
@@ -373,9 +379,10 @@ def mis2_compacted(graph, active: Optional[np.ndarray] = None,
             if options.layout == "ell":
                 if minprop_ops is not None:
                     m = minprop_ops.refresh_columns(t, m, wl2, ell.neighbors,
-                                                    len(wl2_np))
+                                                    len(wl2_np),
+                                                    interpret=interpret)
                     t = minprop_ops.decide(t, m, wl1, ell.neighbors, active_j,
-                                           len(wl1_np))
+                                           len(wl1_np), interpret=interpret)
                 else:
                     m = _refresh_cols_packed_ell(t, m, wl2, ell.neighbors)
                     t = _decide_packed_ell(t, m, wl1, ell.neighbors, active_j)
@@ -413,21 +420,51 @@ def mis2_compacted(graph, active: Optional[np.ndarray] = None,
 
 
 # ===========================================================================
-# public API
+# engine dispatch (internal, warning-free) + legacy public entry points
 # ===========================================================================
+
+def run_mis2(graph, active=None, options: Optional[Mis2Options] = None,
+             engine: str = "compacted",
+             interpret: Optional[bool] = None) -> Mis2Result:
+    """Warning-free engine dispatch used by ``repro.api`` and by the other
+    core pipelines (aggregation, partitioning).  Engines ``'compacted'``
+    (§V-B worklists), ``'dense'`` (single jitted ``while_loop``) and
+    ``'pallas'`` (compacted with the Pallas min-propagation kernels)
+    produce bit-identical sets for equal options."""
+    options = Mis2Options() if options is None else options
+    if engine == "dense":
+        return _mis2_dense_impl(graph, active, options)
+    if engine == "compacted":
+        return _mis2_compacted_impl(graph, active, options,
+                                    interpret=interpret)
+    if engine == "pallas":
+        return _mis2_compacted_impl(graph, active, options, pallas=True,
+                                    interpret=interpret)
+    raise ValueError(
+        f"unknown mis2 engine {engine!r} (dense | compacted | pallas)")
+
 
 def mis2(graph, active=None, options: Mis2Options = Mis2Options(),
          engine: str = "compacted") -> Mis2Result:
-    """Compute a distance-2 maximal independent set (deterministic).
+    """Deprecated entry point — use :func:`repro.api.mis2`."""
+    warn_deprecated("repro.core.mis2.mis2", "repro.api.mis2")
+    return run_mis2(graph, active, options, engine)
 
-    ``engine='compacted'`` (default; §V-B worklists) or ``'dense'`` (single
-    jitted ``while_loop``).  Both produce identical sets for equal options.
-    """
-    if engine == "dense":
-        return mis2_dense(graph, active, options)
-    if engine == "compacted":
-        return mis2_compacted(graph, active, options)
-    raise ValueError(engine)
+
+def mis2_dense(graph, active: Optional[jnp.ndarray] = None,
+               options: Mis2Options = Mis2Options()) -> Mis2Result:
+    """Deprecated entry point — use ``repro.api.mis2(..., engine="dense")``."""
+    warn_deprecated("repro.core.mis2.mis2_dense",
+                    'repro.api.mis2(..., engine="dense")')
+    return _mis2_dense_impl(graph, active, options)
+
+
+def mis2_compacted(graph, active: Optional[np.ndarray] = None,
+                   options: Mis2Options = Mis2Options()) -> Mis2Result:
+    """Deprecated entry point — use ``repro.api.mis2`` (default engine)."""
+    warn_deprecated("repro.core.mis2.mis2_compacted",
+                    'repro.api.mis2(..., engine="compacted")')
+    return _mis2_compacted_impl(graph, active, options)
 
 
 # Fig. 2 cumulative ablation chain (benchmarks/fig2_optimizations.py)

@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..graphs.csr import ELLGraph, csr_to_ell_graph
+from .._compat import warn_deprecated
+from ..graphs.handle import as_ell_graph
 from .hashing import PRIORITY_FNS
 from .mis2 import Mis2Result
 from .tuples import IN, OUT, id_bits, is_undecided, pack
@@ -58,13 +59,21 @@ def _misk_fixpoint(neighbors, k: int, priority: str, max_iters: int):
     return t, iters
 
 
-def mis_k(graph, k: int = 2, priority: str = "xorshift_star",
-          max_iters: int = 256) -> Mis2Result:
-    """Distance-k maximal independent set (deterministic, jitted)."""
+def _mis_k_impl(graph, k: int = 2, priority: str = "xorshift_star",
+                max_iters: int = 256) -> Mis2Result:
     if k < 1:
         raise ValueError("k >= 1")
-    ell = graph if isinstance(graph, ELLGraph) else csr_to_ell_graph(graph)
+    ell = as_ell_graph(graph)
     t, iters = _misk_fixpoint(ell.neighbors, k, priority, max_iters)
     t_np = np.asarray(t)
     und = (t_np != np.uint32(IN)) & (t_np != np.uint32(OUT))
     return Mis2Result(t_np == np.uint32(IN), int(iters), not und.any())
+
+
+def mis_k(graph, k: int = 2, priority: str = "xorshift_star",
+          max_iters: int = 256) -> Mis2Result:
+    """Distance-k maximal independent set (deterministic, jitted).
+
+    Deprecated entry point — use :func:`repro.api.misk`."""
+    warn_deprecated("repro.core.misk.mis_k", "repro.api.misk")
+    return _mis_k_impl(graph, k, priority, max_iters)

@@ -19,9 +19,11 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from .._compat import warn_deprecated
 from ..graphs.csr import CSRGraph
+from ..graphs.handle import as_graph
 from ..graphs.ops import coarse_graph_from_labels
-from .aggregation import aggregate_two_phase
+from .aggregation import _aggregate_two_phase_impl
 from .mis2 import Mis2Options
 
 
@@ -32,17 +34,23 @@ class PartitionResult:
     edge_cut: int
     levels: int
     history: list = field(default_factory=list)   # (V, E) per level
+    converged: bool = True   # every per-level MIS-2 reached its fixed point
+
+    def __post_init__(self):
+        # Result-protocol guarantee: host numpy payloads on every engine.
+        self.parts = np.asarray(self.parts)
 
 
-def _edge_list(g: CSRGraph):
-    indptr = np.asarray(g.indptr)
-    indices = np.asarray(g.indices)
+def _edge_list(g):
+    csr = as_graph(g).csr
+    indptr = np.asarray(csr.indptr)
+    indices = np.asarray(csr.indices)
     rows = np.repeat(np.arange(len(indptr) - 1), np.diff(indptr))
     keep = rows != indices
     return rows[keep], indices[keep]
 
 
-def edge_cut(g: CSRGraph, parts: np.ndarray) -> int:
+def edge_cut(g, parts: np.ndarray) -> int:
     r, c = _edge_list(g)
     return int((parts[r] != parts[c]).sum()) // 2
 
@@ -118,26 +126,34 @@ def _refine(g: CSRGraph, parts: np.ndarray, k: int, w: np.ndarray,
     return parts
 
 
-def partition(g: CSRGraph, num_parts: int, coarse_target: int | None = None,
-              options: Mis2Options = Mis2Options()) -> PartitionResult:
+def _partition_impl(g, num_parts: int, coarse_target: int | None = None,
+                    options: Mis2Options = Mis2Options(),
+                    engine: str = "compacted",
+                    interpret=None) -> PartitionResult:
+    gh = as_graph(g)
+    g = gh.csr
     coarse_target = coarse_target or max(16 * num_parts, 256)
     levels = []
-    graphs = [g]
+    graphs = [gh]
     weights = [np.ones(g.num_vertices, dtype=np.int64)]
     label_maps = []
-    cur = g
+    cur = gh
+    converged = True
     while cur.num_vertices > coarse_target and len(levels) < 20:
-        agg = aggregate_two_phase(cur, options=options)
+        agg = _aggregate_two_phase_impl(cur, options=options, engine=engine,
+                                        interpret=interpret)
+        converged = converged and agg.converged
         if agg.num_aggregates >= cur.num_vertices:   # no progress
             break
         label_maps.append(agg.labels)
         weights.append(np.bincount(agg.labels, weights=weights[-1],
                                    minlength=agg.num_aggregates).astype(np.int64))
-        cur = coarse_graph_from_labels(cur, agg.labels, agg.num_aggregates)
+        cur = as_graph(coarse_graph_from_labels(cur.csr, agg.labels,
+                                                agg.num_aggregates))
         graphs.append(cur)
         levels.append((cur.num_vertices, cur.num_entries))
 
-    parts = _greedy_coarse_partition(cur, num_parts, weights[-1])
+    parts = _greedy_coarse_partition(cur.csr, num_parts, weights[-1])
     parts = _refine(cur, parts, num_parts, weights[-1])
     # project back up
     for labels, fine_g, fine_w in zip(reversed(label_maps), reversed(graphs[:-1]),
@@ -146,4 +162,12 @@ def partition(g: CSRGraph, num_parts: int, coarse_target: int | None = None,
         parts = _refine(fine_g, parts, num_parts, fine_w)
 
     return PartitionResult(parts.astype(np.int32), num_parts,
-                           edge_cut(g, parts), len(label_maps) + 1, levels)
+                           edge_cut(g, parts), len(label_maps) + 1, levels,
+                           converged)
+
+
+def partition(g, num_parts: int, coarse_target: int | None = None,
+              options: Mis2Options = Mis2Options()) -> PartitionResult:
+    """Deprecated entry point — use :func:`repro.api.partition`."""
+    warn_deprecated("repro.core.partition.partition", "repro.api.partition")
+    return _partition_impl(g, num_parts, coarse_target, options)

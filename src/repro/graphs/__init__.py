@@ -13,6 +13,7 @@ from .csr import (
     ensure_self_loops,
     symmetrize,
 )
+from .handle import Graph, as_csr_graph, as_ell_graph, as_graph
 from .generators import (
     elasticity3d,
     laplace3d,
@@ -35,6 +36,7 @@ from .ops import (
 )
 
 __all__ = [
+    "Graph", "as_graph", "as_ell_graph", "as_csr_graph",
     "BucketedELL", "CSRGraph", "CSRMatrix", "ELLGraph", "ELLMatrix",
     "csr_from_coo", "csr_to_bucketed_ell", "csr_to_ell_graph", "csr_to_ell_matrix", "degrees",
     "ell_to_csr_graph", "ensure_self_loops", "symmetrize",

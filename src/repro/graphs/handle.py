@@ -1,0 +1,229 @@
+"""The ``Graph`` handle: one object, every structural format, computed once.
+
+Every pipeline in this repo (MIS-2, MIS-k, coloring, aggregation,
+partitioning, AMG, cluster-GS) consumes the same graph in one of a few
+layouts: CSR for host-side structure walks and segment reductions, ELL for
+lane-aligned device gathers, COO edge lists for ``csr_segment`` kernels,
+degree-bucketed ELL for skewed graphs.  Before the facade existed each
+entry point re-derived its layout per call (``csr_to_ell_graph`` on every
+``mis2``); the handle makes conversion a cached, observable, setup-time
+event — the paper's setup/solve split, enforced by the API.
+
+The handle is the canonical argument type of ``repro.api``; all legacy
+entry points also accept it (they coerce through :func:`as_graph`, so a
+bare ``CSRGraph`` still works and simply gets a fresh, uncached handle).
+
+Conversion counting: ``graph.conversions`` maps conversion name ->
+number of times the *work* was actually performed.  Tests assert a second
+``.ell`` access is a cache hit (count stays 1).
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable
+
+import jax
+import numpy as np
+
+from .csr import (
+    BucketedELL,
+    CSRGraph,
+    CSRMatrix,
+    ELLGraph,
+    ELLMatrix,
+    csr_to_bucketed_ell,
+    csr_to_ell_graph,
+    csr_to_ell_matrix,
+    ell_to_csr_graph,
+)
+
+_STRUCTS = (CSRGraph, CSRMatrix, ELLGraph, ELLMatrix)
+
+
+class Graph:
+    """Cached-format handle around one immutable graph (or square matrix).
+
+    Construct from any structural container::
+
+        g = Graph(laplace3d(32))          # CSRMatrix (keeps values)
+        g = Graph(csr_graph)              # CSRGraph
+        g = Graph.from_coo(rows, cols, n) # COO triples
+
+    Formats are materialized lazily and cached: ``g.ell``, ``g.csr``,
+    ``g.csr_matrix``, ``g.ell_matrix``, ``g.csr_edges``, ``g.bucketed()``.
+    """
+
+    def __init__(self, structure):
+        if isinstance(structure, Graph):
+            # share the cache: a handle of a handle is the same handle state
+            self._cache = structure._cache
+            self._counts = structure._counts
+            return
+        if not isinstance(structure, _STRUCTS):
+            raise TypeError(
+                f"Graph() expects CSRGraph/CSRMatrix/ELLGraph/ELLMatrix/Graph, "
+                f"got {type(structure).__name__}"
+            )
+        self._cache: dict[str, Any] = {}
+        self._counts: dict[str, int] = {}
+        if isinstance(structure, CSRGraph):
+            self._cache["csr"] = structure
+        elif isinstance(structure, CSRMatrix):
+            self._cache["csr_matrix"] = structure
+            self._cache["csr"] = structure.graph
+        elif isinstance(structure, ELLGraph):
+            self._cache["ell"] = structure
+        else:  # ELLMatrix
+            self._cache["ell_matrix"] = structure
+            self._cache["ell"] = structure.graph
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def from_coo(cls, rows, cols, num_vertices: int, vals=None) -> "Graph":
+        from .csr import csr_from_coo
+
+        return cls(csr_from_coo(np.asarray(rows), np.asarray(cols),
+                                num_vertices, vals))
+
+    # -- cache plumbing -----------------------------------------------------
+
+    def _converted(self, name: str) -> None:
+        self._counts[name] = self._counts.get(name, 0) + 1
+
+    @property
+    def conversions(self) -> dict[str, int]:
+        """Times each conversion's work actually ran (cache hits excluded)."""
+        return dict(self._counts)
+
+    # -- structural formats -------------------------------------------------
+
+    @property
+    def has_values(self) -> bool:
+        return "csr_matrix" in self._cache or "ell_matrix" in self._cache
+
+    @property
+    def csr(self) -> CSRGraph:
+        if "csr" not in self._cache:
+            self._converted("ell_to_csr")
+            self._cache["csr"] = ell_to_csr_graph(self._cache["ell"])
+        return self._cache["csr"]
+
+    @property
+    def ell(self) -> ELLGraph:
+        if "ell" not in self._cache:
+            self._converted("csr_to_ell")
+            self._cache["ell"] = csr_to_ell_graph(self.csr)
+        return self._cache["ell"]
+
+    @property
+    def csr_matrix(self) -> CSRMatrix:
+        if "csr_matrix" not in self._cache:
+            raise ValueError("this Graph carries structure only (no values)")
+        return self._cache["csr_matrix"]
+
+    @property
+    def ell_matrix(self) -> ELLMatrix:
+        if "ell_matrix" not in self._cache:
+            self._converted("csr_to_ell_matrix")
+            self._cache["ell_matrix"] = csr_to_ell_matrix(self.csr_matrix)
+        return self._cache["ell_matrix"]
+
+    @property
+    def csr_edges(self):
+        """COO edge list ``(edge_rows, edge_cols)`` as device int32 arrays —
+        the ``csr_segment`` layout consumed by segment-reduction kernels."""
+        if "csr_edges" not in self._cache:
+            self._converted("csr_edges")
+            import jax.numpy as jnp
+
+            indptr = np.asarray(self.csr.indptr)
+            indices = np.asarray(self.csr.indices)
+            rows = np.repeat(np.arange(len(indptr) - 1, dtype=np.int32),
+                             np.diff(indptr))
+            self._cache["csr_edges"] = (jnp.asarray(rows),
+                                        jnp.asarray(indices.astype(np.int32)))
+        return self._cache["csr_edges"]
+
+    def bucketed(self, boundaries: Iterable[int] = (8, 32, 128)) -> BucketedELL:
+        key = f"bucketed{tuple(boundaries)}"
+        if key not in self._cache:
+            self._converted("csr_to_bucketed_ell")
+            self._cache[key] = csr_to_bucketed_ell(self.csr, tuple(boundaries))
+        return self._cache[key]
+
+    # -- stats --------------------------------------------------------------
+
+    @property
+    def num_vertices(self) -> int:
+        if "ell" in self._cache:
+            return self._cache["ell"].num_vertices
+        return self.csr.num_vertices
+
+    @property
+    def num_entries(self) -> int:
+        if "csr" not in self._cache:   # ELL-seeded: count mask, don't convert
+            return int(np.asarray(self._cache["ell"].mask).sum())
+        return self.csr.num_entries
+
+    @property
+    def degrees(self) -> np.ndarray:
+        if "degrees" not in self._cache:
+            self._converted("degrees")
+            self._cache["degrees"] = np.diff(np.asarray(self.csr.indptr))
+        return self._cache["degrees"]
+
+    @property
+    def max_degree(self) -> int:
+        d = self.degrees
+        return int(d.max()) if len(d) else 0
+
+    def stats(self) -> dict:
+        d = self.degrees
+        return {
+            "num_vertices": self.num_vertices,
+            "num_entries": self.num_entries,
+            "max_degree": self.max_degree,
+            "avg_degree": float(d.mean()) if len(d) else 0.0,
+            "has_values": self.has_values,
+            "cached_formats": sorted(self._cache.keys()),
+        }
+
+    # -- device placement ---------------------------------------------------
+
+    def place(self, device) -> "Graph":
+        """Move every cached device array to ``device`` (in place; the
+        handle's cache is shared, so all views see the placement)."""
+        for key, val in list(self._cache.items()):
+            if key in ("degrees", "device"):   # host-only / non-array entries
+                continue
+            self._cache[key] = jax.device_put(val, device)
+        self._cache["device"] = device
+        return self
+
+    def __repr__(self) -> str:
+        fmts = ",".join(sorted(k for k in self._cache if k != "device"))
+        return (f"Graph(V={self.num_vertices}, E={self.num_entries}, "
+                f"cached=[{fmts}])")
+
+
+# ---------------------------------------------------------------------------
+# coercion helpers — every pipeline entry point funnels through these, so
+# passing a Graph handle reuses its cache and passing a bare container
+# behaves exactly as before (fresh conversion).
+# ---------------------------------------------------------------------------
+
+def as_graph(obj) -> Graph:
+    """Coerce any structural container (or handle) to a Graph handle."""
+    return obj if isinstance(obj, Graph) else Graph(obj)
+
+
+def as_ell_graph(obj) -> ELLGraph:
+    if isinstance(obj, ELLGraph):
+        return obj
+    return as_graph(obj).ell
+
+
+def as_csr_graph(obj) -> CSRGraph:
+    if isinstance(obj, CSRGraph):
+        return obj
+    return as_graph(obj).csr

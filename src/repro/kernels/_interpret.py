@@ -1,0 +1,16 @@
+"""Shared interpret-mode resolution for the kernel ops wrappers.
+
+``interpret=None`` means "defer to the Backend policy": run the Pallas
+interpreter only when no accelerator is attached.  The import of the
+policy is lazy so that ``kernels`` (below ``core``) never triggers the
+``repro.api`` package import at module-import time.
+"""
+from __future__ import annotations
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    if interpret is not None:
+        return bool(interpret)
+    from ..api.backend import default_interpret  # lazy: avoids import cycle
+
+    return default_interpret()

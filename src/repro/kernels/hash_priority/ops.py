@@ -1,12 +1,17 @@
-"""Jitted wrapper for the hash+pack kernel."""
+"""Jitted wrapper for the hash+pack kernel.
+
+``interpret=None`` defers to the :class:`repro.api.Backend` policy
+(interpret only off-accelerator) instead of the seed's hard ``True``.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from .._interpret import resolve_interpret as _resolve_interpret
 from .kernel import hash_pack_pallas
 
 
 def hash_pack(iteration, vertex_ids: jnp.ndarray, b: int, *,
-              interpret: bool = True) -> jnp.ndarray:
+              interpret: bool | None = None) -> jnp.ndarray:
     return hash_pack_pallas(iteration, vertex_ids.astype(jnp.uint32), b,
-                            interpret=interpret)
+                            interpret=_resolve_interpret(interpret))

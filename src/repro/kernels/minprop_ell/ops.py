@@ -1,18 +1,22 @@
 """Jitted wrappers wiring the Pallas min-propagation kernels into the
-compacted MIS-2 driver (core/mis2.py, ``use_pallas=True``).
+compacted MIS-2 driver (core/mis2.py, engine ``"pallas"``).
 
 The XLA side does the irregular parts (worklist row gather, scatter-back);
 the Pallas kernels fuse the neighbor-tuple gather + reductions, which is
 the paper's measured hot loop.
+
+``interpret=None`` (the default) defers to the :class:`repro.api.Backend`
+policy: interpret only when no accelerator is attached.  The seed
+hard-coded ``interpret=True``, silently running the Pallas interpreter
+even on TPU/GPU.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .._interpret import resolve_interpret as _resolve_interpret
 from .kernel import decide_pallas, refresh_columns_pallas
 
 OUT = np.uint32(0xFFFFFFFF)
@@ -24,19 +28,20 @@ def _gather_rows(neighbors, wl):
     return neighbors[jnp.clip(wl, 0, v - 1)]
 
 
-def refresh_columns(t, m, wl2, neighbors, count, *, interpret=True):
+def refresh_columns(t, m, wl2, neighbors, count, *, interpret=None):
     """M.at[wl2] <- poisoned min of T over wl2 rows' closed neighborhoods."""
     wl_nbrs = _gather_rows(neighbors, wl2)
     mv = refresh_columns_pallas(t, wl_nbrs, jnp.asarray(count, jnp.int32),
-                                interpret=interpret)
+                                interpret=_resolve_interpret(interpret))
     return m.at[wl2].set(mv, mode="drop")
 
 
-def decide(t, m, wl1, neighbors, active, count, *, interpret=True):
+def decide(t, m, wl1, neighbors, active, count, *, interpret=None):
     """T.at[wl1] <- IN/OUT decision for wl1 rows."""
     v = neighbors.shape[0]
     wl_nbrs = _gather_rows(neighbors, wl1)
     t_rows = t[jnp.clip(wl1, 0, v - 1)]
     newt = decide_pallas(t_rows, m, active, wl_nbrs,
-                         jnp.asarray(count, jnp.int32), interpret=interpret)
+                         jnp.asarray(count, jnp.int32),
+                         interpret=_resolve_interpret(interpret))
     return t.at[wl1].set(newt, mode="drop")

@@ -1,9 +1,15 @@
-"""Jitted wrapper for the Pallas ELL SpMV."""
+"""Jitted wrapper for the Pallas ELL SpMV.
+
+``interpret=None`` defers to the :class:`repro.api.Backend` policy
+(interpret only off-accelerator) instead of the seed's hard ``True``.
+"""
 from __future__ import annotations
 
 from ...graphs.csr import ELLMatrix
+from .._interpret import resolve_interpret as _resolve_interpret
 from .kernel import spmv_ell_pallas
 
 
-def spmv(m: ELLMatrix, x, *, interpret: bool = True):
-    return spmv_ell_pallas(m.cols, m.vals, x, interpret=interpret)
+def spmv(m: ELLMatrix, x, *, interpret: bool | None = None):
+    return spmv_ell_pallas(m.cols, m.vals, x,
+                           interpret=_resolve_interpret(interpret))

@@ -318,6 +318,8 @@ def _lower_inner(cfg, cell, model, mesh, nd, rules, rec, microbatches, zero1,
     rec["fits_hbm"] = bool(live <= HBM_BYTES)
 
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # jax < 0.4.x: one dict per device
+        cost = cost[0] if cost else {}
     rec["cost_analysis_flat"] = {
         k: float(v) for k, v in cost.items()
         if isinstance(v, (int, float)) and k in ("flops", "bytes accessed")}

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.dist import _mis2_local_fixpoint
+from repro.core.dist import _mis2_local_fixpoint, _shard_map
 from repro.launch.hlo_analysis import analyze as hlo_analyze
 from repro.launch.mesh import make_production_mesh
 from repro.launch.dryrun import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16
@@ -57,8 +57,8 @@ def lower_variant(v: int, d: int, mesh, single_gather: bool,
         in_specs = (spec_rows, spec_rows)
         args = (nbrs_spec, act_spec)
 
-    fn = jax.shard_map(fn_core, mesh=mesh, in_specs=in_specs,
-                       out_specs=(spec_rows, P(flat[0])))
+    fn = _shard_map(fn_core, mesh=mesh, in_specs=in_specs,
+                    out_specs=(spec_rows, P(flat[0])))
     with mesh:
         lowered = jax.jit(fn).lower(*[
             jax.ShapeDtypeStruct(a.shape, a.dtype,

@@ -23,20 +23,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .._compat import DeprecatedMapping, warn_deprecated
 from ..graphs.csr import CSRMatrix, ELLMatrix, csr_to_ell_matrix
+from ..graphs.handle import Graph
 from ..graphs.ops import extract_diagonal, galerkin_coarse_matrix, matrix_to_scipy
 from ..core.aggregation import (
-    aggregate_basic,
-    aggregate_serial_greedy,
-    aggregate_two_phase,
+    _aggregate_basic_impl,
+    _aggregate_serial_greedy_impl,
+    _aggregate_two_phase_impl,
 )
 from ..core.mis2 import Mis2Options
 
-AGGREGATORS = {
-    "mis2_basic": aggregate_basic,          # Alg. 2
-    "mis2_agg": aggregate_two_phase,        # Alg. 3
-    "serial": aggregate_serial_greedy,      # Table V "Serial Agg" stand-in
-}
+# Deprecated: aggregation dispatch moved to the repro.api engine registry
+# (register_engine("aggregation", ...)); this mapping warns on access.
+AGGREGATORS = DeprecatedMapping(
+    {
+        "mis2_basic": _aggregate_basic_impl,          # Alg. 2
+        "mis2_agg": _aggregate_two_phase_impl,        # Alg. 3
+        "serial": lambda graph, options=None, **_:    # Table V "Serial Agg"
+            _aggregate_serial_greedy_impl(graph),
+    },
+    "solvers.amg.AGGREGATORS",
+    'repro.api.registry.get_engine("aggregation", name)',
+)
 
 
 @dataclass
@@ -99,21 +108,30 @@ def _smoothed_prolongator(a: CSRMatrix, labels: np.ndarray, nagg: int,
     return p.row, p.col, p.data
 
 
-def build_hierarchy(a: CSRMatrix, aggregation: str = "mis2_agg",
-                    max_levels: int = 10, coarse_size: int = 200,
-                    omega: float = 2.0 / 3.0, jacobi_weight: float = 2.0 / 3.0,
-                    smoother_sweeps: int = 2,
-                    options: Mis2Options = Mis2Options()) -> AMGHierarchy:
+def _build_hierarchy_impl(a, aggregation: str = "mis2_agg",
+                          max_levels: int = 10, coarse_size: int = 200,
+                          omega: float = 2.0 / 3.0,
+                          jacobi_weight: float = 2.0 / 3.0,
+                          smoother_sweeps: int = 2,
+                          options: Mis2Options = Mis2Options(),
+                          mis2_engine: str = "compacted",
+                          interpret=None) -> AMGHierarchy:
+    # aggregation dispatch via the api engine registry (aliases keep the
+    # legacy "mis2_basic" / "mis2_agg" spellings working)
+    from ..api.registry import get_engine
+
+    if isinstance(a, Graph):
+        a = a.csr_matrix
     t_setup = time.time()
     t_agg = 0.0
-    agg_fn = AGGREGATORS[aggregation]
+    agg_fn = get_engine("aggregation", aggregation)
     levels: List[AMGLevel] = []
     sizes = []
     cur = a
     while len(levels) < max_levels - 1 and cur.num_rows > coarse_size:
         t0 = time.time()
-        agg = agg_fn(cur.graph) if aggregation == "serial" \
-            else agg_fn(cur.graph, options=options)
+        agg = agg_fn(cur.graph, options=options, mis2_engine=mis2_engine,
+                     interpret=interpret)
         t_agg += time.time() - t0
         if agg.num_aggregates >= cur.num_rows:
             break
@@ -140,6 +158,18 @@ def build_hierarchy(a: CSRMatrix, aggregation: str = "mis2_agg",
     return AMGHierarchy(levels, coarse_solve, time.time() - t_setup, t_agg,
                         aggregation, omega, jacobi_weight, smoother_sweeps,
                         sizes)
+
+
+def build_hierarchy(a: CSRMatrix, aggregation: str = "mis2_agg",
+                    max_levels: int = 10, coarse_size: int = 200,
+                    omega: float = 2.0 / 3.0, jacobi_weight: float = 2.0 / 3.0,
+                    smoother_sweeps: int = 2,
+                    options: Mis2Options = Mis2Options()) -> AMGHierarchy:
+    """Deprecated entry point — use :func:`repro.api.amg`."""
+    warn_deprecated("repro.solvers.amg.build_hierarchy", "repro.api.amg")
+    return _build_hierarchy_impl(a, aggregation, max_levels, coarse_size,
+                                 omega, jacobi_weight, smoother_sweeps,
+                                 options)
 
 
 # ---------------------------------------------------------------------------

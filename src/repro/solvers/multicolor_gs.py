@@ -27,10 +27,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..graphs.csr import CSRMatrix, ELLMatrix, csr_to_ell_matrix
+from ..graphs.csr import ELLMatrix, csr_to_ell_matrix
+from ..graphs.handle import Graph
 from ..graphs.ops import coarse_graph_from_labels, extract_diagonal
-from ..core.aggregation import aggregate_basic, aggregate_two_phase
-from ..core.coloring import color_graph
+from ..core.coloring import _color_graph_impl
 from ..core.mis2 import Mis2Options
 
 
@@ -112,13 +112,18 @@ def _pack_clusters(labels: np.ndarray, cluster_colors: np.ndarray,
     return tuple(color_rows)
 
 
-def setup_cluster_gs(a: CSRMatrix, aggregation: str = "two_phase",
+def setup_cluster_gs(a, aggregation: str = "two_phase",
                      options: Mis2Options = Mis2Options(),
                      coarsen_levels: int = 1) -> MulticolorGSPreconditioner:
     import time
+
+    from ..api.registry import get_engine  # lazy: engines register on import
+
+    if isinstance(a, Graph):
+        a = a.csr_matrix
     t0 = time.time()
     v = a.num_rows
-    agg_fn = {"two_phase": aggregate_two_phase, "basic": aggregate_basic}[aggregation]
+    agg_fn = get_engine("aggregation", aggregation)
     agg = agg_fn(a.graph, options=options)
     labels = agg.labels
     nagg = agg.num_aggregates
@@ -128,7 +133,7 @@ def setup_cluster_gs(a: CSRMatrix, aggregation: str = "two_phase",
         labels = agg2.labels[labels]
         nagg = agg2.num_aggregates
     coarse = coarse_graph_from_labels(a.graph, labels, nagg)
-    coloring = color_graph(coarse)
+    coloring = _color_graph_impl(coarse)
     color_rows = _pack_clusters(labels, coloring.colors, coloring.num_colors, v)
     ell = csr_to_ell_matrix(a)
     diag = extract_diagonal(a)
@@ -137,11 +142,13 @@ def setup_cluster_gs(a: CSRMatrix, aggregation: str = "two_phase",
         time.time() - t0, "cluster")
 
 
-def setup_point_gs(a: CSRMatrix) -> MulticolorGSPreconditioner:
+def setup_point_gs(a) -> MulticolorGSPreconditioner:
     import time
+    if isinstance(a, Graph):
+        a = a.csr_matrix
     t0 = time.time()
     v = a.num_rows
-    coloring = color_graph(a.graph)            # colors the FINE graph
+    coloring = _color_graph_impl(a.graph)      # colors the FINE graph
     labels = np.arange(v, dtype=np.int32)      # singleton clusters
     color_rows = _pack_clusters(labels, coloring.colors, coloring.num_colors, v)
     ell = csr_to_ell_matrix(a)

@@ -1,8 +1,12 @@
 """Aggregation (Alg. 2/3) and coloring invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # image has no hypothesis: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from conftest import verify_mis2
 from repro.core import (

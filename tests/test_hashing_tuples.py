@@ -1,8 +1,12 @@
 """Hash limb-emulation bit-exactness + compressed-tuple properties (§V-A/C)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # image has no hypothesis: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import hashing
 from repro.core.tuples import IN, OUT, effective_priority, id_bits, pack, unpack_id

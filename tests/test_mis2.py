@@ -2,8 +2,12 @@
 engine/representation agreement, induced-subgraph (active-mask) semantics."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # image has no hypothesis: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from conftest import verify_mis2
 from repro.core.mis2 import ABLATION_CHAIN, Mis2Options, mis2
