@@ -1,0 +1,91 @@
+"""Batch throughput: graphs/sec for `repro.batch` vs. a single-graph loop.
+
+The `repro.batch` pitch quantified: a fleet of small/medium graphs (the
+ROADMAP's many-users traffic shape) dispatched
+
+* ``looped``  — one ``repro.mis2(g, engine="dense")`` call per graph, and
+* ``batched`` — one ``repro.mis2_batch(batch)`` over the size-bucketed
+  ``[B, rows, deg]`` stacks (one compiled step per bucket shape),
+
+with the same comparison for two-phase coarsening.  Digest equality of the
+two paths is asserted on every run — a throughput benchmark that silently
+changed the answer would be measuring a different algorithm.
+
+    PYTHONPATH=src python -m benchmarks.run --only batch [--quick]
+
+Emits ``batch_throughput.csv`` plus a ``BENCH_batch_throughput.json``
+trajectory entry (headline: batched graphs/sec and speedup).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, emit_trajectory, timeit
+
+
+def _fleet(quick: bool):
+    """A mixed fleet: laplace3d meshes + ER graphs, several size buckets."""
+    from repro.api import Graph
+    from repro.graphs import laplace3d, random_uniform_graph
+
+    if quick:
+        meshes = [4, 5, 6]
+        ns, copies = [200, 400, 700], 2
+    else:
+        meshes = [6, 8, 10, 12]
+        ns, copies = [1_000, 2_000, 5_000, 10_000], 4
+    graphs = [Graph(laplace3d(m).graph) for m in meshes]
+    seed = 0
+    for n in ns:
+        for _ in range(copies):
+            graphs.append(Graph(random_uniform_graph(n, 6.0, seed=seed)))
+            seed += 1
+    return graphs
+
+
+def run(quick: bool = False):
+    from repro.api import GraphBatch, coarsen_batch, mis2, mis2_batch
+
+    graphs = _fleet(quick)
+    batch = GraphBatch(graphs)
+
+    rows = []
+    # -- MIS-2 ---------------------------------------------------------------
+    t_loop = timeit(lambda: [mis2(g, engine="dense") for g in graphs])
+    t_batch = timeit(lambda: mis2_batch(batch))
+    br = mis2_batch(batch)
+    for g, r in zip(graphs, br):
+        assert r.digest == mis2(g, engine="dense").digest, "batch drift!"
+    rows.append({
+        "pipeline": "mis2", "num_graphs": len(graphs),
+        "num_buckets": batch.num_buckets,
+        "seconds": t_batch,
+        "looped_gps": len(graphs) / t_loop,
+        "batched_gps": len(graphs) / t_batch,
+        "speedup": t_loop / t_batch,
+    })
+
+    # -- two-phase coarsening ------------------------------------------------
+    from repro.api import coarsen
+
+    t_loop_c = timeit(
+        lambda: [coarsen(g, mis2_engine="dense") for g in graphs], repeats=1)
+    t_batch_c = timeit(lambda: coarsen_batch(batch), repeats=1)
+    rows.append({
+        "pipeline": "coarsen_two_phase", "num_graphs": len(graphs),
+        "num_buckets": batch.num_buckets,
+        "seconds": t_batch_c,
+        "looped_gps": len(graphs) / t_loop_c,
+        "batched_gps": len(graphs) / t_batch_c,
+        "speedup": t_loop_c / t_batch_c,
+    })
+
+    emit("batch_throughput", rows)
+    emit_trajectory("batch_throughput", {
+        "quick": quick,
+        "num_graphs": len(graphs),
+        "bucket_shapes": batch.bucket_shapes,
+        "mis2_batched_gps": rows[0]["batched_gps"],
+        "mis2_looped_gps": rows[0]["looped_gps"],
+        "mis2_speedup": rows[0]["speedup"],
+        "coarsen_batched_gps": rows[1]["batched_gps"],
+        "coarsen_speedup": rows[1]["speedup"],
+    })

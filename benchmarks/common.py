@@ -1,7 +1,8 @@
-"""Shared benchmark utilities: timing, CSV emission, graph suite."""
+"""Shared benchmark utilities: timing, CSV/JSON emission, graph suite."""
 from __future__ import annotations
 
 import csv
+import json
 import time
 from pathlib import Path
 
@@ -34,6 +35,20 @@ def emit(name: str, rows: list[dict]):
         derived = {k: v for k, v in r.items()
                    if k not in ("us_per_call", "seconds")}
         print(f"{name},{us:.1f},{derived}")
+    return path
+
+
+def emit_trajectory(name: str, record: dict) -> Path:
+    """Append one timestamped record to ``artifacts/bench/BENCH_<name>.json``.
+
+    The trajectory is a JSON list, one entry per benchmark run, so headline
+    metrics (e.g. batched graphs/sec) accumulate across commits and can be
+    plotted or regression-checked without re-parsing per-run CSVs."""
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    path = ARTIFACTS / f"BENCH_{name}.json"
+    history = json.loads(path.read_text()) if path.exists() else []
+    history.append({"timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"), **record})
+    path.write_text(json.dumps(history, indent=2) + "\n")
     return path
 
 

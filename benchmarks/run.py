@@ -15,6 +15,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from benchmarks import (  # noqa: E402
+    batch_throughput,
     fig2_optimizations,
     figs4_5_scaling,
     roofline,
@@ -34,6 +35,7 @@ ALL = {
     "table6": table6_cluster_gs.run,
     "figs4_5": figs4_5_scaling.run,
     "roofline": roofline.run,
+    "batch": batch_throughput.run,
 }
 
 

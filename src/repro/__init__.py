@@ -16,8 +16,9 @@ from importlib import import_module
 __version__ = "0.2.0"
 
 _FACADE = {
-    "Graph", "Backend", "Mis2Options",
+    "Graph", "GraphBatch", "Backend", "Mis2Options", "BatchResult",
     "mis2", "misk", "color", "coarsen", "partition", "amg",
+    "mis2_batch", "color_batch", "coarsen_batch",
 }
 
 __all__ = ["api", "__version__", *sorted(_FACADE)]

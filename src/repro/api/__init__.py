@@ -26,10 +26,12 @@ from .backend import (
     using_backend,
 )
 from .graph import Graph, as_csr_graph, as_ell_graph, as_graph
+from ..batch.container import GraphBatch, as_graph_batch
 from .registry import get_engine, get_engine_spec, list_engines, register_engine
 from .result import (
     AggregationResult,
     AmgSetup,
+    BatchResult,
     ColoringResult,
     Mis2Result,
     PartitionResult,
@@ -38,13 +40,26 @@ from .result import (
     determinism_digest,
 )
 from . import engines as _engines  # noqa: F401  (registers built-in engines)
-from .facade import amg, coarsen, color, mis2, misk, partition
+from .facade import (
+    amg,
+    coarsen,
+    coarsen_batch,
+    color,
+    color_batch,
+    mis2,
+    mis2_batch,
+    misk,
+    partition,
+)
 from ..core.mis2 import ABLATION_CHAIN, Mis2Options
 from . import generators  # noqa: F401  (problem generators, re-exported)
 
 __all__ = [
     # facade calls
     "mis2", "misk", "color", "coarsen", "partition", "amg",
+    # batched facade calls (repro.batch)
+    "mis2_batch", "color_batch", "coarsen_batch",
+    "GraphBatch", "as_graph_batch", "BatchResult",
     # graph handle
     "Graph", "as_graph", "as_ell_graph", "as_csr_graph",
     # backend policy

@@ -15,6 +15,7 @@ Engine call conventions
 """
 from __future__ import annotations
 
+from ..batch.pipeline import _mis2_batch_impl
 from ..core.aggregation import (
     _aggregate_basic_impl,
     _aggregate_serial_greedy_impl,
@@ -54,6 +55,17 @@ def _mis2_compacted(graph, active, options, backend: Backend):
 def _mis2_pallas(graph, active, options, backend: Backend):
     return _mis2_compacted_impl(graph, active, _opts(options), pallas=True,
                                 interpret=backend.resolve_interpret())
+
+
+@register_engine("mis2", "dense_batched",
+                 doc="vmapped dense fixed point over padded size buckets "
+                     "(repro.batch); a single-graph call runs as a batch "
+                     "of one — bit-identical to 'dense'")
+def _mis2_dense_batched(graph, active, options, backend: Backend):
+    from ..batch.container import GraphBatch
+
+    actives = None if active is None else [active]
+    return _mis2_batch_impl(GraphBatch([graph]), _opts(options), actives)[0]
 
 
 # -- aggregation (coarsening) ----------------------------------------------

@@ -18,6 +18,12 @@ from __future__ import annotations
 import time
 from typing import Optional
 
+from ..batch.container import GraphBatch, as_graph_batch
+from ..batch.pipeline import (
+    _coarsen_batch_impl,
+    _color_batch_impl,
+    _mis2_batch_impl,
+)
 from ..core.mis2 import Mis2Options
 from ..core.misk import _mis_k_impl
 from ..graphs.handle import Graph, as_graph
@@ -26,6 +32,7 @@ from .registry import get_engine
 from .result import (
     AggregationResult,
     AmgSetup,
+    BatchResult,
     ColoringResult,
     Mis2Result,
     PartitionResult,
@@ -119,6 +126,97 @@ def partition(graph, num_parts: int, *, coarse_target: Optional[int] = None,
                            levels=r.levels, history=list(r.history))
 
 
+# ---------------------------------------------------------------------------
+# batched entry points (repro.batch): many graphs, few compiled shapes
+# ---------------------------------------------------------------------------
+
+def _prepare_batch(graphs, backend: Backend) -> GraphBatch:
+    if backend.device is not None:
+        # honor Backend.device for prebuilt batches too: place every member
+        # handle (cached formats move with it) and restack on that device
+        members = graphs.graphs if isinstance(graphs, GraphBatch) else graphs
+        return GraphBatch([as_graph(g).place(backend.device)
+                           for g in members])
+    return as_graph_batch(graphs)
+
+
+def mis2_batch(graphs, *, options: Optional[Mis2Options] = None,
+               backend: Optional[Backend] = None) -> BatchResult:
+    """Distance-2 MIS over many graphs at once: size-bucketed, vmapped
+    dense fixed point — one compilation per bucket shape, ``B`` graphs per
+    dispatch.  Each per-graph result (and its determinism digest) is
+    bit-identical to ``mis2(g, engine="dense")``; batching is purely a
+    throughput optimization.
+
+    ``graphs`` is a sequence of :class:`Graph` handles / structural
+    containers, or a prebuilt :class:`~repro.batch.GraphBatch` (reusable
+    across calls — stacking is cached on the handles).
+    """
+    be = resolve_backend(backend)
+    batch = _prepare_batch(graphs, be)
+    t0 = time.perf_counter()
+    core = _mis2_batch_impl(batch, options)
+    dt = time.perf_counter() - t0
+    per = dt / max(1, len(core))
+    results = [Mis2Result(r.in_set, r.iterations, r.converged, per,
+                          engine="dense_batched") for r in core]
+    return BatchResult(results, dt, engine="dense_batched",
+                       bucket_shapes=batch.bucket_shapes)
+
+
+def color_batch(graphs, *, max_rounds: int = 256,
+                backend: Optional[Backend] = None) -> BatchResult:
+    """Batched deterministic greedy coloring (vmapped Luby rounds); each
+    per-graph result matches ``color(g)`` bit-for-bit."""
+    be = resolve_backend(backend)
+    batch = _prepare_batch(graphs, be)
+    t0 = time.perf_counter()
+    core = _color_batch_impl(batch, max_rounds)
+    dt = time.perf_counter() - t0
+    per = dt / max(1, len(core))
+    results = [ColoringResult(r.colors, r.rounds, True, per,
+                              num_colors=r.num_colors) for r in core]
+    return BatchResult(results, dt, engine="luby_batched",
+                       bucket_shapes=batch.bucket_shapes)
+
+
+def coarsen_batch(graphs, *, method: str = "two_phase",
+                  options: Optional[Mis2Options] = None,
+                  min_secondary_neighbors: int = 2,
+                  backend: Optional[Backend] = None) -> BatchResult:
+    """Batched MIS-2 coarsening (paper Alg. 2/3) over the vmapped dense
+    MIS-2; per-graph labels match ``coarsen(g, method=...,
+    mis2_engine="dense")`` bit-for-bit."""
+    be = resolve_backend(backend)
+    if method == "serial":
+        # host-sequential reference: no fixed point to batch, so skip the
+        # bucket padding/stacking entirely
+        from ..core.aggregation import _aggregate_serial_greedy_impl
+
+        members = graphs.graphs if isinstance(graphs, GraphBatch) \
+            else [as_graph(g) for g in graphs]
+        t0 = time.perf_counter()
+        core = [_aggregate_serial_greedy_impl(g) for g in members]
+        dt = time.perf_counter() - t0
+        per = dt / max(1, len(core))
+        results = [AggregationResult(r.labels, r.mis2_iterations, r.converged,
+                                     per, num_aggregates=r.num_aggregates,
+                                     roots=r.roots, phase=r.phase)
+                   for r in core]
+        return BatchResult(results, dt, engine="serial_batched")
+    batch = _prepare_batch(graphs, be)
+    t0 = time.perf_counter()
+    core = _coarsen_batch_impl(batch, method, options,
+                               min_secondary_neighbors)
+    dt = time.perf_counter() - t0
+    per = dt / max(1, len(core))
+    results = [AggregationResult(r.labels, r.mis2_iterations, r.converged,
+                                 per, num_aggregates=r.num_aggregates,
+                                 roots=r.roots, phase=r.phase) for r in core]
+    return BatchResult(results, dt, engine=f"{method}_batched",
+                       bucket_shapes=batch.bucket_shapes)
+
+
 def amg(matrix, *, aggregation: str = "two_phase", max_levels: int = 10,
         coarse_size: int = 200, omega: float = 2.0 / 3.0,
         jacobi_weight: float = 2.0 / 3.0, smoother_sweeps: int = 2,
@@ -136,8 +234,7 @@ def amg(matrix, *, aggregation: str = "two_phase", max_levels: int = 10,
     h = _build_hierarchy_impl(
         gh.csr_matrix, aggregation=aggregation, max_levels=max_levels,
         coarse_size=coarse_size, omega=omega, jacobi_weight=jacobi_weight,
-        smoother_sweeps=smoother_sweeps,
-        options=Mis2Options() if options is None else options,
+        smoother_sweeps=smoother_sweeps, options=options,
         interpret=be.resolve_interpret())
     dt = time.perf_counter() - t0
     sizes = np.asarray(h.level_sizes, dtype=np.int64).reshape(-1, 2)
@@ -149,5 +246,6 @@ def amg(matrix, *, aggregation: str = "two_phase", max_levels: int = 10,
 
 __all__ = [
     "mis2", "misk", "color", "coarsen", "partition", "amg",
-    "Graph", "Backend", "Mis2Options", "determinism_digest",
+    "mis2_batch", "color_batch", "coarsen_batch",
+    "Graph", "GraphBatch", "Backend", "Mis2Options", "determinism_digest",
 ]

@@ -130,6 +130,55 @@ class PartitionResult(Result):
 
 
 @dataclass
+class BatchResult:
+    """Result of one batched facade call (``mis2_batch`` / ``color_batch``
+    / ``coarsen_batch``): the per-graph :class:`Result`\\ s in **input
+    order**, each carrying its own determinism digest — so batching can be
+    checked graph-by-graph against the single-graph engines in one string
+    compare per member.
+
+    ``wall_time_s`` is the whole batched dispatch (all buckets);
+    ``bucket_shapes`` records the compilation footprint as
+    ``(rows, width, member_count)`` triples.
+    """
+
+    results: list = field(default_factory=list)
+    wall_time_s: float = 0.0
+    engine: str = ""
+    bucket_shapes: list = field(default_factory=list)
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def __iter__(self):
+        return iter(self.results)
+
+    def __getitem__(self, i):
+        return self.results[i]
+
+    @property
+    def num_graphs(self) -> int:
+        return len(self.results)
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self.bucket_shapes)
+
+    @property
+    def digests(self) -> list:
+        """Per-graph determinism digests, input order."""
+        return [r.digest for r in self.results]
+
+    @property
+    def converged(self) -> bool:
+        return all(r.converged for r in self.results)
+
+    @property
+    def graphs_per_second(self) -> float:
+        return len(self.results) / self.wall_time_s if self.wall_time_s else 0.0
+
+
+@dataclass
 class AmgSetup(Result):
     """AMG hierarchy setup: ``payload`` is the [levels, 2] (n, nnz) table;
     the usable hierarchy hangs off ``.hierarchy`` / ``.as_precond()``."""

@@ -1,0 +1,25 @@
+"""``repro.batch`` — size-bucketed, vmapped multi-graph pipelines.
+
+High-throughput companion to the one-graph-per-call facade: a
+:class:`GraphBatch` stacks many graphs into a few padded ``[B, rows, deg]``
+shape buckets (power-of-two rows x degree, the ``mis2_compacted`` bucket
+policy) and the pipeline drivers vmap the dense MIS-2 / coloring /
+aggregation fixed points over each bucket — one XLA compilation per bucket
+shape, ``B`` graphs per dispatch, with per-graph results bit-identical to
+the single-graph ``dense`` engine.
+
+The public entry points live on the facade: ``repro.mis2_batch``,
+``repro.color_batch``, ``repro.coarsen_batch`` (see ``repro.api``); this
+package holds the container and the batched drivers.
+"""
+from .container import GraphBatch, GraphBucket, as_graph_batch, bucket_shape
+from .pipeline import (
+    _coarsen_batch_impl,
+    _color_batch_impl,
+    _mis2_batch_impl,
+)
+
+__all__ = [
+    "GraphBatch", "GraphBucket", "as_graph_batch", "bucket_shape",
+    "_mis2_batch_impl", "_color_batch_impl", "_coarsen_batch_impl",
+]

@@ -1,0 +1,137 @@
+"""`GraphBatch`: many graphs, few shapes, one dispatch per shape.
+
+Every facade entry point in ``repro.api`` processes exactly one graph per
+call; under many-graph traffic that serializes dispatch and recompiles per
+vertex count.  ``GraphBatch`` buckets a list of :class:`~repro.graphs.handle.
+Graph` handles by padded ELL shape — power-of-two rows x power-of-two max
+degree, reusing the worklist bucket policy from ``mis2_compacted``
+(``core.mis2._bucket``) — and stacks each bucket's padded adjacency into
+one ``[B, rows, width]`` array.  The batched pipelines then vmap the dense
+fixed points over each bucket: one XLA compilation per bucket shape, ``B``
+graphs per dispatch.
+
+Per-graph identity is preserved inside the stack: each member carries its
+real vertex count, a ``row_valid`` mask, and its own packing id-bit count
+``b = id_bits(V_real)``, so the batched math is bit-identical to the
+single-graph ``dense`` engine (the load-bearing invariant; see
+``tests/test_batch.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.mis2 import _bucket
+from ..core.tuples import id_bits
+from ..graphs.handle import Graph, as_graph
+
+
+def bucket_shape(graph: Graph) -> tuple[int, int]:
+    """The (rows, width) padding bucket a graph lands in: both dimensions
+    rounded up to the next power of two so mixed workloads fall into a
+    handful of compiled shapes."""
+    gh = as_graph(graph)
+    return _bucket(gh.num_vertices), _bucket(max(1, gh.ell.width))
+
+
+@dataclass(frozen=True)
+class GraphBucket:
+    """One stacked shape class of a :class:`GraphBatch`."""
+
+    rows: int                 # padded vertex count (power of two)
+    width: int                # padded ELL degree (power of two)
+    indices: tuple            # positions of the members in the batch order
+    neighbors: jnp.ndarray    # int32 [B, rows, width]
+    mask: jnp.ndarray         # bool  [B, rows, width]
+    row_valid: jnp.ndarray    # bool  [B, rows]  (True on real vertices)
+    num_vertices: np.ndarray  # int64 [B] real vertex counts
+    id_bits: jnp.ndarray      # uint32 [B] per-graph packing bit width
+
+    @property
+    def size(self) -> int:
+        return len(self.indices)
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.rows, self.width)
+
+
+class GraphBatch:
+    """An ordered collection of graphs, stacked into shape buckets.
+
+    Construct from any sequence of :class:`Graph` handles or bare
+    structural containers::
+
+        batch = GraphBatch([g1, g2, g3, ...])
+        for bucket in batch.buckets:   # one vmapped dispatch each
+            ...
+
+    Results are always reported in the original input order (each bucket
+    remembers its members' positions).  Stacking reuses each handle's
+    cached padded ELL, so re-batching the same graphs is cheap.
+    """
+
+    def __init__(self, graphs: Sequence):
+        if isinstance(graphs, GraphBatch):
+            self.graphs = graphs.graphs
+            self.buckets = graphs.buckets
+            return
+        self.graphs: list[Graph] = [as_graph(g) for g in graphs]
+        if not self.graphs:
+            raise ValueError("GraphBatch needs at least one graph")
+        by_shape: dict[tuple[int, int], list[int]] = {}
+        for i, gh in enumerate(self.graphs):
+            by_shape.setdefault(bucket_shape(gh), []).append(i)
+        self.buckets: list[GraphBucket] = []
+        for (rows, width), idxs in sorted(by_shape.items()):
+            nbrs, masks, valid, nv, bits = [], [], [], [], []
+            for i in idxs:
+                gh = self.graphs[i]
+                ell = gh.padded_ell(rows, width)
+                nbrs.append(ell.neighbors)
+                masks.append(ell.mask)
+                v = gh.num_vertices
+                valid.append(np.arange(rows) < v)
+                nv.append(v)
+                bits.append(id_bits(v))
+            self.buckets.append(GraphBucket(
+                rows=rows, width=width, indices=tuple(idxs),
+                neighbors=jnp.stack(nbrs), mask=jnp.stack(masks),
+                row_valid=jnp.asarray(np.stack(valid)),
+                num_vertices=np.asarray(nv, dtype=np.int64),
+                id_bits=jnp.asarray(np.asarray(bits, dtype=np.uint32))))
+
+    def __len__(self) -> int:
+        return len(self.graphs)
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self.buckets)
+
+    @property
+    def bucket_shapes(self) -> list[tuple[int, int, int]]:
+        """[(rows, width, member count)] per bucket — the compilation
+        footprint of a batched dispatch."""
+        return [(b.rows, b.width, b.size) for b in self.buckets]
+
+    def stats(self) -> dict:
+        padded = sum(b.size * b.rows * b.width for b in self.buckets)
+        real = sum(g.num_entries for g in self.graphs)
+        return {
+            "num_graphs": len(self.graphs),
+            "num_buckets": self.num_buckets,
+            "bucket_shapes": self.bucket_shapes,
+            "padding_ratio": padded / max(1, real),
+        }
+
+    def __repr__(self) -> str:
+        shapes = ", ".join(f"{r}x{w}:{n}" for r, w, n in self.bucket_shapes)
+        return f"GraphBatch({len(self.graphs)} graphs, buckets=[{shapes}])"
+
+
+def as_graph_batch(obj) -> GraphBatch:
+    """Coerce a GraphBatch, or any sequence of graphs, to a GraphBatch."""
+    return obj if isinstance(obj, GraphBatch) else GraphBatch(obj)

@@ -1,0 +1,298 @@
+"""Batched drivers: vmapped dense fixed points over `GraphBatch` buckets.
+
+Each driver loops over a batch's shape buckets and makes **one** vmapped,
+jitted dispatch per bucket (per fixed point), so a mixed workload of many
+small/medium graphs costs a handful of XLA compilations and ``B`` graphs
+per launch instead of one launch (and one compile per vertex count) each.
+
+The load-bearing invariant: every per-graph result is **bit-identical** to
+the single-graph ``dense`` engine's result for the same options.  The
+ingredients:
+
+* each graph keeps its own packing bit width ``b = id_bits(V_real)`` (a
+  traced per-element scalar, not a property of the padded shape);
+* padded rows are inactive — MIS-2 pins them to OUT, coloring pre-colors
+  them — and self-loop adjacency keeps them out of every real row's
+  closed neighborhood;
+* per-element iteration counters only advance while that graph is live,
+  so the §V-A priority stream matches the single-graph run even when
+  bucket mates need more rounds;
+* host-side label bookkeeping (cumsum ids, bincount sizes, singleton
+  cleanup) runs per graph on the unpadded slice, exactly as the
+  single-graph aggregation does.
+
+Everything returns *core* result dataclasses in batch input order; the
+facade (``repro.api.facade``) wraps them into the Result protocol and a
+``BatchResult``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.aggregation import (
+    INT32_MAX,
+    AggregationResult,
+    _aggregate_serial_greedy_impl,
+    _count_unagg_neighbors,
+    _finalize_singletons,
+    _join_adjacent_root,
+    _phase3_join,
+)
+from ..core.coloring import MAX_COLORS, ColoringResult, _color_round_masked
+from ..core.mis2 import (
+    U32MAX,
+    Mis2Options,
+    Mis2Result,
+    mis2_dense_fixed_point,
+)
+from ..core.tuples import IN
+from .container import GraphBatch, as_graph_batch
+
+# ---------------------------------------------------------------------------
+# bucket-level jitted kernels (one compilation per [B, rows, width] shape)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("priority", "max_iters"))
+def _mis2_bucket_run(neighbors, active, bits, priority: str, max_iters: int):
+    def fp(n, a, b):
+        return mis2_dense_fixed_point(n, a, b, priority, max_iters)
+
+    return jax.vmap(fp)(neighbors, active, bits)
+
+
+@jax.jit
+def _color_bucket_round(neighbors, mask, colors, rnd, bits):
+    return jax.vmap(_color_round_masked, in_axes=(0, 0, 0, None, 0))(
+        neighbors, mask, colors, rnd, bits)
+
+
+_join_adjacent_root_b = jax.jit(jax.vmap(_join_adjacent_root))
+_count_unagg_neighbors_b = jax.jit(jax.vmap(_count_unagg_neighbors))
+_phase3_join_b = jax.jit(jax.vmap(_phase3_join))
+
+
+# ---------------------------------------------------------------------------
+# MIS-2
+# ---------------------------------------------------------------------------
+
+def _bucket_actives(bucket, actives) -> jnp.ndarray:
+    """Stack per-graph active masks into [B, rows] (False on padding)."""
+    if actives is None:
+        return bucket.row_valid
+    stacked = np.zeros((bucket.size, bucket.rows), dtype=bool)
+    for j, gi in enumerate(bucket.indices):
+        act = actives[gi]
+        if act is None:
+            stacked[j, : bucket.num_vertices[j]] = True
+        else:
+            act = np.asarray(act)
+            stacked[j, : len(act)] = act
+    return jnp.asarray(stacked)
+
+
+def _mis2_batch_impl(batch: GraphBatch,
+                     options: Optional[Mis2Options] = None,
+                     actives: Optional[Sequence] = None) -> list[Mis2Result]:
+    """Batched dense MIS-2; returns core Mis2Results in batch input order."""
+    options = Mis2Options() if options is None else options
+    out: list = [None] * len(batch)
+    for bucket in batch.buckets:
+        act = _bucket_actives(bucket, actives)
+        t, iters = _mis2_bucket_run(bucket.neighbors, act, bucket.id_bits,
+                                    options.priority, options.max_iters)
+        t_np, iters_np = np.asarray(t), np.asarray(iters)
+        act_np = np.asarray(act)
+        for j, gi in enumerate(bucket.indices):
+            v = int(bucket.num_vertices[j])
+            tj = t_np[j, :v]
+            undecided = (tj != np.uint32(IN)) & (tj != U32MAX) & act_np[j, :v]
+            out[gi] = Mis2Result(tj == np.uint32(IN), int(iters_np[j]),
+                                 not undecided.any())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# coloring
+# ---------------------------------------------------------------------------
+
+def _color_batch_impl(batch: GraphBatch,
+                      max_rounds: int = 256) -> list[ColoringResult]:
+    """Batched Luby coloring; per-graph results match `_color_graph_impl`."""
+    out: list = [None] * len(batch)
+    for bucket in batch.buckets:
+        valid = np.asarray(bucket.row_valid)
+        # padded rows enter pre-colored (0) so they are never contenders and
+        # never block termination; they are nobody's neighbor, so the color
+        # itself is inert.
+        colors = jnp.asarray(np.where(valid, -1, 0).astype(np.int32))
+        done_round = np.full(bucket.size, -1, dtype=np.int64)
+        rnd = 0
+        while True:
+            colors = _color_bucket_round(bucket.neighbors, bucket.mask,
+                                         colors, np.uint32(rnd),
+                                         bucket.id_bits)
+            rnd += 1
+            c = np.asarray(colors)
+            finished = ((c >= 0) | ~valid).all(axis=1)
+            done_round[(done_round < 0) & finished] = rnd
+            if finished.all() or rnd >= max_rounds:
+                break
+        for j, gi in enumerate(bucket.indices):
+            v = int(bucket.num_vertices[j])
+            cj = c[j, :v]
+            if (cj < 0).any():
+                raise RuntimeError("coloring did not converge")
+            num = int(cj.max()) + 1 if v else 0
+            if num > MAX_COLORS:
+                raise RuntimeError(
+                    f"{num} colors exceed MAX_COLORS={MAX_COLORS}")
+            out[gi] = ColoringResult(cj, num, int(done_round[j]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MIS-2 aggregation (coarsening)
+# ---------------------------------------------------------------------------
+
+def _stacked_root_labels(roots: np.ndarray, num_vertices, offsets,
+                         rows: int) -> tuple[np.ndarray, np.ndarray]:
+    """Per-graph cumsum aggregate ids for root masks stacked [B, rows].
+
+    Returns (root_label [B, rows] int32 with INT32_MAX non-roots, counts).
+    """
+    bsz = roots.shape[0]
+    root_label = np.full((bsz, rows), INT32_MAX, dtype=np.int32)
+    counts = np.zeros(bsz, dtype=np.int64)
+    for j in range(bsz):
+        v = int(num_vertices[j])
+        rj = roots[j, :v]
+        ids = int(offsets[j]) + np.cumsum(rj) - 1
+        root_label[j, :v] = np.where(rj, ids, INT32_MAX).astype(np.int32)
+        counts[j] = int(rj.sum())
+    return root_label, counts
+
+
+def _coarsen_batch_impl(batch: GraphBatch, method: str = "two_phase",
+                        options: Optional[Mis2Options] = None,
+                        min_secondary_neighbors: int = 2
+                        ) -> list[AggregationResult]:
+    """Batched MIS-2 coarsening (paper Alg. 2 / Alg. 3) over dense MIS-2.
+
+    ``serial`` falls back to the host-sequential reference per graph (it
+    has no data-parallel fixed point to batch).
+    """
+    options = Mis2Options() if options is None else options
+    if method == "serial":
+        return [_aggregate_serial_greedy_impl(g) for g in batch.graphs]
+    if method not in ("basic", "two_phase"):
+        raise ValueError(
+            f"unknown batch aggregation method {method!r} "
+            "(basic | two_phase | serial)")
+    out: list = [None] * len(batch)
+    for bucket in batch.buckets:
+        results = _coarsen_bucket(bucket, method, options,
+                                  min_secondary_neighbors)
+        for j, gi in enumerate(bucket.indices):
+            out[gi] = results[j]
+    return out
+
+
+def _coarsen_bucket(bucket, method: str, options: Mis2Options,
+                    min_secondary_neighbors: int) -> list[AggregationResult]:
+    bsz, rows = bucket.size, bucket.rows
+    nv = bucket.num_vertices
+    valid = np.asarray(bucket.row_valid)
+
+    # Phase 1: MIS-2 roots + direct neighbors (batched fixed point)
+    t1, it1 = _mis2_bucket_run(bucket.neighbors, bucket.row_valid,
+                               bucket.id_bits, options.priority,
+                               options.max_iters)
+    t1_np, it1_np = np.asarray(t1), np.asarray(it1)
+    in_set1 = (t1_np == np.uint32(IN)) & valid
+    conv = np.empty(bsz, dtype=bool)
+    for j in range(bsz):
+        tj = t1_np[j, :nv[j]]
+        conv[j] = not ((tj != np.uint32(IN)) & (tj != U32MAX)).any()
+    total_iters = it1_np.astype(np.int64).copy()
+
+    root_label, nagg = _stacked_root_labels(in_set1, nv, np.zeros(bsz), rows)
+    labels = np.asarray(_join_adjacent_root_b(bucket.neighbors,
+                                              jnp.asarray(root_label)))
+    phase = np.where(labels >= 0, 1, 0).astype(np.uint8)
+    roots = in_set1.copy()
+
+    if method == "two_phase":
+        # Phase 2: MIS-2 on the induced unaggregated subgraph.  Graphs with
+        # nothing left run an empty-active fixed point (0 iterations, empty
+        # set) — equivalent to the single-graph path skipping phase 2.
+        unagg = (labels < 0) & valid
+        t2, it2 = _mis2_bucket_run(bucket.neighbors, jnp.asarray(unagg),
+                                   bucket.id_bits, options.priority,
+                                   options.max_iters)
+        t2_np, it2_np = np.asarray(t2), np.asarray(it2)
+        total_iters += it2_np
+        in_set2 = (t2_np == np.uint32(IN)) & valid
+        for j in range(bsz):
+            tj = t2_np[j, :nv[j]]
+            und = (tj != np.uint32(IN)) & (tj != U32MAX) & unagg[j, :nv[j]]
+            conv[j] &= not und.any()
+        n_unagg = np.asarray(_count_unagg_neighbors_b(
+            bucket.neighbors, bucket.mask,
+            jnp.asarray(labels.astype(np.int32))))
+        roots2 = in_set2 & (n_unagg >= min_secondary_neighbors)
+        roots |= roots2
+        rl2, counts2 = _stacked_root_labels(roots2, nv, nagg, rows)
+        adj2 = np.asarray(_join_adjacent_root_b(bucket.neighbors,
+                                                jnp.asarray(rl2)))
+        newly = (labels < 0) & (adj2 >= 0)
+        labels = np.where(newly, adj2, labels)
+        phase[newly] = 2
+        nagg += counts2
+
+        # Phase 3: max-coupling join against frozen tentative labels
+        rounds = 0
+        while ((labels < 0) & valid).any() and rounds < 4:
+            aggsize = np.zeros((bsz, rows), dtype=np.int32)
+            for j in range(bsz):
+                lj = labels[j, :nv[j]]
+                asz = np.bincount(lj[lj >= 0], minlength=max(int(nagg[j]), 1))
+                aggsize[j, :len(asz)] = asz.astype(np.int32)
+            new_labels = np.asarray(_phase3_join_b(
+                bucket.neighbors, bucket.mask,
+                jnp.asarray(labels.astype(np.int32)), jnp.asarray(aggsize)))
+            newly = (labels < 0) & (new_labels >= 0)
+            phase[newly] = 3
+            labels = new_labels
+            rounds += 1
+    else:  # basic: leftovers join the min adjacent aggregate
+        rounds = 0
+        while ((labels < 0) & valid).any() and rounds < 4:
+            lab_j = jnp.asarray(
+                np.where(labels >= 0, labels, INT32_MAX).astype(np.int32))
+            adj = np.asarray(_join_adjacent_root_b(bucket.neighbors, lab_j))
+            newly = (labels < 0) & (adj >= 0)
+            labels = np.where(newly, adj, labels)
+            phase[newly] = 3
+            rounds += 1
+
+    results = []
+    for j in range(bsz):
+        v = int(nv[j])
+        lab_j, nagg_j = _finalize_singletons(labels[j, :v].copy(),
+                                             int(nagg[j]), phase[j, :v])
+        results.append(AggregationResult(
+            lab_j.astype(np.int32), nagg_j, roots[j, :v], phase[j, :v],
+            int(total_iters[j]), bool(conv[j])))
+    return results
+
+
+__all__ = [
+    "as_graph_batch",
+    "_mis2_batch_impl", "_color_batch_impl", "_coarsen_batch_impl",
+]

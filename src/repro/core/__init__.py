@@ -21,6 +21,7 @@ from .mis2 import (
     mis2,
     mis2_compacted,
     mis2_dense,
+    mis2_dense_fixed_point,
     mis2_dense_jittable,
     run_mis2,
 )
@@ -35,7 +36,7 @@ __all__ = [
     "PRIORITY_FNS", "priorities_fixed", "priorities_xorshift",
     "priorities_xorshift_star",
     "ABLATION_CHAIN", "Mis2Options", "Mis2Result", "mis2", "mis2_compacted",
-    "mis2_dense", "mis2_dense_jittable", "run_mis2",
+    "mis2_dense", "mis2_dense_fixed_point", "mis2_dense_jittable", "run_mis2",
     "mis_k",
     "PartitionResult", "edge_cut", "partition",
     "IN", "OUT", "id_bits", "is_undecided", "pack",

@@ -129,7 +129,7 @@ def _labels_from_roots(ell: ELLGraph, roots: np.ndarray):
 # Algorithm 2
 # ---------------------------------------------------------------------------
 
-def _aggregate_basic_impl(graph, options: Mis2Options = Mis2Options(),
+def _aggregate_basic_impl(graph, options: Mis2Options | None = None,
                           engine: str = "compacted",
                           interpret=None) -> AggregationResult:
     gh = as_graph(graph)
@@ -156,7 +156,7 @@ def _aggregate_basic_impl(graph, options: Mis2Options = Mis2Options(),
 # Algorithm 3
 # ---------------------------------------------------------------------------
 
-def _aggregate_two_phase_impl(graph, options: Mis2Options = Mis2Options(),
+def _aggregate_two_phase_impl(graph, options: Mis2Options | None = None,
                               engine: str = "compacted",
                               min_secondary_neighbors: int = 2,
                               interpret=None) -> AggregationResult:
@@ -260,7 +260,7 @@ def _aggregate_serial_greedy_impl(graph) -> AggregationResult:
 # legacy public entry points (deprecated — use repro.api.coarsen)
 # ---------------------------------------------------------------------------
 
-def aggregate_basic(graph, options: Mis2Options = Mis2Options(),
+def aggregate_basic(graph, options: Mis2Options | None = None,
                     engine: str = "compacted") -> AggregationResult:
     """Deprecated entry point — use ``repro.api.coarsen(method="basic")``."""
     warn_deprecated("repro.core.aggregation.aggregate_basic",
@@ -268,7 +268,7 @@ def aggregate_basic(graph, options: Mis2Options = Mis2Options(),
     return _aggregate_basic_impl(graph, options, engine)
 
 
-def aggregate_two_phase(graph, options: Mis2Options = Mis2Options(),
+def aggregate_two_phase(graph, options: Mis2Options | None = None,
                         engine: str = "compacted",
                         min_secondary_neighbors: int = 2) -> AggregationResult:
     """Deprecated entry point — use ``repro.api.coarsen(method="two_phase")``."""

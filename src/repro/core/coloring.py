@@ -34,10 +34,12 @@ class ColoringResult:
         self.colors = np.asarray(self.colors)
 
 
-@jax.jit
-def _color_round(neighbors, mask, colors, rnd):
+def _color_round_masked(neighbors, mask, colors, rnd, b):
+    """One Luby round; ``b`` is a traced uint32 scalar so the function is
+    vmappable over padded ``[B, rows, deg]`` buckets (each graph keeps its
+    own ``b = id_bits(V_real)``, preserving single-graph priorities).
+    Padded rows must enter pre-colored so they are never contenders."""
     v = neighbors.shape[0]
-    b = id_bits(v)
     vids = jnp.arange(v, dtype=jnp.uint32)
     prio = pack(priorities_xorshift_star(rnd, vids), vids, b)
     uncolored = colors < 0
@@ -66,6 +68,12 @@ def _color_round(neighbors, mask, colors, rnd):
     high_idx = _lowest_set_bit(free_hi) + 32
     chosen = jnp.where(free_lo != 0, low_idx, high_idx).astype(jnp.int32)
     return jnp.where(uncolored & is_min, chosen, colors)
+
+
+@jax.jit
+def _color_round(neighbors, mask, colors, rnd):
+    b = jnp.uint32(id_bits(neighbors.shape[0]))
+    return _color_round_masked(neighbors, mask, colors, rnd, b)
 
 
 def _lowest_set_bit(x: jnp.ndarray) -> jnp.ndarray:

@@ -86,16 +86,26 @@ class Mis2Result:
 # dense (fully jitted) engine — packed tuples, ELL layout
 # ===========================================================================
 
-@functools.partial(jax.jit, static_argnames=("priority", "max_iters"))
-def mis2_dense_jittable(neighbors: jnp.ndarray, active: jnp.ndarray,
-                        priority: str = "xorshift_star",
-                        max_iters: int = MAX_ITERS_DEFAULT):
-    """Core fixed point; returns (packed tuple vector T, iterations).
+def mis2_dense_fixed_point(neighbors: jnp.ndarray, active: jnp.ndarray,
+                           b: jnp.ndarray, priority: str = "xorshift_star",
+                           max_iters: int = MAX_ITERS_DEFAULT):
+    """Mask-aware MIS-2 fixed point over one (possibly padded) graph.
 
-    Safe to call inside larger jitted programs (e.g. AMG setup dry-runs).
+    ``b`` is the packing id-bit count as a *traced* uint32 scalar rather
+    than a Python int derived from ``neighbors.shape[0]``.  That makes the
+    function vmappable over stacked ``[B, rows, deg]`` buckets whose member
+    graphs have different real vertex counts: each graph keeps its own
+    ``b = id_bits(V_real)``, so priorities — and therefore the resulting
+    set — are bit-identical to the single-graph run at shape ``[V_real]``.
+    Padded rows ride along inactive (T pinned to OUT, self-loop adjacency)
+    and cannot influence real rows.
+
+    The iteration counter doubles as the §V-A priority round, so it only
+    advances while this graph still has undecided vertices — under vmap a
+    converged graph stops counting (and its state is a fixed point of
+    ``body``) while its bucket mates continue.
     """
     v = neighbors.shape[0]
-    b = id_bits(v)
     vids = jnp.arange(v, dtype=jnp.uint32)
     prio_fn = PRIORITY_FNS[priority]
 
@@ -109,6 +119,7 @@ def mis2_dense_jittable(neighbors: jnp.ndarray, active: jnp.ndarray,
     def body(state):
         t, it = state
         und = is_undecided(t) & active
+        live = jnp.any(und)
         # refresh row (§V-A)
         t = jnp.where(und, pack(prio_fn(it, vids), vids, b), t)
         # refresh column: closed-neighborhood min (§V-D layout)
@@ -122,14 +133,27 @@ def mis2_dense_jittable(neighbors: jnp.ndarray, active: jnp.ndarray,
         all_eq = jnp.all(jnp.where(an, mn, t[:, None]) == t[:, None], axis=1)
         t = jnp.where(und & any_out, OUT, t)
         t = jnp.where(und & ~any_out & all_eq, IN, t)
-        return t, it + 1
+        return t, it + live.astype(jnp.uint32)
 
     t, iters = jax.lax.while_loop(cond, body, (t0, jnp.uint32(0)))
     return t, iters
 
 
+@functools.partial(jax.jit, static_argnames=("priority", "max_iters"))
+def mis2_dense_jittable(neighbors: jnp.ndarray, active: jnp.ndarray,
+                        priority: str = "xorshift_star",
+                        max_iters: int = MAX_ITERS_DEFAULT):
+    """Core fixed point; returns (packed tuple vector T, iterations).
+
+    Safe to call inside larger jitted programs (e.g. AMG setup dry-runs).
+    """
+    b = jnp.uint32(id_bits(neighbors.shape[0]))
+    return mis2_dense_fixed_point(neighbors, active, b, priority, max_iters)
+
+
 def _mis2_dense_impl(graph, active: Optional[jnp.ndarray] = None,
-                     options: Mis2Options = Mis2Options()) -> Mis2Result:
+                     options: Optional[Mis2Options] = None) -> Mis2Result:
+    options = Mis2Options() if options is None else options
     ell = as_graph(graph).ell
     v = ell.num_vertices
     if active is None:
@@ -327,9 +351,10 @@ def _decide_unpacked_csr(ts, tr, ti, ms, mr, mi, wl1_mask,
 # ===========================================================================
 
 def _mis2_compacted_impl(graph, active: Optional[np.ndarray] = None,
-                         options: Mis2Options = Mis2Options(), *,
+                         options: Optional[Mis2Options] = None, *,
                          pallas: Optional[bool] = None,
                          interpret: Optional[bool] = None) -> Mis2Result:
+    options = Mis2Options() if options is None else options
     gh = as_graph(graph)
     if options.layout == "ell":
         ell = gh.ell
@@ -444,7 +469,7 @@ def run_mis2(graph, active=None, options: Optional[Mis2Options] = None,
         f"unknown mis2 engine {engine!r} (dense | compacted | pallas)")
 
 
-def mis2(graph, active=None, options: Mis2Options = Mis2Options(),
+def mis2(graph, active=None, options: Optional[Mis2Options] = None,
          engine: str = "compacted") -> Mis2Result:
     """Deprecated entry point — use :func:`repro.api.mis2`."""
     warn_deprecated("repro.core.mis2.mis2", "repro.api.mis2")
@@ -452,7 +477,7 @@ def mis2(graph, active=None, options: Mis2Options = Mis2Options(),
 
 
 def mis2_dense(graph, active: Optional[jnp.ndarray] = None,
-               options: Mis2Options = Mis2Options()) -> Mis2Result:
+               options: Optional[Mis2Options] = None) -> Mis2Result:
     """Deprecated entry point — use ``repro.api.mis2(..., engine="dense")``."""
     warn_deprecated("repro.core.mis2.mis2_dense",
                     'repro.api.mis2(..., engine="dense")')
@@ -460,7 +485,7 @@ def mis2_dense(graph, active: Optional[jnp.ndarray] = None,
 
 
 def mis2_compacted(graph, active: Optional[np.ndarray] = None,
-                   options: Mis2Options = Mis2Options()) -> Mis2Result:
+                   options: Optional[Mis2Options] = None) -> Mis2Result:
     """Deprecated entry point — use ``repro.api.mis2`` (default engine)."""
     warn_deprecated("repro.core.mis2.mis2_compacted",
                     'repro.api.mis2(..., engine="compacted")')

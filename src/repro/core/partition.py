@@ -127,9 +127,10 @@ def _refine(g: CSRGraph, parts: np.ndarray, k: int, w: np.ndarray,
 
 
 def _partition_impl(g, num_parts: int, coarse_target: int | None = None,
-                    options: Mis2Options = Mis2Options(),
+                    options: Mis2Options | None = None,
                     engine: str = "compacted",
                     interpret=None) -> PartitionResult:
+    options = Mis2Options() if options is None else options
     gh = as_graph(g)
     g = gh.csr
     coarse_target = coarse_target or max(16 * num_parts, 256)
@@ -167,7 +168,7 @@ def _partition_impl(g, num_parts: int, coarse_target: int | None = None,
 
 
 def partition(g, num_parts: int, coarse_target: int | None = None,
-              options: Mis2Options = Mis2Options()) -> PartitionResult:
+              options: Mis2Options | None = None) -> PartitionResult:
     """Deprecated entry point — use :func:`repro.api.partition`."""
     warn_deprecated("repro.core.partition.partition", "repro.api.partition")
     return _partition_impl(g, num_parts, coarse_target, options)

@@ -11,6 +11,7 @@ from .csr import (
     degrees,
     ell_to_csr_graph,
     ensure_self_loops,
+    pad_ell_graph,
     symmetrize,
 )
 from .handle import Graph, as_csr_graph, as_ell_graph, as_graph
@@ -39,7 +40,7 @@ __all__ = [
     "Graph", "as_graph", "as_ell_graph", "as_csr_graph",
     "BucketedELL", "CSRGraph", "CSRMatrix", "ELLGraph", "ELLMatrix",
     "csr_from_coo", "csr_to_bucketed_ell", "csr_to_ell_graph", "csr_to_ell_matrix", "degrees",
-    "ell_to_csr_graph", "ensure_self_loops", "symmetrize",
+    "ell_to_csr_graph", "ensure_self_loops", "pad_ell_graph", "symmetrize",
     "elasticity3d", "laplace3d", "paper_suite", "path_graph",
     "random_skewed_graph", "random_uniform_graph",
     "coarse_graph_from_labels", "extract_diagonal", "galerkin_coarse_matrix",

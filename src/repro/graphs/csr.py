@@ -177,6 +177,32 @@ def csr_to_ell_matrix(m: CSRMatrix, width: int | None = None) -> ELLMatrix:
     return ELLMatrix(jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(mask))
 
 
+def pad_ell_graph(g: ELLGraph, num_rows: int, width: int) -> ELLGraph:
+    """Pad an ELL graph to ``[num_rows, width]`` (both >= current shape).
+
+    Follows the module's padding convention: every padded slot — the new
+    width columns of real rows and all slots of the new rows — points at
+    the row's own vertex with ``mask == False``, so closed-neighborhood
+    reductions (MIS-2 min / forall / exists) are unaffected and mask-aware
+    consumers skip the padding.  This is the shape-normalization step that
+    lets ``repro.batch`` stack many graphs into one ``[B, rows, width]``
+    bucket for a vmapped dispatch.
+    """
+    v, d = g.neighbors.shape
+    if num_rows < v or width < d:
+        raise ValueError(
+            f"pad_ell_graph target [{num_rows}, {width}] smaller than "
+            f"current [{v}, {d}]")
+    if num_rows == v and width == d:
+        return g
+    neighbors = np.repeat(np.arange(num_rows, dtype=np.int32)[:, None],
+                          width, axis=1)
+    mask = np.zeros((num_rows, width), dtype=bool)
+    neighbors[:v, :d] = np.asarray(g.neighbors)
+    mask[:v, :d] = np.asarray(g.mask)
+    return ELLGraph(jnp.asarray(neighbors), jnp.asarray(mask))
+
+
 def ell_to_csr_graph(g: ELLGraph) -> CSRGraph:
     neighbors = np.asarray(g.neighbors)
     mask = np.asarray(g.mask)

@@ -34,6 +34,7 @@ from .csr import (
     csr_to_ell_graph,
     csr_to_ell_matrix,
     ell_to_csr_graph,
+    pad_ell_graph,
 )
 
 _STRUCTS = (CSRGraph, CSRMatrix, ELLGraph, ELLMatrix)
@@ -143,6 +144,16 @@ class Graph:
             self._cache["csr_edges"] = (jnp.asarray(rows),
                                         jnp.asarray(indices.astype(np.int32)))
         return self._cache["csr_edges"]
+
+    def padded_ell(self, num_rows: int, width: int) -> ELLGraph:
+        """ELL padded to ``[num_rows, width]`` (self-loop slots, mask False),
+        cached per target shape — repeated batched dispatches of the same
+        graph into the same bucket shape reuse one padded copy."""
+        key = f"padded_ell({num_rows},{width})"
+        if key not in self._cache:
+            self._converted("pad_ell")
+            self._cache[key] = pad_ell_graph(self.ell, num_rows, width)
+        return self._cache[key]
 
     def bucketed(self, boundaries: Iterable[int] = (8, 32, 128)) -> BucketedELL:
         key = f"bucketed{tuple(boundaries)}"

@@ -113,7 +113,7 @@ def _build_hierarchy_impl(a, aggregation: str = "mis2_agg",
                           omega: float = 2.0 / 3.0,
                           jacobi_weight: float = 2.0 / 3.0,
                           smoother_sweeps: int = 2,
-                          options: Mis2Options = Mis2Options(),
+                          options: Mis2Options | None = None,
                           mis2_engine: str = "compacted",
                           interpret=None) -> AMGHierarchy:
     # aggregation dispatch via the api engine registry (aliases keep the
@@ -164,7 +164,7 @@ def build_hierarchy(a: CSRMatrix, aggregation: str = "mis2_agg",
                     max_levels: int = 10, coarse_size: int = 200,
                     omega: float = 2.0 / 3.0, jacobi_weight: float = 2.0 / 3.0,
                     smoother_sweeps: int = 2,
-                    options: Mis2Options = Mis2Options()) -> AMGHierarchy:
+                    options: Mis2Options | None = None) -> AMGHierarchy:
     """Deprecated entry point — use :func:`repro.api.amg`."""
     warn_deprecated("repro.solvers.amg.build_hierarchy", "repro.api.amg")
     return _build_hierarchy_impl(a, aggregation, max_levels, coarse_size,

@@ -113,7 +113,7 @@ def _pack_clusters(labels: np.ndarray, cluster_colors: np.ndarray,
 
 
 def setup_cluster_gs(a, aggregation: str = "two_phase",
-                     options: Mis2Options = Mis2Options(),
+                     options: Mis2Options | None = None,
                      coarsen_levels: int = 1) -> MulticolorGSPreconditioner:
     import time
 

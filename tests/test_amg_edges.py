@@ -1,0 +1,81 @@
+"""AMG edge cases: rectangular ELL padding, degenerate hierarchies, and the
+v-cycle's actual job (reducing the residual)."""
+import numpy as np
+import pytest
+
+jnp = pytest.importorskip("jax.numpy")
+
+from repro.api import Graph, amg  # noqa: E402
+from repro.graphs import laplace3d  # noqa: E402
+from repro.graphs.ops import spmv_ell  # noqa: E402
+from repro.solvers.amg import _build_hierarchy_impl, _rect_ell, v_cycle  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# _rect_ell: a row with zero entries must pad cleanly, not corrupt slots
+# ---------------------------------------------------------------------------
+
+def test_rect_ell_zero_entry_row():
+    rows = np.array([0, 0, 2])
+    cols = np.array([0, 1, 1])
+    vals = np.array([1.0, 2.0, 3.0])
+    ell = _rect_ell(rows, cols, vals, nrows=3)   # row 1 is empty
+    assert ell.cols.shape == (3, 2)
+    mask = np.asarray(ell.mask)
+    assert mask[0].tolist() == [True, True]
+    assert not mask[1].any()                      # empty row: all padding
+    assert mask[2].tolist() == [True, False]
+    # padding slots are (col 0, val 0): SpMV through the empty row yields 0
+    x = jnp.asarray(np.array([5.0, 7.0], dtype=np.float32))
+    y = np.asarray(jnp.sum(ell.vals * x[ell.cols], axis=1))
+    np.testing.assert_allclose(y, [5.0 + 14.0, 0.0, 21.0])
+
+
+def test_rect_ell_all_rows_empty_min_width():
+    ell = _rect_ell(np.array([], dtype=np.int64), np.array([], dtype=np.int64),
+                    np.array([], dtype=np.float64), nrows=2)
+    assert ell.cols.shape == (2, 1)               # d = max(1, ...) floor
+    assert not np.asarray(ell.mask).any()
+
+
+# ---------------------------------------------------------------------------
+# hierarchy build on a graph already below coarse_size: single level
+# ---------------------------------------------------------------------------
+
+def test_hierarchy_below_coarse_size_is_single_level():
+    a = laplace3d(4)                              # 64 rows < coarse_size
+    h = _build_hierarchy_impl(a, aggregation="two_phase", coarse_size=200)
+    assert len(h.levels) == 1
+    assert h.levels[0].p_ell is None and h.levels[0].r_ell is None
+    assert h.level_sizes == [(64, a.num_entries)]
+    # the v-cycle degenerates to the cached direct solve
+    b = jnp.asarray(np.random.default_rng(1).standard_normal(64)
+                    .astype(np.float32))
+    x = v_cycle(h, b)
+    r = b - spmv_ell(Graph(a).ell_matrix, x)
+    assert float(jnp.linalg.norm(r)) <= 1e-4 * float(jnp.linalg.norm(b))
+
+
+def test_facade_amg_single_level():
+    setup = amg(Graph(laplace3d(4)), coarse_size=200)
+    assert setup.num_levels == 1
+    assert setup.converged
+    assert setup.level_sizes[0][0] == 64
+
+
+# ---------------------------------------------------------------------------
+# v-cycle residual reduction (the Table V property, asserted not eyeballed)
+# ---------------------------------------------------------------------------
+
+def test_v_cycle_reduces_residual():
+    a = laplace3d(8)                              # 512 rows, 3 levels
+    h = _build_hierarchy_impl(a, aggregation="two_phase", coarse_size=64)
+    assert len(h.levels) >= 2
+    b = jnp.asarray(np.random.default_rng(0).standard_normal(a.num_rows)
+                    .astype(np.float32))
+    x = v_cycle(h, b)
+    rel = float(jnp.linalg.norm(b - spmv_ell(Graph(a).ell_matrix, x))
+                / jnp.linalg.norm(b))
+    # one V(2,2) cycle on Laplace3D contracts the residual well below 0.3
+    # (measured ~0.06); a regression in smoothing/transfer breaks this
+    assert rel < 0.3, rel

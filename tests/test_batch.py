@@ -1,0 +1,209 @@
+"""`repro.batch`: size-bucketed, vmapped multi-graph pipelines.
+
+The load-bearing invariant under test: every per-graph result from the
+batched path is **bit-identical** (equal determinism digest) to the
+single-graph ``dense`` engine, and invariant to the composition of the
+batch it rode in — batching is purely a throughput optimization.
+"""
+import numpy as np
+import pytest
+
+from conftest import verify_mis2
+from repro.api import (
+    BatchResult,
+    Graph,
+    GraphBatch,
+    Mis2Options,
+    coarsen,
+    coarsen_batch,
+    color,
+    color_batch,
+    list_engines,
+    mis2,
+    mis2_batch,
+)
+from repro.batch.container import bucket_shape
+from repro.graphs import laplace3d, pad_ell_graph, random_uniform_graph
+
+
+def mixed_graphs():
+    """laplace3d + ER random, varied sizes, spanning several buckets."""
+    return [
+        Graph(laplace3d(5).graph),                       # V=125
+        Graph(laplace3d(6).graph),                       # V=216
+        Graph(laplace3d(8).graph),                       # V=512
+        Graph(random_uniform_graph(300, 4.0, seed=3)),
+        Graph(random_uniform_graph(500, 5.0, seed=1)),
+        Graph(random_uniform_graph(800, 6.0, seed=5)),
+        Graph(random_uniform_graph(1200, 6.0, seed=7)),
+        Graph(laplace3d(4).graph),                       # V=64
+    ]
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    return mixed_graphs()
+
+
+@pytest.fixture(scope="module")
+def batch(graphs):
+    return GraphBatch(graphs)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance invariant: batched digest == single-graph dense digest
+# ---------------------------------------------------------------------------
+
+def test_batch_spans_multiple_buckets(batch):
+    assert len(batch) >= 8
+    assert batch.num_buckets >= 2
+    # bucket dims are powers of two and cover every graph exactly once
+    members = []
+    for rows, width, count in batch.bucket_shapes:
+        assert rows & (rows - 1) == 0 and width & (width - 1) == 0
+        members.append(count)
+    assert sum(members) == len(batch)
+
+
+def test_mis2_batch_digests_match_dense_engine(graphs, batch):
+    br = mis2_batch(batch)
+    assert isinstance(br, BatchResult) and len(br) == len(graphs)
+    for g, r in zip(graphs, br):
+        single = mis2(g, engine="dense")
+        assert r.digest == single.digest
+        assert r.iterations == single.iterations
+        assert r.converged and single.converged
+        verify_mis2(g.csr, r.in_set)
+
+
+@pytest.mark.parametrize("priority", ["fixed", "xorshift_star"])
+def test_mis2_batch_digests_match_across_priorities(graphs, batch, priority):
+    opts = Mis2Options(priority=priority)
+    br = mis2_batch(batch, options=opts)
+    for g, r in zip(graphs, br):
+        assert r.digest == mis2(g, options=opts, engine="dense").digest
+
+
+def test_mis2_batch_invariant_to_batch_composition(graphs):
+    full = mis2_batch(GraphBatch(graphs))
+    # same graph in a different batch (different mates, different order,
+    # different bucket occupancy) -> same digest
+    shuffled = [graphs[6], graphs[0], graphs[3]]
+    small = mis2_batch(shuffled)
+    assert small[0].digest == full[6].digest
+    assert small[1].digest == full[0].digest
+    assert small[2].digest == full[3].digest
+    solo = mis2_batch([graphs[6]])
+    assert solo[0].digest == full[6].digest
+
+
+def test_color_batch_matches_single_graph(graphs, batch):
+    cb = color_batch(batch)
+    for g, r in zip(graphs, cb):
+        single = color(g)
+        assert r.digest == single.digest
+        assert r.num_colors == single.num_colors
+        assert r.iterations == single.iterations
+
+
+@pytest.mark.parametrize("method", ["two_phase", "basic"])
+def test_coarsen_batch_matches_single_graph(graphs, batch, method):
+    ab = coarsen_batch(batch, method=method)
+    for g, r in zip(graphs, ab):
+        single = coarsen(g, method=method, mis2_engine="dense")
+        assert r.digest == single.digest
+        assert r.num_aggregates == single.num_aggregates
+        assert (r.roots == single.roots).all()
+        assert (r.phase == single.phase).all()
+        assert r.iterations == single.iterations
+
+
+# ---------------------------------------------------------------------------
+# registry integration: mis2 engine "dense_batched" (batch of one)
+# ---------------------------------------------------------------------------
+
+def test_dense_batched_engine_registered_and_bit_identical():
+    assert "dense_batched" in list_engines("mis2")["mis2"]
+    g = Graph(random_uniform_graph(700, 5.0, seed=11))
+    assert mis2(g, engine="dense_batched").digest == \
+        mis2(g, engine="dense").digest
+
+
+def test_dense_batched_engine_respects_active_mask():
+    g = Graph(laplace3d(6).graph)
+    active = np.arange(g.num_vertices) % 3 != 0
+    a = mis2(g, active=active, engine="dense_batched")
+    b = mis2(g, active=active, engine="dense")
+    assert a.digest == b.digest and a.iterations == b.iterations
+
+
+# ---------------------------------------------------------------------------
+# container: bucketing, padding, caching
+# ---------------------------------------------------------------------------
+
+def test_bucket_policy_power_of_two():
+    g = Graph(laplace3d(5).graph)           # V=125, max degree 7
+    rows, width = bucket_shape(g)
+    assert rows == 128 and width == 8
+
+
+def test_pad_ell_graph_convention_and_validation():
+    ell = Graph(laplace3d(4).graph).ell
+    padded = pad_ell_graph(ell, 128, 16)
+    assert padded.neighbors.shape == (128, 16)
+    nbrs, mask = np.asarray(padded.neighbors), np.asarray(padded.mask)
+    v, d = ell.neighbors.shape
+    # original block intact
+    assert (nbrs[:v, :d] == np.asarray(ell.neighbors)).all()
+    assert (mask[:v, :d] == np.asarray(ell.mask)).all()
+    # padding: self-loops, mask False
+    assert not mask[v:].any() and not mask[:, d:].any()
+    assert (nbrs[v:] == np.arange(v, 128)[:, None]).all()
+    assert (nbrs[:v, d:] == np.arange(v)[:, None]).all()
+    with pytest.raises(ValueError):
+        pad_ell_graph(ell, v - 1, d)
+    assert pad_ell_graph(ell, v, d) is ell  # no-op at the same shape
+
+
+def test_padded_ell_cached_on_handle(batch):
+    g = batch.graphs[0]
+    shape = bucket_shape(g)
+    _ = g.padded_ell(*shape)
+    count = g.conversions.get("pad_ell")
+    GraphBatch([g])          # re-batching hits the handle cache
+    assert g.conversions.get("pad_ell") == count
+
+
+def test_batch_result_protocol(batch):
+    br = mis2_batch(batch)
+    assert br.num_graphs == len(batch)
+    assert len(br.digests) == len(batch)
+    assert br.converged
+    assert br.wall_time_s > 0 and br.graphs_per_second > 0
+    assert br.num_buckets == batch.num_buckets
+    assert type(br[0].payload) is np.ndarray
+    assert [r.digest for r in br] == br.digests
+
+
+def test_graph_batch_rejects_empty_and_coerces():
+    with pytest.raises(ValueError):
+        GraphBatch([])
+    b = GraphBatch([laplace3d(4).graph])      # bare container coerces
+    assert len(b) == 1
+    assert GraphBatch(b).buckets is b.buckets  # batch-of-batch shares state
+
+
+def test_coarsen_batch_serial_matches_reference(graphs):
+    # serial skips bucket stacking entirely (host-sequential reference)
+    subset = graphs[:3]
+    ab = coarsen_batch(subset, method="serial")
+    assert ab.bucket_shapes == []
+    for g, r in zip(subset, ab):
+        single = coarsen(g, method="serial")
+        assert r.digest == single.digest
+        assert r.num_aggregates == single.num_aggregates
+
+
+def test_coarsen_batch_unknown_method_raises(batch):
+    with pytest.raises(ValueError, match="two_phase"):
+        coarsen_batch(batch, method="nope")
