@@ -1,0 +1,13 @@
+"""Benchmark package: one module per paper table/figure.
+
+Importing the package bootstraps ``src`` onto ``sys.path``, so
+``python -m benchmarks.run`` and ``python -m benchmarks.<name>`` both work
+without PYTHONPATH — the package import (and therefore this bootstrap)
+runs before any benchmark module's top-level ``repro`` imports.
+"""
+import sys
+from pathlib import Path
+
+_SRC = str(Path(__file__).resolve().parents[1] / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

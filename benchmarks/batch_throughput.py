@@ -89,3 +89,9 @@ def run(quick: bool = False):
         "coarsen_batched_gps": rows[1]["batched_gps"],
         "coarsen_speedup": rows[1]["speedup"],
     })
+
+
+if __name__ == "__main__":
+    from benchmarks.common import standalone
+
+    standalone(run)

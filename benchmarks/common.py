@@ -6,7 +6,8 @@ import json
 import time
 from pathlib import Path
 
-ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+REPO_ROOT = Path(__file__).resolve().parents[1]
+ARTIFACTS = REPO_ROOT / "artifacts" / "bench"
 
 
 def timeit(fn, repeats: int = 3):
@@ -39,17 +40,44 @@ def emit(name: str, rows: list[dict]):
 
 
 def emit_trajectory(name: str, record: dict) -> Path:
-    """Append one timestamped record to ``artifacts/bench/BENCH_<name>.json``.
+    """Append one timestamped record to ``artifacts/bench/BENCH_<name>.json``
+    and mirror the full history to ``BENCH_<name>.json`` at the repo root
+    (the root copy is the committed, regression-checked trajectory).
 
     The trajectory is a JSON list, one entry per benchmark run, so headline
     metrics (e.g. batched graphs/sec) accumulate across commits and can be
     plotted or regression-checked without re-parsing per-run CSVs."""
     ARTIFACTS.mkdir(parents=True, exist_ok=True)
     path = ARTIFACTS / f"BENCH_{name}.json"
-    history = json.loads(path.read_text()) if path.exists() else []
+    root = REPO_ROOT / f"BENCH_{name}.json"
+    # artifacts/ is gitignored while the root mirror is committed, so the
+    # two copies can disagree (fresh clone: no artifacts copy; local runs
+    # vs. pulled teammate entries after a fetch).  Merge both histories:
+    # distinct records survive from either side, exact duplicates collapse.
+    merged: dict[str, dict] = {}
+    for p in (path, root):
+        if p.exists():
+            for entry in json.loads(p.read_text()):
+                merged[json.dumps(entry, sort_keys=True)] = entry
+    history = sorted(merged.values(), key=lambda e: e.get("timestamp", ""))
     history.append({"timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"), **record})
-    path.write_text(json.dumps(history, indent=2) + "\n")
+    payload = json.dumps(history, indent=2) + "\n"
+    path.write_text(payload)
+    root.write_text(payload)
     return path
+
+
+def standalone(run_fn):
+    """``python -m benchmarks.<name> [--quick]`` entry, identical to the
+    corresponding ``benchmarks.run --only`` invocation.  (No PYTHONPATH
+    needed: ``benchmarks/__init__.py`` bootstraps ``src`` before any
+    benchmark module's top-level imports run.)"""
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced problem sizes (CI)")
+    run_fn(quick=ap.parse_args().quick)
 
 
 def bench_suite(scale="bench"):

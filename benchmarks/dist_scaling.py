@@ -1,0 +1,150 @@
+"""Distributed MIS-2 scaling (the ROADMAP sharding axis made measurable).
+
+Two measurements per run:
+
+1. **Execution parity + wall time** — a subprocess forced to 8 host
+   devices (``XLA_FLAGS=--xla_force_host_platform_device_count=8``) runs
+   both distributed engines against ``dense`` for V ∈ {1000, 1022, 997}
+   (1022 pads to 1024 on 8 devices — the power-of-two id_bits crossing)
+   and asserts determinism-digest equality: the paper's portability claim
+   exercised on a real vertex-partitioned mesh every benchmark run.
+2. **Collective-traffic model** — the analytic per-iteration §V-C model
+   (two_gather = 2·V·4 B, single_gather = V·4 B) across device counts
+   16 → 512, persisted as ``artifacts/dryrun_graph/mis2_*.json`` records —
+   the inputs ``figs4_5_scaling`` axis B consumes (per-device wire bytes
+   stay ~flat: the all-gather volume is V·4 B × (P-1)/P per device).
+
+    PYTHONPATH=src python -m benchmarks.run --only dist [--quick]
+
+Emits ``dist_scaling.csv`` plus a ``BENCH_dist_scaling.json`` trajectory
+entry (mirrored to the repo root).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from benchmarks.common import emit, emit_trajectory
+
+REPO = Path(__file__).resolve().parents[1]
+
+# the subprocess is unavoidable: host-device forcing must precede jax init
+_CHILD = """
+import json, sys
+import jax
+import repro
+from repro.graphs import laplace3d, random_uniform_graph
+
+sizes = json.loads(sys.argv[1])
+out = {"num_devices": len(jax.devices()), "rows": []}
+for v in sizes:
+    g = repro.Graph(laplace3d(10).graph) if v == 1000 else \\
+        repro.Graph(random_uniform_graph(v, 6.0, seed=v))
+    dense = repro.mis2(g, engine="dense")
+    for eng in ("distributed", "distributed_single_gather"):
+        r = repro.mis2(g, engine=eng)
+        out["rows"].append({
+            "V": v, "engine": eng, "iterations": r.iterations,
+            "seconds": r.wall_time_s,
+            "digest_match": r.digest == dense.digest,
+            "wire_bytes_per_device": r.collectives["wire_bytes_per_device"],
+            "wire_bytes_per_device_per_iteration":
+                r.collectives["wire_bytes_per_device_per_iteration"],
+        })
+print("RESULT:" + json.dumps(out))
+"""
+
+MODEL_V, MODEL_D = 1_000_000, 7        # Laplace3D-100^3 scale, 7-point stencil
+
+
+def _run_forced_devices(sizes, num_devices: int = 8) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={num_devices}"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    out = subprocess.run([sys.executable, "-c", _CHILD, json.dumps(sizes)],
+                         capture_output=True, text=True, env=env, cwd=REPO,
+                         timeout=1200)
+    if out.returncode != 0:
+        raise RuntimeError(f"dist_scaling subprocess failed:\n"
+                           f"{out.stderr[-2000:]}")
+    return json.loads(out.stdout.rsplit("RESULT:", 1)[1])
+
+
+def run(quick: bool = False):
+    from repro.core.dist import (
+        collective_bytes_per_iteration,
+        write_mis2_dryrun_record,
+    )
+
+    rows = []
+
+    # 1. execution on a forced 8-device host mesh: digest parity + time
+    sizes = [254] if quick else [1000, 1022, 997]
+    payload = _run_forced_devices(sizes)
+    for r in payload["rows"]:
+        if not r["digest_match"]:
+            raise AssertionError(
+                f"distributed drift vs dense: V={r['V']} {r['engine']}")
+        rows.append({
+            "axis": "exec_8dev", "case": f"V{r['V']}",
+            "V": r["V"], "engine": r["engine"], "devices": 8,
+            "iterations": r["iterations"], "seconds": r["seconds"],
+            # per-iteration, the same unit the model rows report
+            "wire_mb_per_device": round(
+                r["wire_bytes_per_device_per_iteration"] / 1e6, 4),
+            "wire_mb_per_device_total": round(
+                r["wire_bytes_per_device"] / 1e6, 4),
+            "us_per_call": r["seconds"] * 1e6,
+        })
+
+    # 2. collective-traffic model across device counts -> dry-run records
+    # (clear this run's namespace first: a --quick pass writes fewer device
+    # counts, and stale p<N> records would otherwise leak into axis B)
+    from repro.core.dist import DRYRUN_GRAPH_DIR
+
+    for stale in DRYRUN_GRAPH_DIR.glob("mis2_*__p*.json"):
+        stale.unlink()
+    counts = (16, 64) if quick else (16, 64, 256, 512)
+    for p in counts:
+        for single in (False, True):
+            write_mis2_dryrun_record(MODEL_V, MODEL_D, p,
+                                     single_gather=single)
+            per = collective_bytes_per_iteration(MODEL_V, p, single)
+            rows.append({
+                "axis": "model", "case": f"V{MODEL_V}_P{p}",
+                "V": MODEL_V,
+                "engine": "distributed_single_gather" if single
+                else "distributed",
+                "devices": p, "iterations": "", "seconds": 0.0,
+                "wire_mb_per_device": round(
+                    per["wire_bytes_per_device_per_iteration"] / 1e6, 3),
+                "wire_mb_per_device_total": "",
+                "us_per_call": 0.0,
+            })
+
+    emit("dist_scaling", rows)
+    exec_rows = [r for r in rows if r["axis"] == "exec_8dev"]
+    two = [r for r in exec_rows if r["engine"] == "distributed"]
+    single = [r for r in exec_rows
+              if r["engine"] == "distributed_single_gather"]
+    emit_trajectory("dist_scaling", {
+        "quick": quick,
+        "num_devices": payload["num_devices"],
+        "sizes": sizes,
+        "digest_parity": True,       # asserted above for every row
+        "two_gather_seconds": {r["case"]: r["seconds"] for r in two},
+        "single_gather_seconds": {r["case"]: r["seconds"] for r in single},
+        "model_wire_mb_per_device_ratio_single_over_two": 0.5,
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import standalone
+
+    standalone(run)

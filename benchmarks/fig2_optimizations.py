@@ -13,7 +13,7 @@ from __future__ import annotations
 
 from repro.api import ABLATION_CHAIN, mis2
 
-from .common import bench_suite, emit, timeit
+from benchmarks.common import bench_suite, emit, timeit
 
 
 def run(quick: bool = False):
@@ -32,3 +32,9 @@ def run(quick: bool = False):
             })
     emit("fig2_optimizations", rows)
     return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import standalone
+
+    standalone(run)

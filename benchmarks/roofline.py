@@ -7,7 +7,7 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-from .common import emit
+from benchmarks.common import emit
 
 DRYRUN = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
 
@@ -82,3 +82,9 @@ def markdown_table(records=None) -> str:
             f"{rec.get('fits_hbm')} | {rec.get('microbatches')} | "
             f"{rec.get('zero1')} |")
     return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    from benchmarks.common import standalone
+
+    standalone(run)

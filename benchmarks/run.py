@@ -8,14 +8,12 @@ artifacts/bench/<name>.csv per table.
 from __future__ import annotations
 
 import argparse
-import sys
 import time
-from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
-
+# src path bootstrap lives in benchmarks/__init__.py (runs on package import)
 from benchmarks import (  # noqa: E402
     batch_throughput,
+    dist_scaling,
     fig2_optimizations,
     figs4_5_scaling,
     roofline,
@@ -33,6 +31,8 @@ ALL = {
     "table4": table4_quality.run,
     "table5": table5_amg.run,
     "table6": table6_cluster_gs.run,
+    # dist before figs4_5: it generates the dry-run records axis B reads
+    "dist": dist_scaling.run,
     "figs4_5": figs4_5_scaling.run,
     "roofline": roofline.run,
     "batch": batch_throughput.run,

@@ -7,7 +7,7 @@ from __future__ import annotations
 
 from repro.api import Mis2Options, mis2
 
-from .common import bench_suite, emit
+from benchmarks.common import bench_suite, emit
 
 
 def run(quick: bool = False):
@@ -29,3 +29,9 @@ def run(quick: bool = False):
         })
     emit("table1_priorities", rows)
     return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import standalone
+
+    standalone(run)

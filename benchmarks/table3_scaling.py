@@ -8,7 +8,7 @@ from __future__ import annotations
 from repro.api import Graph, mis2
 from repro.graphs import elasticity3d, laplace3d
 
-from .common import emit, timeit
+from benchmarks.common import emit, timeit
 
 PAPER = {
     ("laplace", (50, 50, 50)): (11469, 9),
@@ -45,3 +45,9 @@ def run(quick: bool = False):
         })
     emit("table3_scaling", rows)
     return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import standalone
+
+    standalone(run)

@@ -7,7 +7,7 @@ from __future__ import annotations
 
 from repro.api import ABLATION_CHAIN, mis2
 
-from .common import bench_suite, emit
+from benchmarks.common import bench_suite, emit
 
 
 def run(quick: bool = False):
@@ -27,3 +27,9 @@ def run(quick: bool = False):
         })
     emit("table4_quality", rows)
     return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import standalone
+
+    standalone(run)

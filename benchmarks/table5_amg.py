@@ -18,7 +18,7 @@ from repro.graphs import laplace3d
 from repro.graphs.ops import spmv_ell
 from repro.solvers import cg
 
-from .common import emit
+from benchmarks.common import emit
 
 
 def run(quick: bool = False):
@@ -50,3 +50,9 @@ def run(quick: bool = False):
         })
     emit("table5_amg", rows)
     return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import standalone
+
+    standalone(run)

@@ -16,7 +16,7 @@ from repro.graphs import elasticity3d, laplace3d
 from repro.graphs.ops import spmv_ell
 from repro.solvers import gmres, setup_cluster_gs, setup_point_gs
 
-from .common import emit
+from benchmarks.common import emit
 
 
 def run(quick: bool = False):
@@ -52,3 +52,9 @@ def run(quick: bool = False):
             })
     emit("table6_cluster_gs", rows)
     return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import standalone
+
+    standalone(run)

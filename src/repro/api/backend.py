@@ -11,6 +11,10 @@ Replaces the seed's scattered knobs — ``Mis2Options.use_pallas``, per-call
   for real on TPU/GPU.  The seed hard-coded ``interpret=True``, which
   silently ran the interpreter even on accelerators.
 * ``device``     optional JAX device for graph/array placement.
+* ``mesh`` / ``axis``  device mesh + partition axis for the distributed
+  (shard_map) engines.  ``None`` (default) = one flat axis over every
+  attached device; a multi-axis mesh with ``axis=None`` flattens all its
+  axes into the vertex partition.
 
 This module is import-cycle-safe by construction: it depends only on
 ``jax`` so both ``kernels/`` (below ``core``) and the facade (above it)
@@ -42,11 +46,27 @@ class Backend:
     pallas: bool = False
     interpret: Optional[bool] = None   # None = auto (interpret iff no accel)
     device: Any = None                 # optional jax.Device for placement
+    mesh: Any = None                   # optional jax.sharding.Mesh (sharding)
+    axis: Any = None                   # mesh axis name (or tuple) to shard on
 
     def resolve_interpret(self) -> bool:
         if self.interpret is not None:
             return bool(self.interpret)
         return default_interpret()
+
+    def resolve_mesh(self):
+        """(mesh, axis) for the distributed engines.
+
+        ``Backend(mesh=..., axis=...)`` is honored as-is (``axis=None`` on
+        a multi-axis mesh flattens every axis into the vertex partition);
+        the default is one flat ``"x"`` axis over every attached device.
+        The actual defaulting lives in ``core.dist._resolve_mesh`` so the
+        facade path and direct core calls can never diverge.
+        """
+        from ..core.dist import _resolve_mesh
+
+        mesh, axis, _ = _resolve_mesh(self.mesh, self.axis)
+        return mesh, axis
 
     def with_(self, **changes) -> "Backend":
         return replace(self, **changes)

@@ -7,8 +7,13 @@ facade (or looks an engine up lazily from a lower layer, e.g.
 Engine call conventions
 -----------------------
 * ``mis2``:        fn(graph, active, options, backend) -> core Mis2Result
-* ``aggregation``: fn(graph, options=None, mis2_engine="compacted",
-                      interpret=None) -> core AggregationResult
+* ``aggregation``: fn(graph, options=None, mis2_engine=None,
+                      interpret=None, min_secondary_neighbors=2,
+                      backend=None) -> core AggregationResult
+                   (``mis2_engine=None`` = the engine's own default inner
+                   fixed point; ``backend`` is forwarded by the facade
+                   only when the engine declares it, so externally
+                   registered engines on the old convention keep working)
 * ``coloring``:    fn(graph, max_rounds, backend) -> core ColoringResult
 * ``partition``:   fn(graph, num_parts, coarse_target, options, backend)
                    -> core PartitionResult
@@ -30,6 +35,19 @@ from .registry import register_engine
 
 def _opts(options) -> Mis2Options:
     return Mis2Options() if options is None else options
+
+
+def _dist_mesh_kw(mis2_engine, backend) -> dict:
+    """mesh/axis kwargs for aggregation impls whose inner MIS-2 engine is
+    distributed — the Backend mesh policy must reach the sharded fixed
+    point even through the single-device aggregation drivers."""
+    if mis2_engine in ("distributed", "distributed_single_gather"):
+        from .backend import get_default_backend
+
+        be = backend if backend is not None else get_default_backend()
+        mesh, axis = be.resolve_mesh()
+        return {"mesh": mesh, "axis": axis}
+    return {}
 
 
 # -- mis2 -------------------------------------------------------------------
@@ -68,31 +86,92 @@ def _mis2_dense_batched(graph, active, options, backend: Backend):
     return _mis2_batch_impl(GraphBatch([graph]), _opts(options), actives)[0]
 
 
+@register_engine("mis2", "distributed",
+                 doc="shard_map vertex partition over Backend(mesh=..., "
+                     "axis=...): T and M all-gathered per iteration "
+                     "(2·V·4 B collective traffic) — bit-identical to "
+                     "'dense' for any device count")
+def _mis2_distributed(graph, active, options, backend: Backend):
+    from ..core.dist import _mis2_distributed_impl
+
+    mesh, axis = backend.resolve_mesh()
+    return _mis2_distributed_impl(graph, active, _opts(options),
+                                  mesh=mesh, axis=axis, single_gather=False)
+
+
+@register_engine("mis2", "distributed_single_gather",
+                 doc="distributed variant gathering T once per iteration "
+                     "and recomputing M locally (V·4 B collective traffic "
+                     "— half of 'distributed'; replicates the ELL "
+                     "adjacency)")
+def _mis2_distributed_single_gather(graph, active, options, backend: Backend):
+    from ..core.dist import _mis2_distributed_impl
+
+    mesh, axis = backend.resolve_mesh()
+    return _mis2_distributed_impl(graph, active, _opts(options),
+                                  mesh=mesh, axis=axis, single_gather=True)
+
+
 # -- aggregation (coarsening) ----------------------------------------------
 
 @register_engine("aggregation", "basic", aliases=("mis2_basic",),
                  doc="paper Alg. 2 (Bell-style): MIS-2 roots + neighbors")
-def _agg_basic(graph, options=None, mis2_engine="compacted", interpret=None,
-               min_secondary_neighbors=2):
+def _agg_basic(graph, options=None, mis2_engine=None, interpret=None,
+               min_secondary_neighbors=2, backend=None):
+    mis2_engine = mis2_engine or "compacted"
     return _aggregate_basic_impl(graph, _opts(options), mis2_engine,
-                                 interpret=interpret)
+                                 interpret=interpret,
+                                 **_dist_mesh_kw(mis2_engine, backend))
 
 
 @register_engine("aggregation", "two_phase", aliases=("mis2_agg",),
                  doc="paper Alg. 3 (ML-style): two MIS-2 phases + "
                      "max-coupling cleanup")
-def _agg_two_phase(graph, options=None, mis2_engine="compacted",
-                   interpret=None, min_secondary_neighbors=2):
+def _agg_two_phase(graph, options=None, mis2_engine=None,
+                   interpret=None, min_secondary_neighbors=2, backend=None):
+    mis2_engine = mis2_engine or "compacted"
     return _aggregate_two_phase_impl(graph, _opts(options), mis2_engine,
                                      min_secondary_neighbors,
-                                     interpret=interpret)
+                                     interpret=interpret,
+                                     **_dist_mesh_kw(mis2_engine, backend))
 
 
 @register_engine("aggregation", "serial",
                  doc="host-sequential greedy reference (Table V 'Serial Agg')")
-def _agg_serial(graph, options=None, mis2_engine="compacted", interpret=None,
-                min_secondary_neighbors=2):
+def _agg_serial(graph, options=None, mis2_engine=None, interpret=None,
+                min_secondary_neighbors=2, backend=None):
     return _aggregate_serial_greedy_impl(graph)
+
+
+@register_engine("aggregation", "two_phase_distributed",
+                 doc="paper Alg. 3 sharded over Backend(mesh=...): both "
+                     "MIS-2 phases run the distributed fixed point and "
+                     "each label-propagation round is one label "
+                     "all-gather + local rowwise join — labels "
+                     "bit-identical to 'two_phase'")
+def _agg_two_phase_distributed(graph, options=None,
+                               mis2_engine=None, interpret=None,
+                               min_secondary_neighbors=2, backend=None):
+    from ..core.aggregation import _aggregate_two_phase_distributed_impl
+    from .backend import get_default_backend
+
+    # None = this method's default fixed point; every explicit value must
+    # name one of the two distributed engines (a deliberate 'compacted'
+    # here is as wrong as 'pallas' and raises rather than being absorbed).
+    if mis2_engine in (None, "distributed"):
+        single_gather = False
+    elif mis2_engine == "distributed_single_gather":
+        single_gather = True
+    else:
+        raise ValueError(
+            f"two_phase_distributed runs a distributed MIS-2; got "
+            f"mis2_engine={mis2_engine!r} (use 'distributed' | "
+            "'distributed_single_gather')")
+    be = backend if backend is not None else get_default_backend()
+    mesh, axis = be.resolve_mesh()
+    return _aggregate_two_phase_distributed_impl(
+        graph, _opts(options), min_secondary_neighbors, mesh=mesh, axis=axis,
+        single_gather=single_gather)
 
 
 # -- coloring ---------------------------------------------------------------

@@ -51,8 +51,11 @@ def mis2(graph, *, active=None, options: Optional[Mis2Options] = None,
          engine: str = "compacted",
          backend: Optional[Backend] = None) -> Mis2Result:
     """Distance-2 maximal independent set (paper Alg. 1), deterministic
-    across engines: ``dense`` | ``compacted`` | ``pallas`` return
-    bit-identical sets (equal ``digest``) for equal options."""
+    across engines: ``dense`` | ``compacted`` | ``pallas`` |
+    ``distributed`` | ``distributed_single_gather`` return bit-identical
+    sets (equal ``digest``) for equal options.  The distributed engines
+    shard vertices over ``Backend(mesh=..., axis=...)`` and report their
+    collective-byte accounting in ``result.collectives``."""
     be = resolve_backend(backend)
     gh = _prepare(graph, be)
     if be.pallas and engine == "compacted":
@@ -61,7 +64,8 @@ def mis2(graph, *, active=None, options: Optional[Mis2Options] = None,
     t0 = time.perf_counter()
     r = fn(gh, active, options, be)
     dt = time.perf_counter() - t0
-    return Mis2Result(r.in_set, r.iterations, r.converged, dt, engine=engine)
+    return Mis2Result(r.in_set, r.iterations, r.converged, dt, engine=engine,
+                      collectives=getattr(r, "collectives", None))
 
 
 def misk(graph, k: int = 2, *, priority: str = "xorshift_star",
@@ -79,31 +83,53 @@ def misk(graph, k: int = 2, *, priority: str = "xorshift_star",
 
 def color(graph, *, max_rounds: int = 256, engine: str = "luby",
           backend: Optional[Backend] = None) -> ColoringResult:
-    """Deterministic parallel greedy distance-1 coloring."""
+    """Deterministic parallel greedy distance-1 coloring.  If the round
+    limit is hit before every vertex is colored the result comes back with
+    ``converged=False`` (uncolored vertices hold ``-1``) instead of
+    raising."""
     be = resolve_backend(backend)
     gh = _prepare(graph, be)
     fn = get_engine("coloring", engine)
     t0 = time.perf_counter()
     r = fn(gh, max_rounds, be)
     dt = time.perf_counter() - t0
-    return ColoringResult(r.colors, r.rounds, True, dt,
+    return ColoringResult(r.colors, r.rounds, r.converged, dt,
                           num_colors=r.num_colors)
 
 
 def coarsen(graph, *, method: str = "two_phase",
             options: Optional[Mis2Options] = None,
-            mis2_engine: str = "compacted",
+            mis2_engine: Optional[str] = None,
             min_secondary_neighbors: int = 2,
             backend: Optional[Backend] = None) -> AggregationResult:
     """MIS-2 graph coarsening: ``method`` is ``two_phase`` (paper Alg. 3),
-    ``basic`` (Alg. 2) or ``serial`` (host-sequential reference)."""
+    ``basic`` (Alg. 2), ``serial`` (host-sequential reference) or
+    ``two_phase_distributed`` (Alg. 3 sharded over ``Backend(mesh=...)``;
+    pass ``mis2_engine="distributed_single_gather"`` for the half-traffic
+    gather schedule).  ``mis2_engine=None`` means the method's default
+    inner fixed point (``compacted`` for the single-device methods,
+    ``distributed`` for the sharded one); an explicit engine a method
+    cannot honor raises.
+
+    ``backend`` is forwarded only to engines that declare it, so
+    externally registered aggregation engines using the pre-backend call
+    convention keep working."""
+    import inspect
+
     be = resolve_backend(backend)
     gh = _prepare(graph, be)
     fn = get_engine("aggregation", method)
+    kwargs = dict(options=options, interpret=be.resolve_interpret(),
+                  min_secondary_neighbors=min_secondary_neighbors)
+    if mis2_engine is not None:
+        # None = "engine's own default": omit the kwarg entirely so engines
+        # registered with any default spelling (old convention:
+        # mis2_engine="compacted") keep applying their own
+        kwargs["mis2_engine"] = mis2_engine
+    if "backend" in inspect.signature(fn).parameters:
+        kwargs["backend"] = be
     t0 = time.perf_counter()
-    r = fn(gh, options=options, mis2_engine=mis2_engine,
-           interpret=be.resolve_interpret(),
-           min_secondary_neighbors=min_secondary_neighbors)
+    r = fn(gh, **kwargs)
     dt = time.perf_counter() - t0
     return AggregationResult(r.labels, r.mis2_iterations, r.converged, dt,
                              num_aggregates=r.num_aggregates, roots=r.roots,
@@ -174,7 +200,7 @@ def color_batch(graphs, *, max_rounds: int = 256,
     core = _color_batch_impl(batch, max_rounds)
     dt = time.perf_counter() - t0
     per = dt / max(1, len(core))
-    results = [ColoringResult(r.colors, r.rounds, True, per,
+    results = [ColoringResult(r.colors, r.rounds, r.converged, per,
                               num_colors=r.num_colors) for r in core]
     return BatchResult(results, dt, engine="luby_batched",
                        bucket_shapes=batch.bucket_shapes)

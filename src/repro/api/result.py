@@ -62,6 +62,8 @@ class Mis2Result(Result):
     """Distance-2 (or -k) MIS: ``payload`` is the bool membership mask."""
 
     engine: str = ""
+    collectives: dict | None = None   # distributed engines: per-run §V-C
+    #                                   collective-byte accounting
 
     @property
     def in_set(self) -> np.ndarray:

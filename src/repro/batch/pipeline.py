@@ -45,12 +45,11 @@ from ..core.aggregation import (
 )
 from ..core.coloring import MAX_COLORS, ColoringResult, _color_round_masked
 from ..core.mis2 import (
-    U32MAX,
     Mis2Options,
     Mis2Result,
     mis2_dense_fixed_point,
 )
-from ..core.tuples import IN
+from ..core.tuples import IN, is_undecided
 from .container import GraphBatch, as_graph_batch
 
 # ---------------------------------------------------------------------------
@@ -111,7 +110,7 @@ def _mis2_batch_impl(batch: GraphBatch,
         for j, gi in enumerate(bucket.indices):
             v = int(bucket.num_vertices[j])
             tj = t_np[j, :v]
-            undecided = (tj != np.uint32(IN)) & (tj != U32MAX) & act_np[j, :v]
+            undecided = is_undecided(tj) & act_np[j, :v]
             out[gi] = Mis2Result(tj == np.uint32(IN), int(iters_np[j]),
                                  not undecided.any())
     return out
@@ -146,13 +145,15 @@ def _color_batch_impl(batch: GraphBatch,
         for j, gi in enumerate(bucket.indices):
             v = int(bucket.num_vertices[j])
             cj = c[j, :v]
-            if (cj < 0).any():
-                raise RuntimeError("coloring did not converge")
-            num = int(cj.max()) + 1 if v else 0
+            converged = not (cj < 0).any()
+            num = int(cj.max()) + 1 if v and (cj >= 0).any() else 0
             if num > MAX_COLORS:
                 raise RuntimeError(
                     f"{num} colors exceed MAX_COLORS={MAX_COLORS}")
-            out[gi] = ColoringResult(cj, num, int(done_round[j]))
+            # round-limit hits are reported (converged=False, -1 colors on
+            # the stragglers), matching the single-graph engine
+            out[gi] = ColoringResult(
+                cj, num, int(done_round[j]) if converged else rnd, converged)
     return out
 
 
@@ -217,8 +218,7 @@ def _coarsen_bucket(bucket, method: str, options: Mis2Options,
     in_set1 = (t1_np == np.uint32(IN)) & valid
     conv = np.empty(bsz, dtype=bool)
     for j in range(bsz):
-        tj = t1_np[j, :nv[j]]
-        conv[j] = not ((tj != np.uint32(IN)) & (tj != U32MAX)).any()
+        conv[j] = not is_undecided(t1_np[j, :nv[j]]).any()
     total_iters = it1_np.astype(np.int64).copy()
 
     root_label, nagg = _stacked_root_labels(in_set1, nv, np.zeros(bsz), rows)
@@ -239,8 +239,7 @@ def _coarsen_bucket(bucket, method: str, options: Mis2Options,
         total_iters += it2_np
         in_set2 = (t2_np == np.uint32(IN)) & valid
         for j in range(bsz):
-            tj = t2_np[j, :nv[j]]
-            und = (tj != np.uint32(IN)) & (tj != U32MAX) & unagg[j, :nv[j]]
+            und = is_undecided(t2_np[j, :nv[j]]) & unagg[j, :nv[j]]
             conv[j] &= not und.any()
         n_unagg = np.asarray(_count_unagg_neighbors_b(
             bucket.neighbors, bucket.mask,

@@ -52,7 +52,20 @@ class AggregationResult:
 
 # ---------------------------------------------------------------------------
 # vectorized helpers
+#
+# Each helper is split into a rowwise body over an explicit row block
+# (``*_rows``) plus the single-device full-graph wrapper: the distributed
+# coarsening in ``core.dist`` runs the SAME rowwise body on shard_map row
+# blocks (with gathered global label vectors), which is what makes the
+# sharded labels bit-identical to the single-device engines.
 # ---------------------------------------------------------------------------
+
+def _join_rows(neighbors_rows: jnp.ndarray, root_label_global: jnp.ndarray):
+    """Rowwise body of :func:`_join_adjacent_root` over a row block."""
+    cand = root_label_global[neighbors_rows]   # [rows, D] (self-pad: own label)
+    lab = jnp.min(cand, axis=1)
+    return jnp.where(lab == INT32_MAX, jnp.int32(-1), lab)
+
 
 @jax.jit
 def _join_adjacent_root(neighbors: jnp.ndarray, root_label: jnp.ndarray):
@@ -62,19 +75,22 @@ def _join_adjacent_root(neighbors: jnp.ndarray, root_label: jnp.ndarray):
     A vertex adjacent to two distinct roots would contradict distance-2
     independence, so min() is exact, not a tie-break.
     """
-    cand = root_label[neighbors]            # [V, D] (self-padding: own label)
-    lab = jnp.min(cand, axis=1)
-    return jnp.where(lab == INT32_MAX, jnp.int32(-1), lab)
+    return _join_rows(neighbors, root_label)
+
+
+def _count_unagg_rows(neighbors_rows, mask_rows, row_ids, labels_global):
+    """Rowwise body of :func:`_count_unagg_neighbors` over a row block."""
+    real = mask_rows & (neighbors_rows != row_ids[:, None])
+    unagg = labels_global[neighbors_rows] < 0
+    return jnp.sum(real & unagg, axis=1)
 
 
 @jax.jit
 def _count_unagg_neighbors(neighbors, mask, labels):
     """# real neighbors (excluding self) that are unaggregated."""
     v = neighbors.shape[0]
-    self_ids = jnp.arange(v, dtype=neighbors.dtype)[:, None]
-    real = mask & (neighbors != self_ids)
-    unagg = labels[neighbors] < 0
-    return jnp.sum(real & unagg, axis=1)
+    row_ids = jnp.arange(v, dtype=neighbors.dtype)
+    return _count_unagg_rows(neighbors, mask, row_ids, labels)
 
 
 def _phase3_keys(labels_n, valid, aggsize):
@@ -89,15 +105,15 @@ def _phase3_keys(labels_n, valid, aggsize):
     return coupling, size_n
 
 
-@jax.jit
-def _phase3_join(neighbors, mask, labels, aggsize):
-    """Leftovers join max-coupling adjacent aggregate (Alg 3 phase 3)."""
-    v = neighbors.shape[0]
-    labels_n = labels[neighbors]                     # tentative labels
-    self_ids = jnp.arange(v, dtype=neighbors.dtype)[:, None]
-    valid = mask & (neighbors != self_ids) & (labels_n >= 0)
+def _phase3_rows(neighbors_rows, mask_rows, row_ids, labels_global,
+                 labels_rows, aggsize):
+    """Rowwise body of :func:`_phase3_join` over a row block (neighbor
+    labels looked up in ``labels_global``, joins applied to
+    ``labels_rows``)."""
+    labels_n = labels_global[neighbors_rows]         # tentative labels
+    valid = mask_rows & (neighbors_rows != row_ids[:, None]) & (labels_n >= 0)
     coupling, size_n = _phase3_keys(labels_n, valid, aggsize)
-    d = neighbors.shape[1]
+    d = neighbors_rows.shape[1]
 
     # lexicographic argmin over slots of (-coupling, size, label); invalid last
     best_c = jnp.where(valid[:, 0], coupling[:, 0], -1)
@@ -113,7 +129,15 @@ def _phase3_join(neighbors, mask, labels, aggsize):
         best_s = jnp.where(better, sj, best_s)
         best_l = jnp.where(better, lj, best_l)
     joined = (best_c > 0) & (best_l != INT32_MAX)
-    return jnp.where((labels < 0) & joined, best_l, labels)
+    return jnp.where((labels_rows < 0) & joined, best_l, labels_rows)
+
+
+@jax.jit
+def _phase3_join(neighbors, mask, labels, aggsize):
+    """Leftovers join max-coupling adjacent aggregate (Alg 3 phase 3)."""
+    v = neighbors.shape[0]
+    row_ids = jnp.arange(v, dtype=neighbors.dtype)
+    return _phase3_rows(neighbors, mask, row_ids, labels, labels, aggsize)
 
 
 def _labels_from_roots(ell: ELLGraph, roots: np.ndarray):
@@ -131,10 +155,12 @@ def _labels_from_roots(ell: ELLGraph, roots: np.ndarray):
 
 def _aggregate_basic_impl(graph, options: Mis2Options | None = None,
                           engine: str = "compacted",
-                          interpret=None) -> AggregationResult:
+                          interpret=None, mesh=None,
+                          axis=None) -> AggregationResult:
     gh = as_graph(graph)
     ell = gh.ell
-    r = run_mis2(gh, options=options, engine=engine, interpret=interpret)
+    r = run_mis2(gh, options=options, engine=engine, interpret=interpret,
+                 mesh=mesh, axis=axis)
     labels, nagg = _labels_from_roots(ell, r.in_set)
     phase = np.where(labels >= 0, 1, 0).astype(np.uint8)
 
@@ -159,13 +185,15 @@ def _aggregate_basic_impl(graph, options: Mis2Options | None = None,
 def _aggregate_two_phase_impl(graph, options: Mis2Options | None = None,
                               engine: str = "compacted",
                               min_secondary_neighbors: int = 2,
-                              interpret=None) -> AggregationResult:
+                              interpret=None, mesh=None,
+                              axis=None) -> AggregationResult:
     gh = as_graph(graph)
     ell = gh.ell
     v = ell.num_vertices
 
     # Phase 1: MIS-2 roots + direct neighbors
-    r1 = run_mis2(gh, options=options, engine=engine, interpret=interpret)
+    r1 = run_mis2(gh, options=options, engine=engine, interpret=interpret,
+                  mesh=mesh, axis=axis)
     labels, nagg = _labels_from_roots(ell, r1.in_set)
     phase = np.where(labels >= 0, 1, 0).astype(np.uint8)
     total_iters = r1.iterations
@@ -176,7 +204,8 @@ def _aggregate_two_phase_impl(graph, options: Mis2Options | None = None,
     roots2 = np.zeros(v, dtype=bool)
     if unagg.any():
         r2 = run_mis2(gh, active=jnp.asarray(unagg), options=options,
-                      engine=engine, interpret=interpret)
+                      engine=engine, interpret=interpret, mesh=mesh,
+                      axis=axis)
         total_iters += r2.iterations
         converged = converged and r2.converged
         n_unagg_nbrs = np.asarray(_count_unagg_neighbors(
@@ -198,6 +227,92 @@ def _aggregate_two_phase_impl(graph, options: Mis2Options | None = None,
         new_labels = np.asarray(_phase3_join(
             ell.neighbors, ell.mask, jnp.asarray(labels.astype(np.int32)),
             jnp.asarray(aggsize.astype(np.int32))))
+        newly = (labels < 0) & (new_labels >= 0)
+        phase[newly] = 3
+        labels = new_labels
+        rounds += 1
+
+    labels, nagg = _finalize_singletons(labels, nagg, phase)
+    return AggregationResult(labels.astype(np.int32), nagg,
+                             r1.in_set | roots2, phase, total_iters,
+                             converged)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3, sharded (paper Alg. 2/3 rounds over the mesh — see core.dist)
+# ---------------------------------------------------------------------------
+
+def _aggregate_two_phase_distributed_impl(
+        graph, options: Mis2Options | None = None,
+        min_secondary_neighbors: int = 2, *, mesh=None, axis=None,
+        single_gather: bool = False) -> AggregationResult:
+    """Distributed ML-style coarsening: both MIS-2 phases run the sharded
+    fixed point, and every label-propagation round (root join, unaggregated
+    count, max-coupling phase 3) is one label all-gather + local rowwise
+    join per round (V·4 bytes of collective traffic each).  Labels are
+    bit-identical to the single-device ``two_phase`` engine: the sharded
+    rounds share the exact rowwise arithmetic via the ``*_rows`` helpers.
+    """
+    from .dist import (
+        _mis2_distributed_impl,
+        _resolve_mesh,
+        count_unagg_neighbors_distributed,
+        join_adjacent_root_distributed,
+        phase3_join_distributed,
+        prepare_padded,
+    )
+
+    gh = as_graph(graph)
+    v = gh.ell.num_vertices
+    # pad + place the sharded adjacency ONCE for the whole pipeline (2
+    # MIS-2 fixed points + up to ~6 label-propagation rounds reuse it);
+    # ditto the replicated copy the single_gather schedule needs
+    mesh, axis, _ = _resolve_mesh(mesh, axis)
+    padded, _ = prepare_padded(gh, mesh, axis)
+    dist_kw = {"mesh": mesh, "axis": axis, "padded": padded}
+    mis2_kw = dict(dist_kw, single_gather=single_gather)
+    if single_gather:
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        mis2_kw["neighbors_replicated"] = jax.device_put(
+            padded.neighbors, NamedSharding(mesh, PartitionSpec()))
+
+    # Phase 1: sharded MIS-2 roots + direct neighbors (sharded root join)
+    r1 = _mis2_distributed_impl(gh, options=options, **mis2_kw)
+    agg_ids = np.cumsum(r1.in_set) - 1
+    root_label = np.where(r1.in_set, agg_ids, INT32_MAX).astype(np.int32)
+    labels = join_adjacent_root_distributed(gh, root_label, **dist_kw)
+    nagg = int(r1.in_set.sum())
+    phase = np.where(labels >= 0, 1, 0).astype(np.uint8)
+    total_iters = r1.iterations
+    converged = r1.converged
+
+    # Phase 2: sharded MIS-2 on the induced unaggregated subgraph
+    unagg = labels < 0
+    roots2 = np.zeros(v, dtype=bool)
+    if unagg.any():
+        r2 = _mis2_distributed_impl(gh, active=jnp.asarray(unagg),
+                                    options=options, **mis2_kw)
+        total_iters += r2.iterations
+        converged = converged and r2.converged
+        n_unagg_nbrs = count_unagg_neighbors_distributed(gh, labels, **dist_kw)
+        roots2 = r2.in_set & (n_unagg_nbrs >= min_secondary_neighbors)
+        if roots2.any():
+            agg_ids2 = nagg + np.cumsum(roots2) - 1
+            rl2 = np.where(roots2, agg_ids2, INT32_MAX).astype(np.int32)
+            adj2 = join_adjacent_root_distributed(gh, rl2, **dist_kw)
+            newly = (labels < 0) & (adj2 >= 0)
+            labels = np.where(newly, adj2, labels)
+            phase[newly] = 2
+            nagg += int(roots2.sum())
+
+    # Phase 3: sharded max-coupling join against frozen tentative labels
+    rounds = 0
+    while (labels < 0).any() and rounds < 4:
+        aggsize = np.bincount(labels[labels >= 0], minlength=max(nagg, 1))
+        new_labels = phase3_join_distributed(
+            gh, labels.astype(np.int32), aggsize.astype(np.int32), **dist_kw)
         newly = (labels < 0) & (new_labels >= 0)
         phase[newly] = 3
         labels = new_labels

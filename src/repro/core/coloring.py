@@ -25,9 +25,10 @@ MAX_COLORS = 64
 
 @dataclass
 class ColoringResult:
-    colors: np.ndarray      # int32 [V], in [0, num_colors)
+    colors: np.ndarray      # int32 [V]; uncolored (unconverged) hold -1
     num_colors: int
     rounds: int
+    converged: bool = True  # every vertex colored within the round limit
 
     def __post_init__(self):
         # Result-protocol guarantee: host numpy payloads on every engine.
@@ -96,11 +97,11 @@ def _color_graph_impl(graph, max_rounds: int = 256) -> ColoringResult:
         if (c >= 0).all() or rnd >= max_rounds:
             break
     num = int(c.max()) + 1 if (c >= 0).any() else 0
-    if (c < 0).any():
-        raise RuntimeError("coloring did not converge")
     if num > MAX_COLORS:
         raise RuntimeError(f"{num} colors exceed MAX_COLORS={MAX_COLORS}")
-    return ColoringResult(c, num, rnd)
+    # hitting max_rounds is reported, not raised: callers get the partial
+    # coloring (uncolored vertices = -1) with converged=False
+    return ColoringResult(c, num, rnd, converged=not (c < 0).any())
 
 
 def color_graph(graph, max_rounds: int = 256) -> ColoringResult:

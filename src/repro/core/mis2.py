@@ -71,6 +71,7 @@ class Mis2Result:
     in_set: np.ndarray        # bool [V]
     iterations: int
     converged: bool
+    collectives: Optional[dict] = None  # distributed engines: §V-C traffic
 
     def __post_init__(self):
         # Result-protocol guarantee: payloads are host numpy arrays
@@ -164,7 +165,7 @@ def _mis2_dense_impl(graph, active: Optional[jnp.ndarray] = None,
                                    options.priority, options.max_iters)
     t_np = np.asarray(t)
     act_np = np.asarray(active)
-    undecided = (t_np != np.uint32(IN)) & (t_np != U32MAX) & act_np
+    undecided = is_undecided(t_np) & act_np
     return Mis2Result(t_np == np.uint32(IN), int(iters), not undecided.any())
 
 
@@ -417,7 +418,7 @@ def _mis2_compacted_impl(graph, active: Optional[np.ndarray] = None,
                 t = _decide_packed_csr(t, m, wl1_mask, edge_rows, edge_cols,
                                        active_j, v)
             t_np = np.asarray(t)
-            und = (t_np != np.uint32(IN)) & (t_np != U32MAX)
+            und = is_undecided(t_np)
             live = np.asarray(m) != U32MAX
         else:
             ts, tr, ti = _refresh_rows_unpacked(ts, tr, ti, wl1, np.uint32(it),
@@ -450,12 +451,15 @@ def _mis2_compacted_impl(graph, active: Optional[np.ndarray] = None,
 
 def run_mis2(graph, active=None, options: Optional[Mis2Options] = None,
              engine: str = "compacted",
-             interpret: Optional[bool] = None) -> Mis2Result:
+             interpret: Optional[bool] = None,
+             mesh=None, axis=None) -> Mis2Result:
     """Warning-free engine dispatch used by ``repro.api`` and by the other
     core pipelines (aggregation, partitioning).  Engines ``'compacted'``
-    (§V-B worklists), ``'dense'`` (single jitted ``while_loop``) and
-    ``'pallas'`` (compacted with the Pallas min-propagation kernels)
-    produce bit-identical sets for equal options."""
+    (§V-B worklists), ``'dense'`` (single jitted ``while_loop``),
+    ``'pallas'`` (compacted with the Pallas min-propagation kernels) and
+    the sharded ``'distributed'``/``'distributed_single_gather'`` (which
+    honor ``mesh``/``axis``, defaulting to all attached devices) produce
+    bit-identical sets for equal options."""
     options = Mis2Options() if options is None else options
     if engine == "dense":
         return _mis2_dense_impl(graph, active, options)
@@ -465,8 +469,14 @@ def run_mis2(graph, active=None, options: Optional[Mis2Options] = None,
     if engine == "pallas":
         return _mis2_compacted_impl(graph, active, options, pallas=True,
                                     interpret=interpret)
+    if engine in ("distributed", "distributed_single_gather"):
+        from .dist import _mis2_distributed_impl
+        return _mis2_distributed_impl(
+            graph, active, options, mesh=mesh, axis=axis,
+            single_gather=engine.endswith("single_gather"))
     raise ValueError(
-        f"unknown mis2 engine {engine!r} (dense | compacted | pallas)")
+        f"unknown mis2 engine {engine!r} (dense | compacted | pallas | "
+        "distributed | distributed_single_gather)")
 
 
 def mis2(graph, active=None, options: Optional[Mis2Options] = None,

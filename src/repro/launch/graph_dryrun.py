@@ -45,14 +45,14 @@ def lower_variant(v: int, d: int, mesh, single_gather: bool,
     if single_gather:
         def fn_core(nbrs, act, nbrs_g):
             return _mis2_local_fixpoint(
-                nbrs, act, axis=flat, total_v=vp, priority="xorshift_star",
-                max_iters=max_iters, single_gather=True,
-                neighbors_global=nbrs_g)
+                nbrs, act, axis=flat, num_vertices=v,
+                priority="xorshift_star", max_iters=max_iters,
+                single_gather=True, neighbors_global=nbrs_g)
         in_specs = (spec_rows, spec_rows, P())
         args = (nbrs_spec, act_spec, nbrs_spec)
     else:
         fn_core = functools.partial(
-            _mis2_local_fixpoint, axis=flat, total_v=vp,
+            _mis2_local_fixpoint, axis=flat, num_vertices=v,
             priority="xorshift_star", max_iters=max_iters)
         in_specs = (spec_rows, spec_rows)
         args = (nbrs_spec, act_spec)

@@ -114,7 +114,7 @@ def _build_hierarchy_impl(a, aggregation: str = "mis2_agg",
                           jacobi_weight: float = 2.0 / 3.0,
                           smoother_sweeps: int = 2,
                           options: Mis2Options | None = None,
-                          mis2_engine: str = "compacted",
+                          mis2_engine: str | None = None,
                           interpret=None) -> AMGHierarchy:
     # aggregation dispatch via the api engine registry (aliases keep the
     # legacy "mis2_basic" / "mis2_agg" spellings working)
@@ -130,8 +130,12 @@ def _build_hierarchy_impl(a, aggregation: str = "mis2_agg",
     cur = a
     while len(levels) < max_levels - 1 and cur.num_rows > coarse_size:
         t0 = time.time()
-        agg = agg_fn(cur.graph, options=options, mis2_engine=mis2_engine,
-                     interpret=interpret)
+        agg_kwargs = dict(options=options, interpret=interpret)
+        if mis2_engine is not None:
+            # None = engine's own default; omit so engines registered with
+            # any default spelling keep applying theirs (mirrors facade)
+            agg_kwargs["mis2_engine"] = mis2_engine
+        agg = agg_fn(cur.graph, **agg_kwargs)
         t_agg += time.time() - t0
         if agg.num_aggregates >= cur.num_rows:
             break

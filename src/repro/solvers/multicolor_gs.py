@@ -121,7 +121,7 @@ def setup_cluster_gs(a, aggregation: str = "two_phase",
 
     if isinstance(a, Graph):
         a = a.csr_matrix
-    t0 = time.time()
+    t0 = time.perf_counter()
     v = a.num_rows
     agg_fn = get_engine("aggregation", aggregation)
     agg = agg_fn(a.graph, options=options)
@@ -134,25 +134,29 @@ def setup_cluster_gs(a, aggregation: str = "two_phase",
         nagg = agg2.num_aggregates
     coarse = coarse_graph_from_labels(a.graph, labels, nagg)
     coloring = _color_graph_impl(coarse)
+    if not coloring.converged:     # a partial coloring is unusable for GS
+        raise RuntimeError("coarse-graph coloring did not converge")
     color_rows = _pack_clusters(labels, coloring.colors, coloring.num_colors, v)
     ell = csr_to_ell_matrix(a)
     diag = extract_diagonal(a)
     return MulticolorGSPreconditioner(
         ell, diag, color_rows, coloring.num_colors, nagg,
-        time.time() - t0, "cluster")
+        time.perf_counter() - t0, "cluster")
 
 
 def setup_point_gs(a) -> MulticolorGSPreconditioner:
     import time
     if isinstance(a, Graph):
         a = a.csr_matrix
-    t0 = time.time()
+    t0 = time.perf_counter()
     v = a.num_rows
     coloring = _color_graph_impl(a.graph)      # colors the FINE graph
+    if not coloring.converged:     # a partial coloring is unusable for GS
+        raise RuntimeError("fine-graph coloring did not converge")
     labels = np.arange(v, dtype=np.int32)      # singleton clusters
     color_rows = _pack_clusters(labels, coloring.colors, coloring.num_colors, v)
     ell = csr_to_ell_matrix(a)
     diag = extract_diagonal(a)
     return MulticolorGSPreconditioner(
         ell, diag, color_rows, coloring.num_colors, v,
-        time.time() - t0, "point")
+        time.perf_counter() - t0, "point")

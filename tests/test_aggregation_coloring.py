@@ -99,3 +99,29 @@ def test_partition_balance_and_determinism():
     assert sizes.min() > 0
     assert sizes.max() <= np.ceil(g.num_vertices / 8 * 1.3)
     assert p1.edge_cut < g.num_entries // 2
+
+
+def test_color_round_limit_reports_not_raises():
+    """Hitting max_rounds returns converged=False with -1 on the uncolored
+    stragglers (the facade used to hardcode converged=True while the core
+    raised)."""
+    import repro
+
+    g = repro.Graph(laplace3d(6).graph)
+    r = repro.color(g, max_rounds=1)
+    assert not r.converged
+    assert (r.colors < 0).any()
+    full = repro.color(g)
+    assert full.converged and (full.colors >= 0).all()
+
+
+def test_color_batch_round_limit_propagates_converged():
+    import repro
+
+    graphs = [repro.Graph(laplace3d(5).graph),
+              repro.Graph(laplace3d(6).graph)]
+    br = repro.color_batch(graphs, max_rounds=1)
+    assert not br.converged
+    assert any(not r.converged for r in br)
+    full = repro.color_batch(graphs)
+    assert full.converged

@@ -1,0 +1,260 @@
+"""Distributed (shard_map) MIS-2 and coarsening — the tests promised by
+``core/dist.py``.
+
+The multi-device cases run in ONE subprocess forced to 8 host devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8`` must precede jax
+init), shared by every assertion through a module-scoped fixture.  Sizes
+cover V divisible by the device count (1000), non-divisible (997), and the
+power-of-two id_bits crossing (1022 pads to 1024) that the padded-V packing
+bug silently broke.  The cheap plumbing (engine registration, one-device
+mesh, the analytic collective model, dry-run records) runs in-process.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+SIZES = (1000, 1022, 997)   # divisible | pow2-crossing | non-divisible
+
+_CHILD = """
+import json
+import numpy as np
+import jax
+import repro
+from repro.api import Backend
+from repro.graphs import laplace3d, random_uniform_graph
+
+out = {"num_devices": len(jax.devices()), "cases": {}}
+for v in (1000, 1022, 997):
+    g = repro.Graph(laplace3d(10).graph) if v == 1000 else \\
+        repro.Graph(random_uniform_graph(v, 6.0, seed=v))
+    dense = repro.mis2(g, engine="dense")
+    case = {"dense_digest": dense.digest, "dense_iterations": dense.iterations,
+            "engines": {}}
+    for eng in ("distributed", "distributed_single_gather"):
+        r = repro.mis2(g, engine=eng)
+        case["engines"][eng] = {
+            "digest": r.digest, "iterations": r.iterations,
+            "converged": r.converged, "collectives": r.collectives,
+        }
+    a1 = repro.coarsen(g, method="two_phase", mis2_engine="dense")
+    a2 = repro.coarsen(g, method="two_phase_distributed")
+    case["coarsen"] = {
+        "single_digest": a1.digest, "dist_digest": a2.digest,
+        "labels_equal": bool((a1.labels == a2.labels).all()),
+        "roots_equal": bool((a1.roots == a2.roots).all()),
+        "phase_equal": bool((a1.phase == a2.phase).all()),
+        "num_aggregates": (a1.num_aggregates, a2.num_aggregates),
+    }
+    out["cases"][str(v)] = case
+
+# a 2x4 mesh with axis=None must flatten both axes into the partition
+mesh = jax.make_mesh((2, 4), ("a", "b"))
+g = repro.Graph(random_uniform_graph(997, 6.0, seed=997))
+out["multi_axis"] = {
+    "digest": repro.mis2(g, engine="distributed",
+                         backend=Backend(mesh=mesh)).digest,
+    "dense_digest": repro.mis2(g, engine="dense").digest,
+}
+
+# adversarial id_bits regression: V=6 pads to 8 on 8 devices, so the buggy
+# padded-V packing used b=4 instead of b=3.  The crafted priority (8 on
+# vertex 0, 0 elsewhere) makes the b=3 and b=4 packings order vertices 0/1
+# oppositely, so any padded-width packing flips the resulting set.
+import jax.numpy as jnp
+from repro.core import hashing
+from repro.core.mis2 import Mis2Options
+
+hashing.PRIORITY_FNS["adversarial"] = lambda it, vids: jnp.where(
+    vids == 0, jnp.uint32(8), jnp.uint32(0))
+path = repro.Graph.from_coo([0, 1, 1, 2, 2, 3, 3, 4, 4, 5],
+                            [1, 0, 2, 1, 3, 2, 4, 3, 5, 4], 6)
+opts = Mis2Options(priority="adversarial")
+da = repro.mis2(path, engine="dense", options=opts)
+out["adversarial"] = {"dense_digest": da.digest, "engines": {}}
+for eng in ("distributed", "distributed_single_gather"):
+    out["adversarial"]["engines"][eng] = \
+        repro.mis2(path, engine=eng, options=opts).digest
+print("RESULT:" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def dist8():
+    # inherit the parent env (venv paths, HOME, tool caches) and override
+    # only what the forced-device child needs
+    env = dict(os.environ)
+    env.update({"PYTHONPATH": str(REPO / "src"), "JAX_PLATFORMS": "cpu",
+                "XLA_FLAGS": "--xla_force_host_platform_device_count=8"})
+    out = subprocess.run(
+        [sys.executable, "-c", _CHILD],
+        capture_output=True, text=True, timeout=580, env=env, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.rsplit("RESULT:", 1)[1])
+
+
+@pytest.mark.slow
+def test_runs_on_eight_devices(dist8):
+    assert dist8["num_devices"] == 8
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("v", SIZES)
+@pytest.mark.parametrize("engine",
+                         ["distributed", "distributed_single_gather"])
+def test_digest_matches_dense(dist8, v, engine):
+    """The headline determinism claim: bit-identical to the single-device
+    dense engine for any device count — including V=1022, where device
+    padding (-> 1024) used to change the id_bits packing width."""
+    case = dist8["cases"][str(v)]
+    assert case["engines"][engine]["digest"] == case["dense_digest"]
+    assert case["engines"][engine]["converged"]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("v", SIZES)
+def test_iterations_match_dense(dist8, v):
+    case = dist8["cases"][str(v)]
+    for eng in ("distributed", "distributed_single_gather"):
+        assert case["engines"][eng]["iterations"] == case["dense_iterations"]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("v", SIZES)
+def test_distributed_coarsening_bitwise(dist8, v):
+    """Alg. 3 labels (and roots/phase provenance) from the sharded rounds
+    match the single-device two_phase engine bit-for-bit."""
+    c = dist8["cases"][str(v)]["coarsen"]
+    assert c["single_digest"] == c["dist_digest"]
+    assert c["labels_equal"] and c["roots_equal"] and c["phase_equal"]
+    assert c["num_aggregates"][0] == c["num_aggregates"][1]
+
+
+@pytest.mark.slow
+def test_multi_axis_mesh_flattens(dist8):
+    assert dist8["multi_axis"]["digest"] == dist8["multi_axis"]["dense_digest"]
+
+
+def test_adversarial_case_is_b_sensitive():
+    """Sanity for the regression below: the crafted priorities order
+    vertices 0/1 oppositely under b=id_bits(6)=3 vs b=id_bits(8)=4, so a
+    padded-width packing provably changes the MIS."""
+    from repro.core.tuples import id_bits
+
+    assert id_bits(6) == 3 and id_bits(8) == 4
+
+    def pack(p, i, b):
+        return ((p >> b) << b) | (i + 1)
+
+    assert pack(8, 0, 3) > pack(0, 1, 3)   # b=3: vertex 1 wins
+    assert pack(8, 0, 4) < pack(0, 1, 4)   # b=4: vertex 0 wins
+
+
+@pytest.mark.slow
+def test_padded_v_id_bits_regression(dist8):
+    """V=6 on 8 devices pads to 8; packing with id_bits of the PADDED
+    count (the old bug) flips the adversarial set — the fix packs with
+    id_bits(V_real) and must match dense bit-for-bit."""
+    adv = dist8["adversarial"]
+    for eng, digest in adv["engines"].items():
+        assert digest == adv["dense_digest"], eng
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("v", SIZES)
+def test_collective_accounting(dist8, v):
+    """wire bytes = per-iteration model x iterations; single_gather halves
+    the per-iteration volume of two_gather."""
+    engines = dist8["cases"][str(v)]["engines"]
+    two = engines["distributed"]["collectives"]
+    single = engines["distributed_single_gather"]["collectives"]
+    for rec in (two, single):
+        assert rec["wire_bytes_per_device"] == pytest.approx(
+            rec["wire_bytes_per_device_per_iteration"] * rec["iterations"])
+    assert single["result_bytes_per_iteration"] * 2 == \
+        two["result_bytes_per_iteration"]
+    assert two["gathers_per_iteration"] == 2
+    assert single["gathers_per_iteration"] == 1
+
+
+# ---------------------------------------------------------------------------
+# in-process (single device): plumbing, model, artifacts
+# ---------------------------------------------------------------------------
+
+def test_engines_registered():
+    from repro.api import list_engines
+
+    engines = list_engines()
+    assert "distributed" in engines["mis2"]
+    assert "distributed_single_gather" in engines["mis2"]
+    assert "two_phase_distributed" in engines["aggregation"]
+
+
+def test_single_device_mesh_matches_dense():
+    """The sharded fixed point degenerates cleanly to one device (no
+    XLA_FLAGS forcing needed) — same digest, same iterations."""
+    import repro
+    from repro.graphs import random_uniform_graph
+
+    g = repro.Graph(random_uniform_graph(301, 5.0, seed=7))
+    dense = repro.mis2(g, engine="dense")
+    for eng in ("distributed", "distributed_single_gather"):
+        r = repro.mis2(g, engine=eng)
+        assert r.digest == dense.digest
+        assert r.iterations == dense.iterations
+        assert r.collectives["num_devices"] >= 1
+
+
+def test_single_device_distributed_coarsening_matches():
+    import repro
+    from repro.graphs import random_uniform_graph
+
+    g = repro.Graph(random_uniform_graph(301, 5.0, seed=7))
+    a1 = repro.coarsen(g, method="two_phase", mis2_engine="dense")
+    a2 = repro.coarsen(g, method="two_phase_distributed")
+    assert a1.digest == a2.digest
+
+
+def test_collective_model():
+    from repro.core.dist import collective_bytes_per_iteration
+
+    two = collective_bytes_per_iteration(1000, 8, single_gather=False)
+    single = collective_bytes_per_iteration(1000, 8, single_gather=True)
+    # Vp = 1000 (divisible): 2 gathers x 4000 B, ring factor 7/8
+    assert two["result_bytes_per_iteration"] == 2 * 4000
+    assert two["wire_bytes_per_device_per_iteration"] == \
+        pytest.approx(2 * 4000 * 7 / 8)
+    assert single["result_bytes_per_iteration"] == 4000
+    # padding rounds V up before the byte count
+    padded = collective_bytes_per_iteration(1022, 8, single_gather=False)
+    assert padded["result_bytes_per_iteration"] == 2 * 4096
+
+
+def test_dryrun_record_feeds_figs4_5(tmp_path):
+    """write_mis2_dryrun_record emits the exact schema figs4_5_scaling
+    axis B consumes."""
+    from repro.core.dist import write_mis2_dryrun_record
+
+    path = write_mis2_dryrun_record(10_000, 7, 16, single_gather=True,
+                                    out_dir=tmp_path)
+    rec = json.loads(path.read_text())
+    for key in ("V", "wire_bytes_per_device", "variant", "num_devices"):
+        assert key in rec
+    assert rec["variant"] == "single_gather"
+    assert rec["num_devices"] == 16
+    assert rec["wire_bytes_per_device"] == pytest.approx(
+        rec["per_iteration"]["wire_bytes_per_device_per_iteration"]
+        * rec["max_iters"])
+
+
+def test_backend_resolve_mesh_default():
+    from repro.api import Backend
+
+    mesh, axis = Backend().resolve_mesh()
+    assert axis == "x"
+    assert mesh.axis_names == ("x",)
