@@ -1,0 +1,91 @@
+"""Host-driven vs device-resident MIS-2 hot loop (ISSUE 4 tentpole metric).
+
+Benchmarks the two execution shapes of the compacted §V-B fixed point:
+
+* host-driven (``compacted`` / ``pallas``): every round syncs T/M to the
+  host, rebuilds the worklists in numpy, and re-dispatches the step
+  kernels (re-specializing per pow2 bucket pair);
+* device-resident (``compacted_resident`` / ``pallas_resident``): one
+  jitted ``lax.while_loop`` per solve, worklists compacted on device,
+  zero host round-trips.
+
+Reported per engine: rounds/sec (= fixed-point iterations / solve wall
+time), host syncs per solve (``HOTLOOP_STATS``), and the jit-churn
+accounting (``Mis2Result.num_compiles``).  The headline record appended to
+``BENCH_hotloop_overhead.json`` is the resident-over-host rounds/sec ratio
+per engine pair; digests are asserted equal on every measured pair, so the
+benchmark doubles as a parity smoke check.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, emit_trajectory, standalone, timeit
+
+PAIRS = [("compacted", "compacted_resident"),
+         ("pallas", "pallas_resident")]
+
+
+def run(quick: bool = False) -> None:
+    from repro.api import Graph, mis2
+    from repro.core.mis2 import HOTLOOP_STATS
+    from repro.graphs import laplace3d, random_uniform_graph
+
+    if quick:
+        graphs = {
+            "laplace3d_512": Graph(laplace3d(8).graph),
+            "er_1024": Graph(random_uniform_graph(1024, 6.0, seed=3)),
+        }
+        repeats = 3
+    else:
+        graphs = {
+            "laplace3d_4096": Graph(laplace3d(16).graph),   # V = 4096
+            "er_4096": Graph(random_uniform_graph(4096, 8.0, seed=3)),
+        }
+        repeats = 7
+
+    rows = []
+    headline: dict = {}
+    for gname, g in graphs.items():
+        for host_eng, res_eng in PAIRS:
+            stats = {}
+            for eng in (host_eng, res_eng):
+                mis2(g, engine=eng)                     # warmup/compile
+                HOTLOOP_STATS.reset()
+                r = mis2(g, engine=eng)
+                syncs = HOTLOOP_STATS.host_syncs
+                dt = timeit(lambda e=eng: mis2(g, engine=e), repeats=repeats)
+                stats[eng] = dict(result=r, seconds=dt, syncs=syncs,
+                                  rounds_per_sec=r.iterations / dt)
+                rows.append({
+                    "graph": gname, "engine": eng,
+                    "us_per_call": dt * 1e6,
+                    "iterations": r.iterations,
+                    "rounds_per_sec": round(r.iterations / dt, 1),
+                    "host_syncs_per_solve": syncs,
+                    "num_compiles": r.num_compiles,
+                    "digest": r.digest,
+                })
+            h, d = stats[host_eng], stats[res_eng]
+            assert h["result"].digest == d["result"].digest, \
+                f"parity break: {gname} {host_eng} vs {res_eng}"
+            assert d["syncs"] == 0, \
+                f"{res_eng} issued {d['syncs']} in-loop host syncs"
+            speedup = d["rounds_per_sec"] / h["rounds_per_sec"]
+            headline[f"{gname}_{host_eng}_resident_speedup"] = round(speedup, 3)
+            headline[f"{gname}_{host_eng}_host_syncs"] = h["syncs"]
+
+    emit("hotloop_overhead", rows)
+    emit_trajectory("hotloop_overhead", {
+        "quick": quick,
+        **headline,
+    })
+
+    if not quick:
+        # acceptance floor: the CPU-interpret (Pallas) pair at V=4096 must
+        # hold >= 2x rounds/sec for the resident driver
+        for gname in graphs:
+            s = headline[f"{gname}_pallas_resident_speedup"]
+            print(f"# {gname}: pallas_resident speedup {s:.2f}x")
+
+
+if __name__ == "__main__":
+    standalone(run)

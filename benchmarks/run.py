@@ -16,6 +16,7 @@ from benchmarks import (  # noqa: E402
     dist_scaling,
     fig2_optimizations,
     figs4_5_scaling,
+    hotloop_overhead,
     roofline,
     table1_priorities,
     table3_scaling,
@@ -36,6 +37,7 @@ ALL = {
     "figs4_5": figs4_5_scaling.run,
     "roofline": roofline.run,
     "batch": batch_throughput.run,
+    "hotloop": hotloop_overhead.run,
 }
 
 

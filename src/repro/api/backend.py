@@ -39,6 +39,30 @@ def default_interpret() -> bool:
     return not accelerator_present()
 
 
+def default_mis2_engine(backend: Optional["Backend"] = None,
+                        options=None) -> str:
+    """The facade's engine auto-selection rule (``engine=None``).
+
+    On accelerators the fixed point runs device-resident — host-driven
+    worklist rebuilds serialize the hot loop on dispatch + transfer
+    latency, which is exactly the overhead §V-B exists to remove.  On CPU
+    hosts the host-driven driver keeps the default (per-iteration numpy
+    worklists are cheap there, and it is the Fig. 2 ablation baseline).
+    ``Backend(pallas=True)`` upgrades either choice to its Pallas variant.
+    All four engines produce bit-identical sets.
+
+    ``options`` (a ``Mis2Options``) keeps the rule total: the resident
+    engines implement §V-B worklists by construction, so the
+    ``worklists=False`` ablation auto-selects the host-driven driver
+    instead of raising even on accelerators.
+    """
+    be = backend if backend is not None else _DEFAULT
+    resident_ok = options is None or getattr(options, "worklists", True)
+    if accelerator_present() and resident_ok:
+        return "pallas_resident" if be.pallas else "compacted_resident"
+    return "pallas" if be.pallas else "compacted"
+
+
 @dataclass(frozen=True)
 class Backend:
     """Execution policy for one pipeline invocation (hashable, reusable)."""

@@ -27,9 +27,14 @@ from ..core.aggregation import (
     _aggregate_two_phase_impl,
 )
 from ..core.coloring import _color_graph_impl
-from ..core.mis2 import Mis2Options, _mis2_compacted_impl, _mis2_dense_impl
+from ..core.mis2 import (
+    Mis2Options,
+    _mis2_compacted_impl,
+    _mis2_dense_impl,
+    _mis2_resident_impl,
+)
 from ..core.partition import _partition_impl
-from .backend import Backend
+from .backend import Backend, default_mis2_engine
 from .registry import register_engine
 
 
@@ -75,6 +80,28 @@ def _mis2_pallas(graph, active, options, backend: Backend):
                                 interpret=backend.resolve_interpret())
 
 
+@register_engine("mis2", "compacted_resident",
+                 doc="device-resident §V-B fixed point: one jitted "
+                     "while_loop per solve, worklists compacted on device "
+                     "(cumsum stream compaction), zero host round-trips — "
+                     "bit-identical to 'compacted'; the facade default on "
+                     "accelerators")
+def _mis2_compacted_resident(graph, active, options, backend: Backend):
+    return _mis2_resident_impl(graph, active, _opts(options), pallas=False,
+                               interpret=backend.resolve_interpret())
+
+
+@register_engine("mis2", "pallas_resident",
+                 doc="resident driver with the FUSED Pallas passes (rank "
+                     "packing folded into refresh_columns, row-gather "
+                     "folded into decide): each round reads the ELL rows "
+                     "once per pass, live counts feed pl.when block "
+                     "skipping on device")
+def _mis2_pallas_resident(graph, active, options, backend: Backend):
+    return _mis2_resident_impl(graph, active, _opts(options), pallas=True,
+                               interpret=backend.resolve_interpret())
+
+
 @register_engine("mis2", "dense_batched",
                  doc="vmapped dense fixed point over padded size buckets "
                      "(repro.batch); a single-graph call runs as a batch "
@@ -118,7 +145,7 @@ def _mis2_distributed_single_gather(graph, active, options, backend: Backend):
                  doc="paper Alg. 2 (Bell-style): MIS-2 roots + neighbors")
 def _agg_basic(graph, options=None, mis2_engine=None, interpret=None,
                min_secondary_neighbors=2, backend=None):
-    mis2_engine = mis2_engine or "compacted"
+    mis2_engine = mis2_engine or default_mis2_engine(backend, options)
     return _aggregate_basic_impl(graph, _opts(options), mis2_engine,
                                  interpret=interpret,
                                  **_dist_mesh_kw(mis2_engine, backend))
@@ -129,7 +156,7 @@ def _agg_basic(graph, options=None, mis2_engine=None, interpret=None,
                      "max-coupling cleanup")
 def _agg_two_phase(graph, options=None, mis2_engine=None,
                    interpret=None, min_secondary_neighbors=2, backend=None):
-    mis2_engine = mis2_engine or "compacted"
+    mis2_engine = mis2_engine or default_mis2_engine(backend, options)
     return _aggregate_two_phase_impl(graph, _opts(options), mis2_engine,
                                      min_secondary_neighbors,
                                      interpret=interpret,

@@ -48,24 +48,36 @@ def _prepare(graph, backend: Backend) -> Graph:
 
 
 def mis2(graph, *, active=None, options: Optional[Mis2Options] = None,
-         engine: str = "compacted",
+         engine: Optional[str] = None,
          backend: Optional[Backend] = None) -> Mis2Result:
     """Distance-2 maximal independent set (paper Alg. 1), deterministic
-    across engines: ``dense`` | ``compacted`` | ``pallas`` |
-    ``distributed`` | ``distributed_single_gather`` return bit-identical
-    sets (equal ``digest``) for equal options.  The distributed engines
-    shard vertices over ``Backend(mesh=..., axis=...)`` and report their
-    collective-byte accounting in ``result.collectives``."""
+    across engines: ``dense`` | ``compacted`` | ``compacted_resident`` |
+    ``pallas`` | ``pallas_resident`` | ``distributed`` |
+    ``distributed_single_gather`` return bit-identical sets (equal
+    ``digest``) for equal options.
+
+    ``engine=None`` auto-selects: the device-resident engines (one jitted
+    dispatch per solve, worklists compacted on device) on accelerators,
+    the host-driven ``compacted`` driver on CPU hosts;
+    ``Backend(pallas=True)`` upgrades either to its Pallas variant.  The
+    distributed engines shard vertices over ``Backend(mesh=..., axis=...)``
+    and report their collective-byte accounting in
+    ``result.collectives``."""
+    from .backend import default_mis2_engine
+
     be = resolve_backend(backend)
     gh = _prepare(graph, be)
-    if be.pallas and engine == "compacted":
-        engine = "pallas"       # Backend(pallas=True) upgrades the default
+    if engine is None:
+        engine = default_mis2_engine(be, options)
+    elif be.pallas and engine == "compacted":
+        engine = "pallas"       # legacy: Backend(pallas=True) upgrade
     fn = get_engine("mis2", engine)
     t0 = time.perf_counter()
     r = fn(gh, active, options, be)
     dt = time.perf_counter() - t0
     return Mis2Result(r.in_set, r.iterations, r.converged, dt, engine=engine,
-                      collectives=getattr(r, "collectives", None))
+                      collectives=getattr(r, "collectives", None),
+                      num_compiles=getattr(r, "num_compiles", None))
 
 
 def misk(graph, k: int = 2, *, priority: str = "xorshift_star",

@@ -64,6 +64,9 @@ class Mis2Result(Result):
     engine: str = ""
     collectives: dict | None = None   # distributed engines: per-run §V-C
     #                                   collective-byte accounting
+    num_compiles: int | None = None   # distinct jitted step shapes the solve
+    #                                   required (resident engines: 1; legacy
+    #                                   compacted: pow2 worklist-bucket pairs)
 
     @property
     def in_set(self) -> np.ndarray:

@@ -16,6 +16,7 @@ All device phases are vectorized over ELL adjacency.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
 import jax
@@ -150,6 +151,86 @@ def _labels_from_roots(ell: ELLGraph, roots: np.ndarray):
 
 
 # ---------------------------------------------------------------------------
+# device-resident join loops (the hot-loop pattern of core.mis2's resident
+# engines applied to the Alg. 2/3 label propagation): each multi-round
+# host loop below used to sync ``labels`` device<->host every round — one
+# jitted ``lax.while_loop`` replaces up to 4 round trips per phase while
+# running the exact same rowwise arithmetic (labels stay bit-identical).
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _cleanup_join_resident(neighbors, labels, phase):
+    """Alg. 2 leftover cleanup: up to 4 min-adjacent-label join rounds,
+    early exit once every vertex is labeled, phase marks applied on
+    device."""
+    def cond(state):
+        labels, _, rounds = state
+        return jnp.any(labels < 0) & (rounds < 4)
+
+    def body(state):
+        labels, phase, rounds = state
+        lab_j = jnp.where(labels >= 0, labels, INT32_MAX).astype(jnp.int32)
+        adj = _join_rows(neighbors, lab_j)
+        newly = (labels < 0) & (adj >= 0)
+        labels = jnp.where(newly, adj, labels)
+        phase = jnp.where(newly, jnp.uint8(3), phase)
+        return labels, phase, rounds + jnp.int32(1)
+
+    labels, phase, _ = jax.lax.while_loop(
+        cond, body, (labels, phase, jnp.int32(0)))
+    return labels, phase
+
+
+@functools.partial(jax.jit, static_argnames=("min_secondary",))
+def _phase2_join_resident(neighbors, mask, labels, in_set2, nagg,
+                          min_secondary: int):
+    """Alg. 3 phase 2 on device: unaggregated-neighbor counting, secondary
+    root selection, cumsum aggregate ids and the root join — one dispatch
+    instead of three label round trips.  ``nagg`` is traced (no
+    recompilation per aggregate count)."""
+    v = neighbors.shape[0]
+    row_ids = jnp.arange(v, dtype=neighbors.dtype)
+    n_unagg = _count_unagg_rows(neighbors, mask, row_ids, labels)
+    roots2 = in_set2 & (n_unagg >= min_secondary)
+    agg_ids2 = nagg + jnp.cumsum(roots2.astype(jnp.int32)) - 1
+    rl2 = jnp.where(roots2, agg_ids2, INT32_MAX).astype(jnp.int32)
+    adj2 = _join_rows(neighbors, rl2)
+    newly = (labels < 0) & (adj2 >= 0)
+    labels = jnp.where(newly, adj2, labels)
+    return labels, roots2, newly
+
+
+@jax.jit
+def _phase3_resident(neighbors, mask, labels, phase):
+    """Alg. 3 phase 3 on device: up to 4 max-coupling join rounds against
+    frozen tentative labels, aggregate sizes recomputed per round via a
+    scatter-add histogram (slot ``v`` is the dump for unlabeled vertices,
+    so entries ``0..nagg-1`` match ``np.bincount`` exactly; labels never
+    reference the padding slots, making the join bit-identical to the
+    host-driven rounds)."""
+    v = neighbors.shape[0]
+    row_ids = jnp.arange(v, dtype=neighbors.dtype)
+
+    def cond(state):
+        labels, _, rounds = state
+        return jnp.any(labels < 0) & (rounds < 4)
+
+    def body(state):
+        labels, phase, rounds = state
+        aggsize = jnp.zeros(v + 1, jnp.int32).at[
+            jnp.where(labels >= 0, labels, v)].add(1)
+        new_labels = _phase3_rows(neighbors, mask, row_ids, labels, labels,
+                                  aggsize)
+        newly = (labels < 0) & (new_labels >= 0)
+        phase = jnp.where(newly, jnp.uint8(3), phase)
+        return new_labels, phase, rounds + jnp.int32(1)
+
+    labels, phase, _ = jax.lax.while_loop(
+        cond, body, (labels, phase, jnp.int32(0)))
+    return labels, phase
+
+
+# ---------------------------------------------------------------------------
 # Algorithm 2
 # ---------------------------------------------------------------------------
 
@@ -164,15 +245,13 @@ def _aggregate_basic_impl(graph, options: Mis2Options | None = None,
     labels, nagg = _labels_from_roots(ell, r.in_set)
     phase = np.where(labels >= 0, 1, 0).astype(np.uint8)
 
-    # leftovers: join min adjacent aggregate (deterministic "arbitrary")
-    rounds = 0
-    while (labels < 0).any() and rounds < 4:
-        lab_j = jnp.asarray(np.where(labels >= 0, labels, INT32_MAX).astype(np.int32))
-        adj = np.asarray(_join_adjacent_root(ell.neighbors, lab_j))
-        newly = (labels < 0) & (adj >= 0)
-        labels = np.where(newly, adj, labels)
-        phase[newly] = 3
-        rounds += 1
+    # leftovers: join min adjacent aggregate (deterministic "arbitrary");
+    # the whole multi-round loop is one resident dispatch
+    labels_j, phase_j = _cleanup_join_resident(
+        ell.neighbors, jnp.asarray(labels.astype(np.int32)),
+        jnp.asarray(phase))
+    # np.array (not asarray): _finalize_singletons mutates phase in place
+    labels, phase = np.asarray(labels_j), np.array(phase_j)
     labels, nagg = _finalize_singletons(labels, nagg, phase)
     return AggregationResult(labels.astype(np.int32), nagg, r.in_set, phase,
                              r.iterations, r.converged)
@@ -199,7 +278,9 @@ def _aggregate_two_phase_impl(graph, options: Mis2Options | None = None,
     total_iters = r1.iterations
     converged = r1.converged
 
-    # Phase 2: MIS-2 on the induced unaggregated subgraph
+    # Phase 2: MIS-2 on the induced unaggregated subgraph.  The label join
+    # (unagg-neighbor count, secondary-root cumsum, root join) runs as one
+    # resident dispatch instead of three label round trips.
     unagg = labels < 0
     roots2 = np.zeros(v, dtype=bool)
     if unagg.any():
@@ -208,29 +289,20 @@ def _aggregate_two_phase_impl(graph, options: Mis2Options | None = None,
                       axis=axis)
         total_iters += r2.iterations
         converged = converged and r2.converged
-        n_unagg_nbrs = np.asarray(_count_unagg_neighbors(
-            ell.neighbors, ell.mask, jnp.asarray(labels)))
-        roots2 = r2.in_set & (n_unagg_nbrs >= min_secondary_neighbors)
-        if roots2.any():
-            agg_ids2 = nagg + np.cumsum(roots2) - 1
-            rl2 = np.where(roots2, agg_ids2, INT32_MAX).astype(np.int32)
-            adj2 = np.asarray(_join_adjacent_root(ell.neighbors, jnp.asarray(rl2)))
-            newly = (labels < 0) & (adj2 >= 0)
-            labels = np.where(newly, adj2, labels)
-            phase[newly] = 2
-            nagg += int(roots2.sum())
-
-    # Phase 3: max-coupling join against frozen tentative labels
-    rounds = 0
-    while (labels < 0).any() and rounds < 4:
-        aggsize = np.bincount(labels[labels >= 0], minlength=max(nagg, 1))
-        new_labels = np.asarray(_phase3_join(
+        labels_j, roots2_j, newly_j = _phase2_join_resident(
             ell.neighbors, ell.mask, jnp.asarray(labels.astype(np.int32)),
-            jnp.asarray(aggsize.astype(np.int32))))
-        newly = (labels < 0) & (new_labels >= 0)
-        phase[newly] = 3
-        labels = new_labels
-        rounds += 1
+            jnp.asarray(r2.in_set), jnp.int32(nagg),
+            min_secondary_neighbors)
+        labels, roots2 = np.asarray(labels_j), np.asarray(roots2_j)
+        phase[np.asarray(newly_j)] = 2
+        nagg += int(roots2.sum())
+
+    # Phase 3: max-coupling join against frozen tentative labels — the
+    # whole up-to-4-round loop is one resident dispatch
+    labels_j, phase_j = _phase3_resident(
+        ell.neighbors, ell.mask, jnp.asarray(labels.astype(np.int32)),
+        jnp.asarray(phase))
+    labels, phase = np.asarray(labels_j), np.array(phase_j)
 
     labels, nagg = _finalize_singletons(labels, nagg, phase)
     return AggregationResult(labels.astype(np.int32), nagg,

@@ -9,6 +9,7 @@ and runs, like everything else in core/.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
 import jax
@@ -85,17 +86,35 @@ def _lowest_set_bit(x: jnp.ndarray) -> jnp.ndarray:
     return exp.astype(jnp.int32)
 
 
+@functools.partial(jax.jit, static_argnames=("max_rounds",))
+def _color_fixed_point(neighbors, mask, max_rounds: int):
+    """Device-resident Luby round loop: one jitted ``lax.while_loop``
+    instead of a per-round host sync of ``colors`` (the hot-loop pattern
+    shared with the resident MIS-2 engines).  Round-for-round identical to
+    the old host-driven loop, including its do-while shape (at least one
+    round always runs)."""
+    v = neighbors.shape[0]
+    b = jnp.uint32(id_bits(v))
+    colors0 = jnp.full(v, -1, dtype=jnp.int32)
+
+    def cond(state):
+        colors, rnd = state
+        return (rnd == 0) | (jnp.any(colors < 0) & (rnd < max_rounds))
+
+    def body(state):
+        colors, rnd = state
+        colors = _color_round_masked(neighbors, mask, colors,
+                                     rnd.astype(jnp.uint32), b)
+        return colors, rnd + jnp.int32(1)
+
+    return jax.lax.while_loop(cond, body, (colors0, jnp.int32(0)))
+
+
 def _color_graph_impl(graph, max_rounds: int = 256) -> ColoringResult:
     ell = as_ell_graph(graph)
-    v = ell.num_vertices
-    colors = jnp.full(v, -1, dtype=jnp.int32)
-    rnd = 0
-    while True:
-        colors = _color_round(ell.neighbors, ell.mask, colors, np.uint32(rnd))
-        rnd += 1
-        c = np.asarray(colors)
-        if (c >= 0).all() or rnd >= max_rounds:
-            break
+    colors, rounds = _color_fixed_point(ell.neighbors, ell.mask, max_rounds)
+    c = np.asarray(colors)
+    rnd = int(rounds)
     num = int(c.max()) + 1 if (c >= 0).any() else 0
     if num > MAX_COLORS:
         raise RuntimeError(f"{num} colors exceed MAX_COLORS={MAX_COLORS}")

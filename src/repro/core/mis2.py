@@ -1,6 +1,6 @@
 """Parallel, deterministic distance-2 maximal independent set (paper Alg. 1).
 
-Two execution engines, bit-identical results:
+Three execution strategies, bit-identical results:
 
 * ``mis2_dense``  — a single ``lax.while_loop`` fixed point over dense vertex
   arrays.  Fully jittable, usable inside larger jitted programs (distributed
@@ -9,8 +9,19 @@ Two execution engines, bit-identical results:
 * ``mis2_compacted`` — host-orchestrated iteration with *real* worklist
   compaction (paper §V-B): per-iteration work is proportional to the live
   worklists, padded to power-of-two buckets so XLA caches a handful of
-  compiled step sizes.  This is the production CPU/TPU path and the engine
+  compiled step sizes.  This is the legacy host-driven path and the engine
   behind the Fig. 2 ablation.
+* ``compacted_resident`` / ``pallas_resident`` — the production hot loop:
+  the *same* per-round passes as ``mis2_compacted``, but the whole fixed
+  point is one jitted ``lax.while_loop`` over fixed ``[V]``-shaped state.
+  Worklists are compacted **on device** (cumsum-based stream compaction
+  producing ``(indices[V], count)`` pairs; dead slots hold the sentinel
+  ``V`` and are scatter-dropped), and the live ``count`` feeds the Pallas
+  ``pl.when`` block-skip logic instead of a host-side ``len(wl)``.  Zero
+  host round-trips inside the fixed point, one dispatch per solve, no jit
+  churn across worklist sizes — and results stay bit-identical to the
+  host-driven engines (enforced by the digest-parity matrix in
+  ``tests/test_resident.py``).
 
 The Fig. 2 optimization chain is exposed through ``Mis2Options`` — each knob
 is one of the paper's four optimizations:
@@ -72,6 +83,9 @@ class Mis2Result:
     iterations: int
     converged: bool
     collectives: Optional[dict] = None  # distributed engines: §V-C traffic
+    num_compiles: Optional[int] = None  # distinct jitted step shapes this
+    #                                     solve required (resident: always 1;
+    #                                     legacy compacted: pow2 bucket pairs)
 
     def __post_init__(self):
         # Result-protocol guarantee: payloads are host numpy arrays
@@ -170,6 +184,33 @@ def _mis2_dense_impl(graph, active: Optional[jnp.ndarray] = None,
 
 
 # ===========================================================================
+# hot-loop accounting (test-only observability; no effect on results)
+# ===========================================================================
+
+@dataclass
+class HotLoopStats:
+    """Process-wide counters for the MIS-2 hot-loop execution shape.
+
+    ``host_syncs`` counts device->host transfers issued *inside* a fixed
+    point (the legacy compacted driver pays 2 per iteration to rebuild its
+    worklists); ``resident_dispatches`` counts whole-fixed-point jitted
+    dispatches (the resident engines pay exactly 1 per solve).  Tests and
+    ``benchmarks/hotloop_overhead.py`` read these to enforce the
+    zero-round-trip claim; production code never consults them.
+    """
+
+    host_syncs: int = 0
+    resident_dispatches: int = 0
+
+    def reset(self) -> None:
+        self.host_syncs = 0
+        self.resident_dispatches = 0
+
+
+HOTLOOP_STATS = HotLoopStats()
+
+
+# ===========================================================================
 # step kernels for the compacted / ablation engine
 #   worklists are padded int32 index buffers; sentinel == V (scatter-dropped)
 # ===========================================================================
@@ -183,6 +224,28 @@ def _pad_worklist(idx: np.ndarray, v: int) -> jnp.ndarray:
     out = np.full(size, v, dtype=np.int32)
     out[: len(idx)] = idx
     return jnp.asarray(out)
+
+
+class _WorklistPadCache:
+    """Per-solve bucket-shape cache for the host-driven driver.
+
+    ``shape_pairs`` records the distinct ``(len(wl1), len(wl2))`` pow2
+    bucket pairs the solve dispatched — the jit-churn metric surfaced as
+    ``Mis2Result.num_compiles`` (each new pair is a fresh XLA
+    specialization of the step kernels; the resident engines hold this at
+    1 by construction).  Conversion itself stays :func:`_pad_worklist`
+    with a fresh host buffer per call: staging through a reused mutable
+    buffer is unsafe, because ``jnp.asarray`` of an aligned numpy array
+    can be zero-copy on CPU, and a later refill would silently rewrite
+    the live device worklist.
+    """
+
+    def __init__(self, v: int):
+        self.v = v
+        self.shape_pairs: set[tuple[int, int]] = set()
+
+    def pad(self, idx: np.ndarray) -> jnp.ndarray:
+        return _pad_worklist(idx, self.v)
 
 
 # ---- packed representation ----
@@ -388,17 +451,19 @@ def _mis2_compacted_impl(graph, active: Optional[np.ndarray] = None,
         mr = jnp.full(v, U32MAX, dtype=jnp.uint32)
         mi = jnp.full(v, U32MAX, dtype=jnp.uint32)
 
+    pads = _WorklistPadCache(v)
     wl1_np = np.flatnonzero(active_np).astype(np.int32)
     wl2_np = np.arange(v, dtype=np.int32)
     it = 0
     while len(wl1_np) and it < options.max_iters:
         if options.worklists or it == 0:
-            wl1 = _pad_worklist(wl1_np, v)
-            wl2 = _pad_worklist(wl2_np, v)
+            wl1 = pads.pad(wl1_np)
+            wl2 = pads.pad(wl2_np)
             if options.layout == "csr_segment":
                 wl1_mask = jnp.zeros(v, bool).at[wl1].set(True, mode="drop")
                 wl2_mask = jnp.zeros(v, bool).at[wl2].set(True, mode="drop")
         # without worklists, the full it==0 buffers are reused every iteration
+        pads.shape_pairs.add((len(wl1), len(wl2)))
 
         if options.packed:
             t = _refresh_rows_packed(t, wl1, np.uint32(it), options.priority, b)
@@ -420,6 +485,7 @@ def _mis2_compacted_impl(graph, active: Optional[np.ndarray] = None,
             t_np = np.asarray(t)
             und = is_undecided(t_np)
             live = np.asarray(m) != U32MAX
+            HOTLOOP_STATS.host_syncs += 2    # t + m pulled to rebuild worklists
         else:
             ts, tr, ti = _refresh_rows_unpacked(ts, tr, ti, wl1, np.uint32(it),
                                                 options.priority, b)
@@ -436,13 +502,234 @@ def _mis2_compacted_impl(graph, active: Optional[np.ndarray] = None,
             t_np = np.asarray(ts)
             und = t_np == S_UND
             live = np.asarray(ms) != S_OUT
+            HOTLOOP_STATS.host_syncs += 2    # ts + ms pulled to rebuild worklists
         wl1_np = np.flatnonzero(und).astype(np.int32)
         wl2_np = np.flatnonzero(live).astype(np.int32)
         it += 1
 
     in_set = (np.asarray(t) == np.uint32(IN)) if options.packed \
         else (np.asarray(ts) == S_IN)
-    return Mis2Result(in_set, it, len(wl1_np) == 0)
+    return Mis2Result(in_set, it, len(wl1_np) == 0,
+                      num_compiles=max(1, len(pads.shape_pairs)))
+
+
+# ===========================================================================
+# device-resident engine: the whole §V-B fixed point is ONE jitted
+# lax.while_loop — worklists compacted on device, zero host round-trips
+# ===========================================================================
+
+def compact_worklist(mask: jnp.ndarray):
+    """Cumsum-based stream compaction of a live-vertex mask.
+
+    Returns ``(indices[V] int32, count int32)``: the first ``count`` slots
+    hold the indices of the set bits in ascending order (exactly
+    ``np.flatnonzero`` order, so the device worklists match the host-driven
+    driver's buffers element for element); dead slots hold the sentinel
+    ``V`` and are dropped by every downstream ``.at[wl].set(..., 'drop')``
+    scatter — the same convention as :func:`_pad_worklist`.
+    """
+    v = mask.shape[0]
+    vids = jnp.arange(v, dtype=jnp.int32)
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    wl = jnp.full(v, v, dtype=jnp.int32)
+    wl = wl.at[jnp.where(mask, pos, v)].set(vids, mode="drop")
+    return wl, jnp.sum(mask, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "priority", "packed", "max_iters", "b", "use_pallas", "interpret"))
+def _resident_ell_fixed_point(neighbors, active, *, priority: str,
+                              packed: bool, max_iters: int, b: int,
+                              use_pallas: bool = False,
+                              interpret: bool = True):
+    """Device-resident compacted fixed point, ELL layout.
+
+    Identical per-round passes to the host-driven driver (same step
+    kernels, same ``[V]``-sentinel worklist convention), but worklist
+    rebuilding happens on device via :func:`compact_worklist` and the whole
+    loop is one ``lax.while_loop`` — a single dispatch per solve.  With
+    ``use_pallas`` the round runs the *fused* Pallas passes
+    (``kernels.minprop_ell.ops.fused_refresh_columns`` / ``fused_decide``):
+    the §V-A rank packing is recomputed on the fly from the gathered
+    neighbor ids, so no separate refresh_rows pass runs and each round
+    reads the ELL rows once per pass, with the live ``count`` feeding the
+    ``pl.when`` block-skip logic.
+    """
+    v = neighbors.shape[0]
+    if use_pallas:
+        from ..kernels.minprop_ell import ops as minprop_ops
+
+    if packed:
+        t0 = jnp.where(active, jnp.uint32(1), U32MAX)
+        m0 = jnp.full(v, U32MAX, dtype=jnp.uint32)
+        tup0 = (t0, m0)
+    else:
+        ts0 = jnp.where(active, S_UND, S_OUT).astype(jnp.uint8)
+        tr0 = jnp.zeros(v, dtype=jnp.uint32)
+        ti0 = jnp.arange(v, dtype=jnp.uint32)
+        ms0 = jnp.full(v, S_OUT, dtype=jnp.uint8)
+        mr0 = jnp.full(v, U32MAX, dtype=jnp.uint32)
+        mi0 = jnp.full(v, U32MAX, dtype=jnp.uint32)
+        tup0 = (ts0, tr0, ti0, ms0, mr0, mi0)
+
+    wl1_0, n1_0 = compact_worklist(active)
+    wl2_0 = jnp.arange(v, dtype=jnp.int32)   # iteration 0: refresh every M row
+    state0 = (tup0, wl1_0, n1_0, wl2_0, jnp.int32(v), jnp.uint32(0))
+
+    def cond(state):
+        _, _, n1, _, _, it = state
+        return (n1 > 0) & (it < max_iters)
+
+    def body(state):
+        tup, wl1, n1, wl2, n2, it = state
+        if packed:
+            t, m = tup
+            if use_pallas:
+                m = minprop_ops.fused_refresh_columns(
+                    t, m, wl2, n2, neighbors, it, priority=priority, b=b,
+                    interpret=interpret)
+                t = minprop_ops.fused_decide(
+                    t, m, wl1, n1, neighbors, active, it, priority=priority,
+                    b=b, interpret=interpret)
+            else:
+                t = _refresh_rows_packed(t, wl1, it, priority, b)
+                m = _refresh_cols_packed_ell(t, m, wl2, neighbors)
+                t = _decide_packed_ell(t, m, wl1, neighbors, active)
+            und = is_undecided(t)
+            live = m != U32MAX
+            tup = (t, m)
+        else:
+            ts, tr, ti, ms, mr, mi = tup
+            ts, tr, ti = _refresh_rows_unpacked(ts, tr, ti, wl1, it,
+                                                priority, b)
+            ms, mr, mi = _refresh_cols_unpacked_ell(ts, tr, ti, ms, mr, mi,
+                                                    wl2, neighbors)
+            ts = _decide_unpacked_ell(ts, tr, ti, ms, mr, mi, wl1,
+                                      neighbors, active)
+            und = ts == S_UND
+            live = ms != S_OUT
+            tup = (ts, tr, ti, ms, mr, mi)
+        wl1, n1 = compact_worklist(und)
+        wl2, n2 = compact_worklist(live)
+        return tup, wl1, n1, wl2, n2, it + jnp.uint32(1)
+
+    tup, _, n1, _, _, it = jax.lax.while_loop(cond, body, state0)
+    return tup[0], it, n1
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "priority", "packed", "max_iters", "b", "v"))
+def _resident_csr_fixed_point(edge_rows, edge_cols, active, *, priority: str,
+                              packed: bool, max_iters: int, b: int, v: int):
+    """Device-resident compacted fixed point, ``csr_segment`` layout.
+
+    The segment kernels already consume ``[V]`` worklist *masks*, so
+    compaction degenerates to mask recomputation — the loop state stays
+    fixed-shape and the whole fixed point is one dispatch, like the ELL
+    variant.  The row refresh is applied through the mask (the wl1 set is
+    exactly the undecided set, so this matches the host driver's
+    index-buffer scatter bit for bit).
+    """
+    vids = jnp.arange(v, dtype=jnp.uint32)
+    prio_fn = PRIORITY_FNS[priority]
+
+    if packed:
+        t0 = jnp.where(active, jnp.uint32(1), U32MAX)
+        m0 = jnp.full(v, U32MAX, dtype=jnp.uint32)
+        tup0 = (t0, m0)
+    else:
+        ts0 = jnp.where(active, S_UND, S_OUT).astype(jnp.uint8)
+        tup0 = (ts0, jnp.zeros(v, dtype=jnp.uint32),
+                jnp.arange(v, dtype=jnp.uint32),
+                jnp.full(v, S_OUT, dtype=jnp.uint8),
+                jnp.full(v, U32MAX, dtype=jnp.uint32),
+                jnp.full(v, U32MAX, dtype=jnp.uint32))
+
+    # iteration 0: wl1 = active rows, wl2 = every row (host-driver parity)
+    state0 = (tup0, active, jnp.ones(v, dtype=bool), jnp.uint32(0))
+
+    def cond(state):
+        _, wl1_mask, _, it = state
+        return jnp.any(wl1_mask) & (it < max_iters)
+
+    def body(state):
+        tup, wl1_mask, wl2_mask, it = state
+        if packed:
+            t, m = tup
+            newt = pack(prio_fn(it, vids), vids, b)
+            t = jnp.where(wl1_mask & is_undecided(t), newt, t)
+            m = _refresh_cols_packed_csr(t, m, wl2_mask, edge_rows,
+                                         edge_cols, v)
+            t = _decide_packed_csr(t, m, wl1_mask, edge_rows, edge_cols,
+                                   active, v)
+            und = is_undecided(t)
+            live = m != U32MAX
+            tup = (t, m)
+        else:
+            ts, tr, ti, ms, mr, mi = tup
+            prio = effective_priority(prio_fn(it, vids), b)
+            tr = jnp.where(wl1_mask & (ts == S_UND), prio, tr)
+            ms, mr, mi = _refresh_cols_unpacked_csr(
+                ts, tr, ti, ms, mr, mi, wl2_mask, edge_rows, edge_cols, v)
+            ts = _decide_unpacked_csr(ts, tr, ti, ms, mr, mi, wl1_mask,
+                                      edge_rows, edge_cols, active, v)
+            und = ts == S_UND
+            live = ms != S_OUT
+            tup = (ts, tr, ti, ms, mr, mi)
+        return tup, und, live, it + jnp.uint32(1)
+
+    tup, wl1_mask, _, it = jax.lax.while_loop(cond, body, state0)
+    return tup[0], it, jnp.sum(wl1_mask, dtype=jnp.int32)
+
+
+def _mis2_resident_impl(graph, active: Optional[np.ndarray] = None,
+                        options: Optional[Mis2Options] = None, *,
+                        pallas: bool = False,
+                        interpret: Optional[bool] = None) -> Mis2Result:
+    """Engine entry for ``compacted_resident`` / ``pallas_resident``.
+
+    Exactly one jitted dispatch per solve (counted in
+    ``HOTLOOP_STATS.resident_dispatches``); the only device->host transfer
+    is the final result pull after the fixed point has converged.
+    """
+    options = Mis2Options() if options is None else options
+    if not options.worklists:
+        raise ValueError(
+            "resident engines implement §V-B worklist compaction by "
+            "construction; use engine='dense' (masked lanes) or the "
+            "host-driven 'compacted' driver for the no-worklist ablation")
+    gh = as_graph(graph)
+    if pallas and not (options.layout == "ell" and options.packed):
+        raise ValueError("pallas path requires packed tuples + ELL layout")
+
+    if options.layout == "ell":
+        v = gh.ell.num_vertices
+    elif options.layout == "csr_segment":
+        v = gh.num_vertices
+    else:
+        raise ValueError(options.layout)
+    active_j = jnp.ones(v, dtype=bool) if active is None \
+        else jnp.asarray(active)
+    b = id_bits(v)
+
+    if options.layout == "ell":
+        if pallas:
+            from ..kernels._interpret import resolve_interpret
+            interpret = resolve_interpret(interpret)
+        t, it, n1 = _resident_ell_fixed_point(
+            gh.ell.neighbors, active_j, priority=options.priority,
+            packed=options.packed, max_iters=options.max_iters, b=b,
+            use_pallas=pallas, interpret=bool(interpret))
+    else:
+        edge_rows, edge_cols = gh.csr_edges
+        t, it, n1 = _resident_csr_fixed_point(
+            edge_rows, edge_cols, active_j, priority=options.priority,
+            packed=options.packed, max_iters=options.max_iters, b=b, v=v)
+    HOTLOOP_STATS.resident_dispatches += 1
+
+    t_np = np.asarray(t)
+    in_set = (t_np == np.uint32(IN)) if options.packed else (t_np == S_IN)
+    return Mis2Result(in_set, int(it), int(n1) == 0, num_compiles=1)
 
 
 # ===========================================================================
@@ -455,11 +742,14 @@ def run_mis2(graph, active=None, options: Optional[Mis2Options] = None,
              mesh=None, axis=None) -> Mis2Result:
     """Warning-free engine dispatch used by ``repro.api`` and by the other
     core pipelines (aggregation, partitioning).  Engines ``'compacted'``
-    (§V-B worklists), ``'dense'`` (single jitted ``while_loop``),
-    ``'pallas'`` (compacted with the Pallas min-propagation kernels) and
-    the sharded ``'distributed'``/``'distributed_single_gather'`` (which
-    honor ``mesh``/``axis``, defaulting to all attached devices) produce
-    bit-identical sets for equal options."""
+    (host-driven §V-B worklists), ``'compacted_resident'`` (the same fixed
+    point as one jitted ``while_loop`` with on-device worklist compaction),
+    ``'dense'`` (single jitted ``while_loop`` over masks), ``'pallas'`` /
+    ``'pallas_resident'`` (the Pallas min-propagation kernels on the
+    measured hot loop; the resident variant runs the fused single-row-read
+    passes) and the sharded ``'distributed'``/``'distributed_single_gather'``
+    (which honor ``mesh``/``axis``, defaulting to all attached devices)
+    produce bit-identical sets for equal options."""
     options = Mis2Options() if options is None else options
     if engine == "dense":
         return _mis2_dense_impl(graph, active, options)
@@ -469,14 +759,19 @@ def run_mis2(graph, active=None, options: Optional[Mis2Options] = None,
     if engine == "pallas":
         return _mis2_compacted_impl(graph, active, options, pallas=True,
                                     interpret=interpret)
+    if engine in ("compacted_resident", "pallas_resident"):
+        return _mis2_resident_impl(graph, active, options,
+                                   pallas=engine.startswith("pallas"),
+                                   interpret=interpret)
     if engine in ("distributed", "distributed_single_gather"):
         from .dist import _mis2_distributed_impl
         return _mis2_distributed_impl(
             graph, active, options, mesh=mesh, axis=axis,
             single_gather=engine.endswith("single_gather"))
     raise ValueError(
-        f"unknown mis2 engine {engine!r} (dense | compacted | pallas | "
-        "distributed | distributed_single_gather)")
+        f"unknown mis2 engine {engine!r} (dense | compacted | "
+        "compacted_resident | pallas | pallas_resident | distributed | "
+        "distributed_single_gather)")
 
 
 def mis2(graph, active=None, options: Optional[Mis2Options] = None,

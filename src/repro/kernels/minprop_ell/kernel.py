@@ -31,10 +31,21 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# hashing/tuples are leaf modules (jax/numpy only) — importing them here
+# keeps the §V-A rank packing bit-identical to the XLA path without
+# touching the core drivers (no import cycle: core imports kernels lazily)
+from ...core.hashing import PRIORITY_FNS
+from ...core.tuples import pack
+
 IN = np.uint32(0)
 OUT = np.uint32(0xFFFFFFFF)
 
 BLOCK_ROWS = 256
+# The fused resident kernels run their whole grid inside a lax.while_loop,
+# so per-grid-step overhead is paid every round; a larger block amortizes
+# it (and still fits VMEM: 512 rows x D neighbor ids x 4 B is ~16 KB at
+# D=8, beside the [V]-resident T/M vectors).
+FUSED_BLOCK_ROWS = 512
 
 
 def _refresh_columns_kernel(count_ref, nbrs_ref, t_ref, m_ref):
@@ -104,6 +115,172 @@ def refresh_columns_pallas(t: jnp.ndarray, wl_neighbors: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((w,), jnp.uint32),
         interpret=interpret,
     )(count.reshape(1), wl_neighbors, t)
+
+
+# ===========================================================================
+# fused passes for the device-resident engine (``pallas_resident``)
+#
+# The host-driven round moves each live row's ELL entries through HBM three
+# times: the XLA ``_gather_rows`` reads the row and writes a ``[W, D]``
+# worklist copy, then the kernel reads that copy back — per pass.  The
+# fused kernels below take the worklist *indices* plus the flat ``[V*D]``
+# adjacency and do the row gather in-kernel (one read, no materialized
+# copy).  The §V-A rank packing is folded into the same gather: an
+# undecided tuple's refreshed value is a pure function of (vertex id,
+# round), so instead of a separate refresh_rows scatter pass the kernels
+# recompute it on the fly for every gathered neighbor.  The stored T is
+# only written once per round, by the decide scatter — and because decide
+# writes the refreshed tuple for still-undecided rows, the stored state
+# after each round is bit-identical to the three-pass host pipeline.
+# ===========================================================================
+
+def _refresh_inline(t_vals, ids, it, priority: str, b: int):
+    """T after the §V-A row refresh, recomputed from ids instead of memory.
+
+    ``wl1`` is exactly the undecided set, so ``refresh_rows`` is the pure
+    map ``t -> undecided(t) ? pack(prio(it, id), id) : t`` — no pass
+    over stored T needed.
+    """
+    fresh = pack(PRIORITY_FNS[priority](it, ids), ids, b)
+    und = (t_vals != IN) & (t_vals != OUT)
+    return jnp.where(und, fresh, t_vals)
+
+
+def _gather_rows_inkernel(nbrs_flat, rows, d: int):
+    """[B] row ids -> [B, d] neighbor ids via a 1-D VMEM vector gather."""
+    block = rows.shape[0]
+    idx = rows[:, None] * d + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (block, d), 1)
+    return jnp.take(nbrs_flat, idx.reshape(-1), axis=0).reshape(block, d)
+
+
+def _fused_refresh_columns_kernel(count_ref, it_ref, wl_ref, nbrs_ref,
+                                  t_ref, m_ref, *, priority: str, b: int,
+                                  d: int):
+    """One grid step: M[wl block] from ONE in-kernel read of the ELL rows,
+    with the §V-A rank packing applied to the gathered tuples on the fly."""
+    i = pl.program_id(0)
+    block = wl_ref.shape[0]
+
+    @pl.when(i * block < count_ref[0])          # §V-B: skip dead blocks
+    def _():
+        v = t_ref.shape[0]
+        rows = jnp.clip(wl_ref[...], 0, v - 1)  # sentinel slots: dropped later
+        nbrs = _gather_rows_inkernel(nbrs_ref[...], rows, d)
+        t = t_ref[...]
+        tn = jnp.take(t, nbrs.reshape(-1), axis=0).reshape(nbrs.shape)
+        tn = _refresh_inline(tn, nbrs.astype(jnp.uint32), it_ref[0],
+                             priority, b)
+        mv = jnp.min(tn, axis=1)
+        m_ref[...] = jnp.where(mv == IN, OUT, mv)
+
+    @pl.when(i * block >= count_ref[0])
+    def _():
+        m_ref[...] = jnp.full((block,), OUT, dtype=jnp.uint32)
+
+
+def _fused_decide_kernel(count_ref, it_ref, wl_ref, nbrs_ref, t_ref, m_ref,
+                         act_ref, out_ref, *, priority: str, b: int, d: int):
+    """One grid step: IN/OUT decision for a block of worklist rows, with
+    the row tuple gather + refresh folded in (no pre-gathered T rows)."""
+    i = pl.program_id(0)
+    block = wl_ref.shape[0]
+
+    @pl.when(i * block < count_ref[0])
+    def _():
+        v = t_ref.shape[0]
+        rows = jnp.clip(wl_ref[...], 0, v - 1)
+        t = t_ref[...]
+        tv_old = jnp.take(t, rows, axis=0)
+        tv = _refresh_inline(tv_old, rows.astype(jnp.uint32), it_ref[0],
+                             priority, b)
+        nbrs = _gather_rows_inkernel(nbrs_ref[...], rows, d)
+        flat = nbrs.reshape(-1)
+        mn = jnp.take(m_ref[...], flat, axis=0).reshape(nbrs.shape)
+        an = jnp.take(act_ref[...], flat, axis=0).reshape(nbrs.shape)
+        any_out = jnp.any(jnp.where(an, mn, IN) == OUT, axis=1)
+        all_eq = jnp.all(jnp.where(an, mn, tv[:, None]) == tv[:, None], axis=1)
+        newt = jnp.where(any_out, OUT, jnp.where(all_eq, IN, tv))
+        und = (tv_old != IN) & (tv_old != OUT)
+        out_ref[...] = jnp.where(und, newt, tv_old)
+
+    @pl.when(i * block >= count_ref[0])
+    def _():
+        # every slot of a dead block holds the sentinel V: the scatter back
+        # into T drops all of them, so the fill value is never observed
+        out_ref[...] = jnp.zeros((block,), dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("priority", "b", "interpret",
+                                             "block_rows"))
+def fused_refresh_columns_pallas(t: jnp.ndarray, nbrs_flat: jnp.ndarray,
+                                 wl: jnp.ndarray, count: jnp.ndarray,
+                                 it: jnp.ndarray, *, priority: str, b: int,
+                                 interpret: bool = True,
+                                 block_rows: int = FUSED_BLOCK_ROWS) -> jnp.ndarray:
+    """Fused refresh_rows+refresh_columns: M values for the worklist slots.
+
+    ``wl`` is a full ``[V]`` sentinel-padded index buffer (the resident
+    driver's fixed-shape worklist); ``count`` may be traced — it reaches
+    the kernel via scalar prefetch, so block skipping follows the *live*
+    worklist length with no host involvement.
+    """
+    v = t.shape[0]
+    w = wl.shape[0]
+    d = nbrs_flat.shape[0] // v
+    block = min(block_rows, w)
+    grid = pl.cdiv(w, block)
+    kernel = functools.partial(_fused_refresh_columns_kernel,
+                               priority=priority, b=b, d=d)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(grid,),
+            in_specs=[
+                pl.BlockSpec((block,), lambda i, *_: (i,)),
+                pl.BlockSpec((v * d,), lambda i, *_: (0,)),
+                pl.BlockSpec((v,), lambda i, *_: (0,)),
+            ],
+            out_specs=pl.BlockSpec((block,), lambda i, *_: (i,)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((w,), jnp.uint32),
+        interpret=interpret,
+    )(count.reshape(1), it.reshape(1), wl, nbrs_flat, t)
+
+
+@functools.partial(jax.jit, static_argnames=("priority", "b", "interpret",
+                                             "block_rows"))
+def fused_decide_pallas(t: jnp.ndarray, m: jnp.ndarray, active: jnp.ndarray,
+                        nbrs_flat: jnp.ndarray, wl: jnp.ndarray,
+                        count: jnp.ndarray, it: jnp.ndarray, *,
+                        priority: str, b: int, interpret: bool = True,
+                        block_rows: int = FUSED_BLOCK_ROWS) -> jnp.ndarray:
+    """Fused row-gather+decide: new T values for the worklist slots."""
+    v = t.shape[0]
+    w = wl.shape[0]
+    d = nbrs_flat.shape[0] // v
+    block = min(block_rows, w)
+    grid = pl.cdiv(w, block)
+    kernel = functools.partial(_fused_decide_kernel, priority=priority,
+                               b=b, d=d)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(grid,),
+            in_specs=[
+                pl.BlockSpec((block,), lambda i, *_: (i,)),
+                pl.BlockSpec((v * d,), lambda i, *_: (0,)),
+                pl.BlockSpec((v,), lambda i, *_: (0,)),
+                pl.BlockSpec((v,), lambda i, *_: (0,)),
+                pl.BlockSpec((v,), lambda i, *_: (0,)),
+            ],
+            out_specs=pl.BlockSpec((block,), lambda i, *_: (i,)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((w,), jnp.uint32),
+        interpret=interpret,
+    )(count.reshape(1), it.reshape(1), wl, nbrs_flat, t, m, active)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))

@@ -17,9 +17,35 @@ import jax.numpy as jnp
 import numpy as np
 
 from .._interpret import resolve_interpret as _resolve_interpret
-from .kernel import decide_pallas, refresh_columns_pallas
+from .kernel import (
+    decide_pallas,
+    fused_decide_pallas,
+    fused_refresh_columns_pallas,
+    refresh_columns_pallas,
+)
 
 OUT = np.uint32(0xFFFFFFFF)
+
+# ---------------------------------------------------------------------------
+# ELL row-traffic model (asserted by tests/test_resident.py)
+#
+# HBM movements of one live worklist row's ELL entries per per-round pass:
+# the host-driven path gathers the row in XLA (1 read), materializes the
+# [W, D] worklist copy (1 write), and the kernel reads the copy back
+# (1 read) — 3 movements.  The fused resident kernels gather the row
+# in-kernel from the flat [V*D] adjacency: 1 read, no copy.
+# ---------------------------------------------------------------------------
+
+ELL_ROW_TRAFFIC = {
+    "pallas": {"reads": 2, "writes": 1},
+    "pallas_resident": {"reads": 1, "writes": 0},
+}
+
+
+def ell_row_movements(engine: str) -> int:
+    """Total HBM movements of one worklist row's ELL entries per pass."""
+    t = ELL_ROW_TRAFFIC[engine]
+    return t["reads"] + t["writes"]
 
 
 @jax.jit
@@ -44,4 +70,35 @@ def decide(t, m, wl1, neighbors, active, count, *, interpret=None):
     newt = decide_pallas(t_rows, m, active, wl_nbrs,
                          jnp.asarray(count, jnp.int32),
                          interpret=_resolve_interpret(interpret))
+    return t.at[wl1].set(newt, mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# fused wrappers for the device-resident driver: worklist *indices* go in
+# (no pre-gathered [W, D] row copies), counts may be traced (they feed the
+# pl.when block skipping via scalar prefetch inside a lax.while_loop)
+# ---------------------------------------------------------------------------
+
+def fused_refresh_columns(t, m, wl2, count, neighbors, it, *, priority: str,
+                          b: int, interpret=None):
+    """M.at[wl2] <- poisoned min over wl2 rows' closed neighborhoods, with
+    the §V-A row refresh applied to the gathered tuples on the fly."""
+    mv = fused_refresh_columns_pallas(
+        t, neighbors.reshape(-1), wl2, jnp.asarray(count, jnp.int32),
+        jnp.asarray(it, jnp.uint32), priority=priority, b=b,
+        interpret=_resolve_interpret(interpret))
+    return m.at[wl2].set(mv, mode="drop")
+
+
+def fused_decide(t, m, wl1, count, neighbors, active, it, *, priority: str,
+                 b: int, interpret=None):
+    """T.at[wl1] <- IN/OUT decision, row tuple gather + refresh in-kernel.
+
+    Because still-undecided rows get their *refreshed* tuple written back,
+    this single scatter leaves T exactly as the host pipeline's
+    refresh_rows + decide pair would."""
+    newt = fused_decide_pallas(
+        t, m, active, neighbors.reshape(-1), wl1,
+        jnp.asarray(count, jnp.int32), jnp.asarray(it, jnp.uint32),
+        priority=priority, b=b, interpret=_resolve_interpret(interpret))
     return t.at[wl1].set(newt, mode="drop")

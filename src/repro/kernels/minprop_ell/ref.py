@@ -45,3 +45,50 @@ def decide_ref(t_rows: jnp.ndarray, m: jnp.ndarray, active: jnp.ndarray,
     w = wl_neighbors.shape[0]
     live = jnp.arange(w) < count
     return jnp.where(live, newt, t_rows)
+
+
+# ---------------------------------------------------------------------------
+# fused-pass oracles (``pallas_resident``): refresh folded into the gathers
+# ---------------------------------------------------------------------------
+
+def _refresh_ref(t_vals, ids, it, priority: str, b: int):
+    from ...core.hashing import PRIORITY_FNS
+    from ...core.tuples import pack
+
+    fresh = pack(PRIORITY_FNS[priority](it, ids.astype(jnp.uint32)), ids, b)
+    und = (t_vals != IN) & (t_vals != OUT)
+    return jnp.where(und, fresh, t_vals)
+
+
+def fused_refresh_columns_ref(t, neighbors, wl, count, it, priority: str,
+                              b: int) -> jnp.ndarray:
+    """M for each worklist slot with the §V-A refresh applied on the fly.
+
+    neighbors: int32 [V, D] (NOT pre-gathered); wl: sentinel-padded [W]."""
+    v = neighbors.shape[0]
+    rows = jnp.clip(wl, 0, v - 1)
+    tn = _refresh_ref(t, jnp.arange(v, dtype=jnp.uint32), it, priority,
+                      b)[neighbors[rows]]
+    m = jnp.min(tn, axis=1)
+    m = jnp.where(m == IN, OUT, m)
+    live = jnp.arange(wl.shape[0]) < count
+    return jnp.where(live, m, OUT)
+
+
+def fused_decide_ref(t, m, active, neighbors, wl, count, it, priority: str,
+                     b: int) -> jnp.ndarray:
+    """New T for each worklist slot, row gather + refresh folded in."""
+    v = neighbors.shape[0]
+    rows = jnp.clip(wl, 0, v - 1)
+    tv_old = t[rows]
+    tv = _refresh_ref(tv_old, rows.astype(jnp.uint32), it, priority, b)
+    nb = neighbors[rows]
+    mn = m[nb]
+    an = active[nb]
+    any_out = jnp.any(jnp.where(an, mn, IN) == OUT, axis=1)
+    all_eq = jnp.all(jnp.where(an, mn, tv[:, None]) == tv[:, None], axis=1)
+    newt = jnp.where(any_out, OUT, jnp.where(all_eq, IN, tv))
+    und = (tv_old != IN) & (tv_old != OUT)
+    newt = jnp.where(und, newt, tv_old)
+    live = jnp.arange(wl.shape[0]) < count
+    return jnp.where(live, newt, jnp.zeros_like(newt))
