@@ -18,6 +18,7 @@ from benchmarks import (  # noqa: E402
     figs4_5_scaling,
     hotloop_overhead,
     roofline,
+    setup_overhead,
     table1_priorities,
     table3_scaling,
     table4_quality,
@@ -38,6 +39,7 @@ ALL = {
     "roofline": roofline.run,
     "batch": batch_throughput.run,
     "hotloop": hotloop_overhead.run,
+    "setup": setup_overhead.run,
 }
 
 
@@ -50,10 +52,10 @@ def main() -> None:
     args = ap.parse_args()
     names = list(ALL) if not args.only else args.only.split(",")
     for name in names:
-        t0 = time.time()
+        t0 = time.perf_counter()
         print(f"# --- {name} ---", flush=True)
         ALL[name](quick=args.quick)
-        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s", flush=True)
 
 
 if __name__ == "__main__":

@@ -31,9 +31,9 @@ def run(quick: bool = False):
     rows = []
     for agg in ("serial", "basic", "two_phase"):
         h = amg(a, aggregation=agg, coarse_size=200)
-        t0 = time.time()
+        t0 = time.perf_counter()
         res = cg(mv, b, precond=h.as_precond(), tol=1e-10, maxiter=300)
-        solve_s = time.time() - t0
+        solve_s = time.perf_counter() - t0
         # determinism: rebuild + resolve must match iteration count
         h2 = amg(a, aggregation=agg, coarse_size=200)
         res2 = cg(mv, b, precond=h2.as_precond(), tol=1e-10, maxiter=300)

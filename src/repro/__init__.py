@@ -18,7 +18,8 @@ __version__ = "0.2.0"
 _FACADE = {
     "Graph", "GraphBatch", "Backend", "Mis2Options", "BatchResult",
     "mis2", "misk", "color", "coarsen", "partition", "amg",
-    "mis2_batch", "color_batch", "coarsen_batch",
+    "amg_setup", "cluster_gs_setup",
+    "mis2_batch", "color_batch", "coarsen_batch", "amg_setup_batch",
 }
 
 __all__ = ["api", "__version__", *sorted(_FACADE)]

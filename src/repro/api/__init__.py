@@ -32,6 +32,7 @@ from .result import (
     AggregationResult,
     AmgSetup,
     BatchResult,
+    ClusterGsSetup,
     ColoringResult,
     Mis2Result,
     PartitionResult,
@@ -42,6 +43,9 @@ from .result import (
 from . import engines as _engines  # noqa: F401  (registers built-in engines)
 from .facade import (
     amg,
+    amg_setup,
+    amg_setup_batch,
+    cluster_gs_setup,
     coarsen,
     coarsen_batch,
     color,
@@ -57,8 +61,10 @@ from . import generators  # noqa: F401  (problem generators, re-exported)
 __all__ = [
     # facade calls
     "mis2", "misk", "color", "coarsen", "partition", "amg",
+    # multilevel setup (repro.multilevel engines)
+    "amg_setup", "cluster_gs_setup",
     # batched facade calls (repro.batch)
-    "mis2_batch", "color_batch", "coarsen_batch",
+    "mis2_batch", "color_batch", "coarsen_batch", "amg_setup_batch",
     "GraphBatch", "as_graph_batch", "BatchResult",
     # graph handle
     "Graph", "as_graph", "as_ell_graph", "as_csr_graph",
@@ -72,6 +78,6 @@ __all__ = [
     # options / results
     "Mis2Options", "ABLATION_CHAIN",
     "Result", "ResultLike", "Mis2Result", "ColoringResult",
-    "AggregationResult", "PartitionResult", "AmgSetup",
+    "AggregationResult", "PartitionResult", "AmgSetup", "ClusterGsSetup",
     "determinism_digest",
 ]

@@ -63,6 +63,25 @@ def default_mis2_engine(backend: Optional["Backend"] = None,
     return "pallas" if be.pallas else "compacted"
 
 
+def default_misk_engine(backend: Optional["Backend"] = None) -> str:
+    """``misk`` auto-selection (``engine=None``): always ``dense`` — the
+    distance-k fixed point was born device-resident (one jitted
+    ``while_loop``, zero in-loop host syncs), so unlike ``mis2`` there is
+    no host-driven default to escape.  The ``resident`` engine (worklist
+    compaction on the row refresh, the §V-B execution shape) exists for
+    ablation and produces bit-identical sets."""
+    return "dense"
+
+
+def default_multilevel_engine(backend: Optional["Backend"] = None) -> str:
+    """``multilevel`` auto-selection (``engine=None``): the device-resident
+    setup (on-device prolongator/Galerkin/packing, zero matrix-sized host
+    syncs) on accelerators; the host scipy/numpy path on CPU hosts, where
+    the round-trips are address-space copies.  Both engines produce
+    digest-identical hierarchies."""
+    return "resident" if accelerator_present() else "host"
+
+
 @dataclass(frozen=True)
 class Backend:
     """Execution policy for one pipeline invocation (hashable, reusable)."""

@@ -14,6 +14,11 @@ Engine call conventions
                    fixed point; ``backend`` is forwarded by the facade
                    only when the engine declares it, so externally
                    registered engines on the old convention keep working)
+* ``misk``:        fn(graph, k, priority, max_iters, backend)
+                   -> core Mis2Result
+* ``multilevel``:  fn(kind, graph, **kwargs) with kind 'amg' | 'cluster_gs'
+                   -> AMGHierarchy | cluster-GS setup tuple (the facade
+                   wraps either in its Result type)
 * ``coloring``:    fn(graph, max_rounds, backend) -> core ColoringResult
 * ``partition``:   fn(graph, num_parts, coarse_target, options, backend)
                    -> core PartitionResult
@@ -199,6 +204,63 @@ def _agg_two_phase_distributed(graph, options=None,
     return _aggregate_two_phase_distributed_impl(
         graph, _opts(options), min_secondary_neighbors, mesh=mesh, axis=axis,
         single_gather=single_gather)
+
+
+# -- misk (distance-k MIS) --------------------------------------------------
+
+@register_engine("misk", "dense",
+                 doc="single jitted lax.while_loop over masked [V] state "
+                     "(k-fold min-propagation)")
+def _misk_dense(graph, k, priority, max_iters, backend: Backend):
+    from ..core.misk import _mis_k_impl
+
+    return _mis_k_impl(graph, k, priority, max_iters)
+
+
+@register_engine("misk", "resident",
+                 doc="§V-B worklist shape for distance-k: on-device "
+                     "compacted worklist feeds the row refresh inside "
+                     "the single jitted while_loop — bit-identical to "
+                     "'dense' (which is already one dispatch per solve "
+                     "and stays the default); kept for ablation")
+def _misk_resident(graph, k, priority, max_iters, backend: Backend):
+    from ..core.misk import _misk_resident_impl
+
+    return _misk_resident_impl(graph, k, priority, max_iters)
+
+
+# -- multilevel setup (AMG hierarchy / cluster-GS packing) ------------------
+
+@register_engine("multilevel", "host",
+                 doc="legacy host orchestration: scipy smoothed "
+                     "prolongator, canonical sorted-COO Galerkin on "
+                     "numpy, numpy cluster packing — ~3 matrix-sized "
+                     "host round-trips per level (SETUP_STATS.host_syncs)")
+def _multilevel_host(kind, graph, **kwargs):
+    from ..multilevel.hierarchy import (
+        _build_hierarchy_impl,
+        _cluster_gs_setup_impl,
+    )
+
+    fn = _build_hierarchy_impl if kind == "amg" else _cluster_gs_setup_impl
+    return fn(graph, engine="host", **kwargs)
+
+
+@register_engine("multilevel", "resident",
+                 doc="whole per-level setup jitted on device (x64): "
+                     "fixed-shape prolongator assembly, padded sorted-COO "
+                     "SpGEMM Galerkin, coarse ELL repack, cluster/color "
+                     "packing — 7 dispatches per level, zero matrix-sized "
+                     "host syncs, digest-identical to 'host'; the facade "
+                     "default on accelerators")
+def _multilevel_resident(kind, graph, **kwargs):
+    from ..multilevel.hierarchy import (
+        _build_hierarchy_impl,
+        _cluster_gs_setup_impl,
+    )
+
+    fn = _build_hierarchy_impl if kind == "amg" else _cluster_gs_setup_impl
+    return fn(graph, engine="resident", **kwargs)
 
 
 # -- coloring ---------------------------------------------------------------

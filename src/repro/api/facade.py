@@ -25,7 +25,6 @@ from ..batch.pipeline import (
     _mis2_batch_impl,
 )
 from ..core.mis2 import Mis2Options
-from ..core.misk import _mis_k_impl
 from ..graphs.handle import Graph, as_graph
 from .backend import Backend, resolve_backend
 from .registry import get_engine
@@ -33,6 +32,7 @@ from .result import (
     AggregationResult,
     AmgSetup,
     BatchResult,
+    ClusterGsSetup,
     ColoringResult,
     Mis2Result,
     PartitionResult,
@@ -81,16 +81,30 @@ def mis2(graph, *, active=None, options: Optional[Mis2Options] = None,
 
 
 def misk(graph, k: int = 2, *, priority: str = "xorshift_star",
-         max_iters: int = 256,
+         max_iters: int = 256, engine: Optional[str] = None,
          backend: Optional[Backend] = None) -> Mis2Result:
-    """Distance-k maximal independent set (k-fold min-propagation)."""
+    """Distance-k maximal independent set (k-fold min-propagation),
+    deterministic across engines: ``dense`` (masked jitted fixed point)
+    and ``resident`` (§V-B worklist compaction on the row refresh)
+    return bit-identical sets.
+
+    ``engine=None`` selects ``dense`` — the distance-k fixed point is
+    already one jitted dispatch with zero in-loop host syncs, so there
+    is no host-driven default to escape; ``resident`` is the worklist
+    ablation shape."""
+    from .backend import default_misk_engine
+
     be = resolve_backend(backend)
     gh = _prepare(graph, be)
+    if engine is None:
+        engine = default_misk_engine(be)
+    fn = get_engine("misk", engine)
     t0 = time.perf_counter()
-    r = _mis_k_impl(gh, k, priority, max_iters)
+    r = fn(gh, k, priority, max_iters, be)
     dt = time.perf_counter() - t0
     return Mis2Result(r.in_set, r.iterations, r.converged, dt,
-                      engine=f"misk{k}")
+                      engine=f"misk{k}_{engine}",
+                      num_compiles=getattr(r, "num_compiles", None))
 
 
 def color(graph, *, max_rounds: int = 256, engine: str = "luby",
@@ -255,35 +269,157 @@ def coarsen_batch(graphs, *, method: str = "two_phase",
                        bucket_shapes=batch.bucket_shapes)
 
 
+def _wrap_hierarchy(h, aggregation: str, engine: str,
+                    wall_time: float) -> AmgSetup:
+    import numpy as np
+
+    sizes = np.asarray(h.level_sizes, dtype=np.int64).reshape(-1, 2)
+    return AmgSetup(sizes, len(h.levels), True, wall_time,
+                    hierarchy=h, aggregation=aggregation,
+                    setup_seconds=h.setup_seconds,
+                    aggregation_seconds=h.aggregation_seconds,
+                    engine=engine, timings=dict(h.timings),
+                    dispatches=h.dispatches)
+
+
+def amg_setup(matrix, *, aggregation: str = "two_phase",
+              engine: Optional[str] = None, max_levels: int = 10,
+              coarse_size: int = 200, omega: float = 2.0 / 3.0,
+              jacobi_weight: float = 2.0 / 3.0, smoother_sweeps: int = 2,
+              options: Optional[Mis2Options] = None,
+              mis2_engine: Optional[str] = None,
+              coarse_dtype: Optional[str] = None,
+              dense_coarse_cap: Optional[int] = None,
+              explicit_restriction: bool = True,
+              backend: Optional[Backend] = None) -> AmgSetup:
+    """Smoothed-aggregation AMG setup (paper Table V), dispatched through
+    the ``multilevel`` engine registry.
+
+    ``engine``: ``host`` (scipy prolongator + canonical numpy Galerkin;
+    matrix-sized host round-trips each level) or ``resident`` (the whole
+    per-level setup jitted on device — fixed-shape prolongator assembly,
+    padded sorted-COO SpGEMM, coarse ELL repack; zero matrix-sized host
+    syncs).  Both produce digest-identical hierarchies (per-level ``A_l``
+    ELL digests on the result, labels/colors from the shared aggregation
+    and coloring fixed points).  ``engine=None`` auto-selects ``resident``
+    on accelerators, ``host`` on CPU hosts.
+
+    ``coarse_dtype`` controls the dense coarsest-level factorization
+    (default: float64 on CPU hosts, float32 on accelerators);
+    ``dense_coarse_cap`` (default: ``coarse_size``) bounds the densified
+    size — a coarsest level left above it by a coarsening stall or the
+    ``max_levels`` cut falls back to a weighted-Jacobi coarse solve
+    instead of an unrequested O(n^2) dense factor.
+    ``explicit_restriction=False`` drops the stored ``R = P^T`` matrices;
+    the V-cycle then restricts matrix-free through the transposed ELL
+    SpMV kernel (``kernels.spmv_ell.spmv_t``), halving transfer-operator
+    memory at the cost of a scatter per restriction.
+    """
+    from .backend import default_multilevel_engine
+
+    be = resolve_backend(backend)
+    gh = _prepare(matrix, be)
+    if engine is None:
+        engine = default_multilevel_engine(be)
+    fn = get_engine("multilevel", engine)
+    t0 = time.perf_counter()
+    h = fn("amg", gh, aggregation=aggregation, max_levels=max_levels,
+           coarse_size=coarse_size, omega=omega,
+           jacobi_weight=jacobi_weight, smoother_sweeps=smoother_sweeps,
+           options=options, mis2_engine=mis2_engine,
+           interpret=be.resolve_interpret(), coarse_dtype=coarse_dtype,
+           dense_coarse_cap=dense_coarse_cap,
+           explicit_restriction=explicit_restriction)
+    return _wrap_hierarchy(h, aggregation, engine, time.perf_counter() - t0)
+
+
 def amg(matrix, *, aggregation: str = "two_phase", max_levels: int = 10,
         coarse_size: int = 200, omega: float = 2.0 / 3.0,
         jacobi_weight: float = 2.0 / 3.0, smoother_sweeps: int = 2,
         options: Optional[Mis2Options] = None,
         backend: Optional[Backend] = None) -> AmgSetup:
     """Smoothed-aggregation AMG setup (paper Table V).  Returns an
-    :class:`AmgSetup` whose ``.as_precond()`` plugs into ``solvers.cg``."""
-    import numpy as np
+    :class:`AmgSetup` whose ``.as_precond()`` plugs into ``solvers.cg``.
 
-    from ..solvers.amg import _build_hierarchy_impl
+    Equivalent to :func:`amg_setup` with the auto-selected engine; kept
+    for source compatibility."""
+    return amg_setup(matrix, aggregation=aggregation, max_levels=max_levels,
+                     coarse_size=coarse_size, omega=omega,
+                     jacobi_weight=jacobi_weight,
+                     smoother_sweeps=smoother_sweeps, options=options,
+                     backend=backend)
+
+
+def cluster_gs_setup(matrix, *, aggregation: str = "two_phase",
+                     engine: Optional[str] = None,
+                     options: Optional[Mis2Options] = None,
+                     coarsen_levels: int = 1,
+                     mis2_engine: Optional[str] = None,
+                     backend: Optional[Backend] = None) -> ClusterGsSetup:
+    """Cluster multicolor Gauss-Seidel setup (paper Alg. 4 / Table VI)
+    dispatched through the ``multilevel`` engine registry: aggregate with
+    MIS-2, color the coarse graph, pack cluster rows per color.
+
+    The ``resident`` engine builds the coarse graph, runs the coloring
+    fixed point, and packs the rows on device; ``host`` is the legacy
+    numpy path.  Labels, colors, and the packed row matrices are
+    bit-identical across engines; the result carries the structured
+    setup-phase timings (``aggregate`` / ``color`` / ``pack``).
+    """
+    from ..graphs.ops import extract_diagonal
+    from ..solvers.multicolor_gs import MulticolorGSPreconditioner
+    from .backend import default_multilevel_engine
 
     be = resolve_backend(backend)
     gh = _prepare(matrix, be)
+    if engine is None:
+        engine = default_multilevel_engine(be)
+    fn = get_engine("multilevel", engine)
     t0 = time.perf_counter()
-    h = _build_hierarchy_impl(
-        gh.csr_matrix, aggregation=aggregation, max_levels=max_levels,
-        coarse_size=coarse_size, omega=omega, jacobi_weight=jacobi_weight,
-        smoother_sweeps=smoother_sweeps, options=options,
-        interpret=be.resolve_interpret())
+    color_rows, num_colors, nagg, labels, colors, timings = fn(
+        "cluster_gs", gh, aggregation=aggregation, options=options,
+        coarsen_levels=coarsen_levels, mis2_engine=mis2_engine)
+    ell = gh.ell_matrix
+    diag = extract_diagonal(gh.csr_matrix)
     dt = time.perf_counter() - t0
-    sizes = np.asarray(h.level_sizes, dtype=np.int64).reshape(-1, 2)
-    return AmgSetup(sizes, len(h.levels), True, dt,
-                    hierarchy=h, aggregation=aggregation,
-                    setup_seconds=h.setup_seconds,
-                    aggregation_seconds=h.aggregation_seconds)
+    pre = MulticolorGSPreconditioner(ell, diag, color_rows, num_colors,
+                                     nagg, dt, "cluster", timings=timings)
+    return ClusterGsSetup(labels, 0, True, dt, preconditioner=pre,
+                          num_colors=num_colors, num_clusters=nagg,
+                          colors=colors, engine=engine, timings=timings)
+
+
+def amg_setup_batch(matrices, *, aggregation: str = "two_phase",
+                    engine: Optional[str] = None,
+                    options: Optional[Mis2Options] = None,
+                    backend: Optional[Backend] = None,
+                    **hierarchy_kwargs) -> BatchResult:
+    """Batched AMG setup: every member's finest-level aggregation — the
+    dominant setup cost — runs through the vmapped bucketed coarsening
+    (one dispatch per bucket shape); each hierarchy is then finished with
+    the selected multilevel engine.  Per-graph hierarchies are
+    digest-identical to ``amg_setup(g, ...)``."""
+    from ..batch.pipeline import _amg_setup_batch_impl
+    from .backend import default_multilevel_engine
+
+    be = resolve_backend(backend)
+    batch = _prepare_batch(matrices, be)
+    if engine is None:
+        engine = default_multilevel_engine(be)
+    t0 = time.perf_counter()
+    hierarchies = _amg_setup_batch_impl(batch, aggregation, options,
+                                        engine=engine, **hierarchy_kwargs)
+    dt = time.perf_counter() - t0
+    per = dt / max(1, len(hierarchies))
+    results = [_wrap_hierarchy(h, aggregation, engine, per)
+               for h in hierarchies]
+    return BatchResult(results, dt, engine=f"{engine}_batched",
+                       bucket_shapes=batch.bucket_shapes)
 
 
 __all__ = [
     "mis2", "misk", "color", "coarsen", "partition", "amg",
-    "mis2_batch", "color_batch", "coarsen_batch",
+    "amg_setup", "cluster_gs_setup",
+    "mis2_batch", "color_batch", "coarsen_batch", "amg_setup_batch",
     "Graph", "GraphBatch", "Backend", "Mis2Options", "determinism_digest",
 ]

@@ -5,6 +5,7 @@ examples/benchmarks importable against the ``repro.api`` surface alone.
 """
 from ..graphs.generators import (
     elasticity3d,
+    er_laplacian,
     laplace3d,
     paper_suite,
     path_graph,
@@ -13,6 +14,6 @@ from ..graphs.generators import (
 )
 
 __all__ = [
-    "elasticity3d", "laplace3d", "paper_suite", "path_graph",
+    "elasticity3d", "er_laplacian", "laplace3d", "paper_suite", "path_graph",
     "random_skewed_graph", "random_uniform_graph",
 ]

@@ -186,12 +186,24 @@ class BatchResult:
 @dataclass
 class AmgSetup(Result):
     """AMG hierarchy setup: ``payload`` is the [levels, 2] (n, nnz) table;
-    the usable hierarchy hangs off ``.hierarchy`` / ``.as_precond()``."""
+    the usable hierarchy hangs off ``.hierarchy`` / ``.as_precond()``.
+
+    ``engine`` names the multilevel engine that built it (``host`` |
+    ``resident``); ``timings`` is the structured setup-phase split
+    (``aggregate`` / ``prolongator`` / ``galerkin`` / ``pack`` seconds);
+    ``dispatches`` counts the resident engine's jitted dispatches for the
+    build (0 on the host engine).  ``level_digests`` exposes the
+    per-level ``A_l`` ELL digests — the bit-identity surface the
+    ``multilevel`` engines are gated on.
+    """
 
     hierarchy: object | None = None
     aggregation: str = ""
     setup_seconds: float = 0.0
     aggregation_seconds: float = 0.0
+    engine: str = ""
+    timings: dict = field(default_factory=dict)
+    dispatches: int = 0
 
     @property
     def level_sizes(self) -> list:
@@ -201,5 +213,42 @@ class AmgSetup(Result):
     def num_levels(self) -> int:
         return int(self.payload.shape[0])
 
+    @property
+    def level_digests(self) -> list:
+        return self.hierarchy.level_digests() if self.hierarchy else []
+
     def as_precond(self):
         return self.hierarchy.as_precond()
+
+
+@dataclass
+class ClusterGsSetup(Result):
+    """Cluster multicolor GS setup: ``payload`` is the int32 cluster label
+    per vertex (so ``digest`` gates the aggregation); ``colors`` carries
+    the coarse coloring with its own digest, and ``preconditioner`` is the
+    ready :class:`~repro.solvers.multicolor_gs.MulticolorGSPreconditioner`.
+    ``timings`` is the structured setup split (``aggregate`` / ``color`` /
+    ``pack`` seconds)."""
+
+    preconditioner: object | None = None
+    num_colors: int = 0
+    num_clusters: int = 0
+    colors: np.ndarray | None = None
+    engine: str = ""
+    timings: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.colors is not None:
+            self.colors = np.asarray(self.colors)
+
+    @property
+    def labels(self) -> np.ndarray:
+        return self.payload
+
+    @property
+    def colors_digest(self) -> str:
+        return determinism_digest(self.colors)
+
+    def as_precond(self, sweeps: int = 1, symmetric: bool = True):
+        return self.preconditioner.as_precond(sweeps, symmetric)

@@ -291,7 +291,42 @@ def _coarsen_bucket(bucket, method: str, options: Mis2Options,
     return results
 
 
+def _amg_setup_batch_impl(batch: GraphBatch, aggregation: str = "two_phase",
+                          options: Optional[Mis2Options] = None,
+                          min_secondary_neighbors: int = 2,
+                          engine: str = "host", **hier_kwargs) -> list:
+    """Batched AMG setup: the finest-level aggregation of every member —
+    the dominant setup cost — runs through the vmapped bucketed coarsening
+    (one dispatch per bucket shape), and each hierarchy is finished
+    per-graph with the precomputed labels injected via ``first_agg``.
+
+    Per-graph hierarchies are digest-identical to ``amg_setup(g, ...)``:
+    the batched labels are bit-identical to the single-graph engines
+    (the ``repro.batch`` invariant), and everything downstream of the
+    labels is the same multilevel engine code path.
+    """
+    from ..multilevel.hierarchy import _build_hierarchy_impl
+
+    coarse_size = hier_kwargs.get("coarse_size", 200)
+    aggs: list = [None] * len(batch)
+    if aggregation in ("basic", "two_phase"):
+        sub = [i for i, g in enumerate(batch.graphs)
+               if g.num_vertices > coarse_size]
+        if sub:
+            res = _coarsen_batch_impl(GraphBatch([batch.graphs[i]
+                                                  for i in sub]),
+                                      aggregation, options,
+                                      min_secondary_neighbors)
+            for i, r in zip(sub, res):
+                aggs[i] = r
+    return [_build_hierarchy_impl(g, aggregation=aggregation, engine=engine,
+                                  options=options, first_agg=agg,
+                                  **hier_kwargs)
+            for g, agg in zip(batch.graphs, aggs)]
+
+
 __all__ = [
     "as_graph_batch",
     "_mis2_batch_impl", "_color_batch_impl", "_coarsen_batch_impl",
+    "_amg_setup_batch_impl",
 ]

@@ -70,6 +70,72 @@ def _mis_k_impl(graph, k: int = 2, priority: str = "xorshift_star",
     return Mis2Result(t_np == np.uint32(IN), int(iters), not und.any())
 
 
+# ---------------------------------------------------------------------------
+# resident engine (the PR-4 hot-loop pattern applied to distance-k): the
+# same per-round arithmetic, but the row refresh runs through an on-device
+# compacted worklist (sentinel-V scatter-drop) and the whole fixed point is
+# one jitted dispatch accounted in HOTLOOP_STATS — bit-identical to the
+# dense engine (the refresh scatter touches exactly the undecided set).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "priority", "max_iters"))
+def _misk_resident_fixpoint(neighbors, k: int, priority: str, max_iters: int):
+    from .mis2 import compact_worklist
+
+    v = neighbors.shape[0]
+    b = id_bits(v)
+    prio_fn = PRIORITY_FNS[priority]
+    t0 = jnp.full((v,), jnp.uint32(1))
+    wl0, n0 = compact_worklist(is_undecided(t0))
+
+    def cond(state):
+        _, _, n, it = state
+        return (n > 0) & (it < max_iters)
+
+    def body(state):
+        t, wl, _, it = state
+        rows = jnp.clip(wl, 0, v - 1)
+        ids = rows.astype(jnp.uint32)
+        told = t[rows]
+        newt = pack(prio_fn(it, ids), ids, b)
+        newt = jnp.where(is_undecided(told), newt, told)
+        t = t.at[wl].set(newt, mode="drop")
+        # k-fold closed-neighborhood min
+        m = t
+        for _ in range(k):
+            m = jnp.min(m[neighbors], axis=1)
+        new_in = is_undecided(t) & (m == t)
+        t = jnp.where(new_in, IN, t)
+        # propagate OUT-ness k hops from IN vertices
+        near_in = (t == IN)
+        for _ in range(k):
+            near_in = jnp.any(near_in[neighbors], axis=1) | near_in
+        t = jnp.where(is_undecided(t) & near_in, OUT, t)
+        wl, n = compact_worklist(is_undecided(t))
+        return t, wl, n, it + jnp.uint32(1)
+
+    t, _, n, iters = jax.lax.while_loop(cond, body, (t0, wl0, n0,
+                                                     jnp.uint32(0)))
+    return t, iters, n
+
+
+def _misk_resident_impl(graph, k: int = 2, priority: str = "xorshift_star",
+                        max_iters: int = 256) -> Mis2Result:
+    """Engine entry for ``misk: resident`` — one jitted dispatch per solve
+    (counted in ``HOTLOOP_STATS.resident_dispatches``)."""
+    from .mis2 import HOTLOOP_STATS
+
+    if k < 1:
+        raise ValueError("k >= 1")
+    ell = as_ell_graph(graph)
+    t, iters, n = _misk_resident_fixpoint(ell.neighbors, k, priority,
+                                          max_iters)
+    HOTLOOP_STATS.resident_dispatches += 1
+    t_np = np.asarray(t)
+    return Mis2Result(t_np == np.uint32(IN), int(iters), int(n) == 0,
+                      num_compiles=1)
+
+
 def mis_k(graph, k: int = 2, priority: str = "xorshift_star",
           max_iters: int = 256) -> Mis2Result:
     """Distance-k maximal independent set (deterministic, jitted).

@@ -17,6 +17,7 @@ from .csr import (
 from .handle import Graph, as_csr_graph, as_ell_graph, as_graph
 from .generators import (
     elasticity3d,
+    er_laplacian,
     laplace3d,
     paper_suite,
     path_graph,
@@ -41,7 +42,7 @@ __all__ = [
     "BucketedELL", "CSRGraph", "CSRMatrix", "ELLGraph", "ELLMatrix",
     "csr_from_coo", "csr_to_bucketed_ell", "csr_to_ell_graph", "csr_to_ell_matrix", "degrees",
     "ell_to_csr_graph", "ensure_self_loops", "pad_ell_graph", "symmetrize",
-    "elasticity3d", "laplace3d", "paper_suite", "path_graph",
+    "elasticity3d", "er_laplacian", "laplace3d", "paper_suite", "path_graph",
     "random_skewed_graph", "random_uniform_graph",
     "coarse_graph_from_labels", "extract_diagonal", "galerkin_coarse_matrix",
     "graph_power2", "matrix_to_scipy",

@@ -124,6 +124,29 @@ def random_uniform_graph(num_vertices: int, avg_degree: float, seed: int = 0,
     return csr_from_coo(all_rows, all_cols, num_vertices)
 
 
+def er_laplacian(num_vertices: int, avg_degree: float,
+                 seed: int = 0) -> CSRMatrix:
+    """Graph Laplacian (+I, so it is SPD with a full diagonal) of an
+    Erdos-Renyi graph — the random *matrix* companion of
+    :func:`random_uniform_graph`, used by the multilevel digest-parity
+    gate and ``benchmarks/setup_overhead.py``."""
+    import scipy.sparse as sp
+
+    import jax.numpy as jnp
+
+    g = random_uniform_graph(num_vertices, avg_degree, seed=seed,
+                             with_self_loops=False)
+    ip, ix = np.asarray(g.indptr), np.asarray(g.indices)
+    off = sp.csr_matrix((np.ones(len(ix)), ix, ip),
+                        shape=(num_vertices, num_vertices))
+    lap = sp.diags(np.asarray(off.sum(axis=1)).ravel() + 1.0) - off
+    lap = lap.tocsr()
+    lap.sort_indices()
+    return CSRMatrix(jnp.asarray(lap.indptr.astype(np.int32)),
+                     jnp.asarray(lap.indices.astype(np.int32)),
+                     jnp.asarray(lap.data.astype(np.float32)))
+
+
 def random_skewed_graph(num_vertices: int, avg_degree: float, seed: int = 0,
                         alpha: float = 1.5, with_self_loops: bool = True) -> CSRGraph:
     """Preferential-style skewed-degree graph (stress for ELL padding)."""

@@ -45,3 +45,53 @@ def spmv_ell_pallas(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray, *,
         out_shape=jax.ShapeDtypeStruct((v,), x.dtype),
         interpret=interpret,
     )(cols, vals, x)
+
+
+def _spmv_t_kernel(cols_ref, vals_ref, x_ref, y_ref, *, num_rows: int):
+    """Transposed SpMV grid step: scatter one row block into the full
+    (VMEM-resident) output, accumulating across grid steps.  Rows past
+    ``num_rows`` (the ragged final block) are masked to zero — compiled
+    Pallas pads partial blocks with unspecified values, unlike interpret
+    mode's zero padding."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    block = cols_ref.shape[0]
+    valid = i * block + jnp.arange(block) < num_rows
+    cols = jnp.where(valid[:, None], cols_ref[...], 0)     # [B, D] int32
+    vals = vals_ref[...]                                   # [B, D] f32
+    x = x_ref[...]                                         # [B]
+    contrib = jnp.where(valid[:, None],
+                        vals.astype(jnp.float32)
+                        * x.astype(jnp.float32)[:, None], 0.0)
+    y = y_ref[...]
+    y_ref[...] = y.at[cols.reshape(-1)].add(
+        contrib.reshape(-1).astype(y.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("num_out", "interpret",
+                                             "block_rows"))
+def spmv_ell_t_pallas(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray,
+                      *, num_out: int, interpret: bool = True,
+                      block_rows: int = BLOCK_ROWS) -> jnp.ndarray:
+    """y = A^T @ x for rectangular ELL A (restriction without an explicit
+    R matrix).  The output vector stays resident in VMEM across the whole
+    grid; each step scatters one ``[BLOCK_ROWS, D]`` tile into it."""
+    v, d = cols.shape
+    block = min(block_rows, v)
+    grid = pl.cdiv(v, block)
+    return pl.pallas_call(
+        functools.partial(_spmv_t_kernel, num_rows=v),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((num_out,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((num_out,), x.dtype),
+        interpret=interpret,
+    )(cols, vals, x)

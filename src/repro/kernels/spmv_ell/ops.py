@@ -1,4 +1,4 @@
-"""Jitted wrapper for the Pallas ELL SpMV.
+"""Jitted wrappers for the Pallas ELL SpMV kernels.
 
 ``interpret=None`` defers to the :class:`repro.api.Backend` policy
 (interpret only off-accelerator) instead of the seed's hard ``True``.
@@ -7,9 +7,16 @@ from __future__ import annotations
 
 from ...graphs.csr import ELLMatrix
 from .._interpret import resolve_interpret as _resolve_interpret
-from .kernel import spmv_ell_pallas
+from .kernel import spmv_ell_pallas, spmv_ell_t_pallas
 
 
 def spmv(m: ELLMatrix, x, *, interpret: bool | None = None):
     return spmv_ell_pallas(m.cols, m.vals, x,
                            interpret=_resolve_interpret(interpret))
+
+
+def spmv_t(m: ELLMatrix, x, num_out: int, *, interpret: bool | None = None):
+    """y = M^T @ x for rectangular ELL M ([rows, num_out] logically) —
+    the matrix-free restriction op (R = P^T) of the multilevel solve."""
+    return spmv_ell_t_pallas(m.cols, m.vals, x, num_out=num_out,
+                             interpret=_resolve_interpret(interpret))

@@ -8,3 +8,15 @@ def spmv_ell_ref(cols: jnp.ndarray, vals: jnp.ndarray,
                  x: jnp.ndarray) -> jnp.ndarray:
     """y = A @ x, A in ELL (padding: col=row, val=0)."""
     return jnp.sum(vals * x[cols], axis=1)
+
+
+def spmv_ell_t_ref(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray,
+                   num_out: int) -> jnp.ndarray:
+    """y = A^T @ x with A in (possibly rectangular) ELL form.
+
+    ``A`` is ``[rows, num_out]`` logically; ``x`` has length ``rows`` and
+    the scatter accumulates ``vals[r, j] * x[r]`` into ``cols[r, j]``.
+    Padding carries ``val == 0`` so it contributes nothing.
+    """
+    contrib = vals * x[:, None]                  # [rows, D]
+    return jnp.zeros(num_out, x.dtype).at[cols].add(contrib.astype(x.dtype))

@@ -1,0 +1,39 @@
+"""``repro.multilevel`` — device-resident multilevel setup.
+
+The construction previously scattered across ``solvers/amg.py``,
+``solvers/multicolor_gs.py`` and ``graphs/ops.py``:
+
+* :mod:`~repro.multilevel.hierarchy`    — engine orchestration
+  (``host`` | ``resident``), :class:`AMGHierarchy`, ``SETUP_STATS``;
+* :mod:`~repro.multilevel.prolongator`  — tentative + smoothed
+  prolongator (scipy host path, fixed-shape device path);
+* :mod:`~repro.multilevel.galerkin`     — ``P^T A P`` as a canonical
+  padded sorted-COO SpGEMM (numpy and device backends, bit-identical);
+* :mod:`~repro.multilevel.packing`      — cluster/color row packing for
+  multicolor Gauss-Seidel.
+
+Facade entries: ``repro.amg_setup(...)`` / ``repro.cluster_gs_setup(...)``.
+"""
+from .galerkin import galerkin, galerkin_coo_host
+from .hierarchy import (
+    SETUP_STATS,
+    AMGHierarchy,
+    AMGLevel,
+    SetupStats,
+    _build_hierarchy_impl,
+    _cluster_gs_setup_impl,
+    ell_matrix_digest,
+    resolve_coarse_dtype,
+    x64_context,
+)
+from .packing import pack_clusters_device, pack_clusters_host
+from .prolongator import rect_ell, smoothed_prolongator_host
+
+__all__ = [
+    "AMGHierarchy", "AMGLevel", "SETUP_STATS", "SetupStats",
+    "galerkin", "galerkin_coo_host", "ell_matrix_digest",
+    "pack_clusters_host", "pack_clusters_device",
+    "rect_ell", "smoothed_prolongator_host",
+    "resolve_coarse_dtype", "x64_context",
+    "_build_hierarchy_impl", "_cluster_gs_setup_impl",
+]

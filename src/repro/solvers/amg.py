@@ -5,34 +5,33 @@ aggregates come from Algorithm 2 ("MIS2 Basic"), Algorithm 3 ("MIS2 Agg"),
 or the host-sequential greedy ("Serial Agg" stand-in), used inside CG with
 a damped-Jacobi smoother.
 
-Setup (host + device, like MueLu's):
-  tentative P0[v, agg(v)] = 1/sqrt(|agg|);  P = (I - omega D^-1 A) P0;
-  A_{l+1} = P^T A_l P (Galerkin, host scipy); coarsest level is solved
-  densely with a cached factorization.
-Solve (fully jitted per level): damped-Jacobi pre/post smoothing, ELL SpMV
-residuals, ELL prolong/restrict.
+Setup now lives in :mod:`repro.multilevel` (engines ``host`` | ``resident``
+dispatched through the api registry; see ``repro.amg_setup``); this module
+keeps the **solve phase** (fully jitted per level: damped-Jacobi pre/post
+smoothing, ELL SpMV residuals, ELL prolong/restrict) plus the legacy
+entry points, which re-export the multilevel containers unchanged.
 """
 from __future__ import annotations
 
 import functools
-import time
-from dataclasses import dataclass, field
-from typing import Callable, List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .._compat import DeprecatedMapping, warn_deprecated
-from ..graphs.csr import CSRMatrix, ELLMatrix, csr_to_ell_matrix
-from ..graphs.handle import Graph
-from ..graphs.ops import extract_diagonal, galerkin_coarse_matrix, matrix_to_scipy
 from ..core.aggregation import (
     _aggregate_basic_impl,
     _aggregate_serial_greedy_impl,
     _aggregate_two_phase_impl,
 )
 from ..core.mis2 import Mis2Options
+from ..graphs.csr import CSRMatrix, ELLMatrix
+from ..multilevel.hierarchy import (  # noqa: F401  (compat re-exports)
+    AMGHierarchy,
+    AMGLevel,
+    _build_hierarchy_impl,
+)
+from ..multilevel.prolongator import rect_ell as _rect_ell  # noqa: F401
 
 # Deprecated: aggregation dispatch moved to the repro.api engine registry
 # (register_engine("aggregation", ...)); this mapping warns on access.
@@ -48,129 +47,14 @@ AGGREGATORS = DeprecatedMapping(
 )
 
 
-@dataclass
-class AMGLevel:
-    a_ell: ELLMatrix
-    diag: jnp.ndarray
-    p_ell: ELLMatrix | None        # prolongator (fine x coarse), None at coarsest
-    r_ell: ELLMatrix | None        # restriction = P^T
-    n: int
-    nnz: int
-
-
-@dataclass
-class AMGHierarchy:
-    levels: List[AMGLevel]
-    coarse_solve: Callable
-    setup_seconds: float
-    aggregation_seconds: float
-    aggregation: str
-    omega: float
-    jacobi_weight: float
-    smoother_sweeps: int
-    level_sizes: list = field(default_factory=list)
-
-    def as_precond(self) -> Callable:
-        return functools.partial(v_cycle, self)
-
-
-def _rect_ell(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
-              nrows: int) -> ELLMatrix:
-    """Rectangular ELL from COO (for P and R; padding col 0, val 0)."""
-    order = np.lexsort((cols, rows))
-    rows, cols, vals = rows[order], cols[order], vals[order]
-    counts = np.bincount(rows, minlength=nrows)
-    d = max(1, int(counts.max()))
-    cmat = np.zeros((nrows, d), dtype=np.int32)
-    vmat = np.zeros((nrows, d), dtype=np.float32)
-    mmat = np.zeros((nrows, d), dtype=bool)
-    slot = np.arange(len(rows)) - np.repeat(np.cumsum(counts) - counts, counts)
-    cmat[rows, slot] = cols
-    vmat[rows, slot] = vals
-    mmat[rows, slot] = True
-    return ELLMatrix(jnp.asarray(cmat), jnp.asarray(vmat), jnp.asarray(mmat))
-
-
-def _smoothed_prolongator(a: CSRMatrix, labels: np.ndarray, nagg: int,
-                          omega: float):
-    """P = (I - omega D^-1 A) P0 in COO (host)."""
-    asp = matrix_to_scipy(a)
-    import scipy.sparse as sp
-
-    v = a.num_rows
-    sizes = np.bincount(labels, minlength=nagg).astype(np.float64)
-    p0 = sp.csr_matrix(
-        (1.0 / np.sqrt(sizes[labels]), (np.arange(v), labels)), shape=(v, nagg)
-    )
-    d_inv = 1.0 / asp.diagonal()
-    p = p0 - omega * sp.diags(d_inv) @ (asp @ p0)
-    p = p.tocoo()
-    return p.row, p.col, p.data
-
-
-def _build_hierarchy_impl(a, aggregation: str = "mis2_agg",
-                          max_levels: int = 10, coarse_size: int = 200,
-                          omega: float = 2.0 / 3.0,
-                          jacobi_weight: float = 2.0 / 3.0,
-                          smoother_sweeps: int = 2,
-                          options: Mis2Options | None = None,
-                          mis2_engine: str | None = None,
-                          interpret=None) -> AMGHierarchy:
-    # aggregation dispatch via the api engine registry (aliases keep the
-    # legacy "mis2_basic" / "mis2_agg" spellings working)
-    from ..api.registry import get_engine
-
-    if isinstance(a, Graph):
-        a = a.csr_matrix
-    t_setup = time.time()
-    t_agg = 0.0
-    agg_fn = get_engine("aggregation", aggregation)
-    levels: List[AMGLevel] = []
-    sizes = []
-    cur = a
-    while len(levels) < max_levels - 1 and cur.num_rows > coarse_size:
-        t0 = time.time()
-        agg_kwargs = dict(options=options, interpret=interpret)
-        if mis2_engine is not None:
-            # None = engine's own default; omit so engines registered with
-            # any default spelling keep applying theirs (mirrors facade)
-            agg_kwargs["mis2_engine"] = mis2_engine
-        agg = agg_fn(cur.graph, **agg_kwargs)
-        t_agg += time.time() - t0
-        if agg.num_aggregates >= cur.num_rows:
-            break
-        pr, pc, pv = _smoothed_prolongator(cur, agg.labels, agg.num_aggregates,
-                                           omega)
-        a_next = galerkin_coarse_matrix(cur, pr, pc, pv, agg.num_aggregates)
-        p_ell = _rect_ell(pr, pc, pv.astype(np.float32), cur.num_rows)
-        r_ell = _rect_ell(pc, pr, pv.astype(np.float32), agg.num_aggregates)
-        levels.append(AMGLevel(csr_to_ell_matrix(cur), extract_diagonal(cur),
-                               p_ell, r_ell, cur.num_rows, cur.num_entries))
-        sizes.append((cur.num_rows, cur.num_entries))
-        cur = a_next
-    # coarsest level: cached dense factorization
-    levels.append(AMGLevel(csr_to_ell_matrix(cur), extract_diagonal(cur),
-                           None, None, cur.num_rows, cur.num_entries))
-    sizes.append((cur.num_rows, cur.num_entries))
-    dense = np.asarray(matrix_to_scipy(cur).todense())
-    lu_piv = jax.scipy.linalg.lu_factor(jnp.asarray(dense, dtype=jnp.float32))
-
-    @jax.jit
-    def coarse_solve(b):
-        return jax.scipy.linalg.lu_solve(lu_piv, b)
-
-    return AMGHierarchy(levels, coarse_solve, time.time() - t_setup, t_agg,
-                        aggregation, omega, jacobi_weight, smoother_sweeps,
-                        sizes)
-
-
 def build_hierarchy(a: CSRMatrix, aggregation: str = "mis2_agg",
                     max_levels: int = 10, coarse_size: int = 200,
                     omega: float = 2.0 / 3.0, jacobi_weight: float = 2.0 / 3.0,
                     smoother_sweeps: int = 2,
                     options: Mis2Options | None = None) -> AMGHierarchy:
-    """Deprecated entry point — use :func:`repro.api.amg`."""
-    warn_deprecated("repro.solvers.amg.build_hierarchy", "repro.api.amg")
+    """Deprecated entry point — use :func:`repro.api.amg_setup`."""
+    warn_deprecated("repro.solvers.amg.build_hierarchy",
+                    "repro.api.amg_setup")
     return _build_hierarchy_impl(a, aggregation, max_levels, coarse_size,
                                  omega, jacobi_weight, smoother_sweeps,
                                  options)
@@ -200,7 +84,13 @@ def v_cycle(h: AMGHierarchy, b: jnp.ndarray, level: int = 0) -> jnp.ndarray:
     x = _jacobi(lvl.a_ell.cols, lvl.a_ell.vals, lvl.diag,
                 jnp.zeros_like(b), b, w, h.smoother_sweeps)
     r = b - _spmv(lvl.a_ell, x)
-    rc = _spmv(lvl.r_ell, r)
+    if lvl.r_ell is not None:
+        rc = _spmv(lvl.r_ell, r)
+    else:
+        # matrix-free restriction: R = P^T via the transposed ELL SpMV
+        from ..kernels.spmv_ell import ops as spmv_ops
+
+        rc = spmv_ops.spmv_t(lvl.p_ell, r, h.levels[level + 1].n)
     xc = v_cycle(h, rc, level + 1)
     x = x + _spmv(lvl.p_ell, xc)
     x = _jacobi(lvl.a_ell.cols, lvl.a_ell.vals, lvl.diag, x, b, w,

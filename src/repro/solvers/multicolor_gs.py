@@ -20,7 +20,7 @@ singleton clusters.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable
 
 import jax
@@ -29,9 +29,10 @@ import numpy as np
 
 from ..graphs.csr import ELLMatrix, csr_to_ell_matrix
 from ..graphs.handle import Graph
-from ..graphs.ops import coarse_graph_from_labels, extract_diagonal
+from ..graphs.ops import extract_diagonal
 from ..core.coloring import _color_graph_impl
 from ..core.mis2 import Mis2Options
+from ..multilevel.packing import pack_clusters_host
 
 
 @dataclass
@@ -43,6 +44,8 @@ class MulticolorGSPreconditioner:
     num_clusters: int
     setup_seconds: float
     kind: str                   # 'point' | 'cluster'
+    timings: dict = field(default_factory=dict)  # setup-phase split
+    #                          (aggregate / color / pack seconds)
 
     def apply(self, b: jnp.ndarray, sweeps: int = 1,
               symmetric: bool = True) -> jnp.ndarray:
@@ -89,59 +92,38 @@ def _apply_sweeps(cols, vals, diag, color_rows, b, sweeps: int,
 # setup
 # ---------------------------------------------------------------------------
 
-def _pack_clusters(labels: np.ndarray, cluster_colors: np.ndarray,
-                   num_colors: int, v: int):
-    """Group rows by (color(cluster), cluster) into padded per-color arrays."""
-    order = np.lexsort((np.arange(v), labels))
-    sorted_labels = labels[order]
-    # row lists per cluster (ascending vertex ids — deterministic)
-    starts = np.flatnonzero(np.r_[True, sorted_labels[1:] != sorted_labels[:-1]])
-    ends = np.r_[starts[1:], v]
-    cluster_ids = sorted_labels[starts]
-    color_rows = []
-    for c in range(num_colors):
-        sel = np.flatnonzero(cluster_colors[cluster_ids] == c)
-        if len(sel) == 0:
-            continue
-        lens = ends[sel] - starts[sel]
-        max_len = int(lens.max())
-        mat = np.full((len(sel), max_len), v, dtype=np.int32)
-        for i, s in enumerate(sel):
-            mat[i, : lens[i]] = order[starts[s]:ends[s]]
-        color_rows.append(jnp.asarray(mat))
-    return tuple(color_rows)
+# moved to repro.multilevel.packing; kept under its legacy name because
+# callers (and tests) import it from here
+_pack_clusters = pack_clusters_host
 
 
 def setup_cluster_gs(a, aggregation: str = "two_phase",
                      options: Mis2Options | None = None,
-                     coarsen_levels: int = 1) -> MulticolorGSPreconditioner:
+                     coarsen_levels: int = 1,
+                     engine: str = "host") -> MulticolorGSPreconditioner:
+    """Cluster multicolor GS setup through the multilevel subsystem.
+
+    ``engine`` picks the multilevel setup path (``host`` | ``resident``;
+    see ``repro.api.cluster_gs_setup`` for the auto-selected facade).
+    The returned preconditioner carries the structured setup-phase
+    timings (``aggregate`` / ``color`` / ``pack`` seconds) in
+    ``.timings``.
+    """
     import time
 
-    from ..api.registry import get_engine  # lazy: engines register on import
+    from ..multilevel.hierarchy import _cluster_gs_setup_impl
 
     if isinstance(a, Graph):
         a = a.csr_matrix
     t0 = time.perf_counter()
-    v = a.num_rows
-    agg_fn = get_engine("aggregation", aggregation)
-    agg = agg_fn(a.graph, options=options)
-    labels = agg.labels
-    nagg = agg.num_aggregates
-    for _ in range(coarsen_levels - 1):        # optional deeper clustering
-        cg = coarse_graph_from_labels(a.graph, labels, nagg)
-        agg2 = agg_fn(cg, options=options)
-        labels = agg2.labels[labels]
-        nagg = agg2.num_aggregates
-    coarse = coarse_graph_from_labels(a.graph, labels, nagg)
-    coloring = _color_graph_impl(coarse)
-    if not coloring.converged:     # a partial coloring is unusable for GS
-        raise RuntimeError("coarse-graph coloring did not converge")
-    color_rows = _pack_clusters(labels, coloring.colors, coloring.num_colors, v)
+    color_rows, num_colors, nagg, _, _, timings = _cluster_gs_setup_impl(
+        a, aggregation=aggregation, options=options,
+        coarsen_levels=coarsen_levels, engine=engine)
     ell = csr_to_ell_matrix(a)
     diag = extract_diagonal(a)
     return MulticolorGSPreconditioner(
-        ell, diag, color_rows, coloring.num_colors, nagg,
-        time.perf_counter() - t0, "cluster")
+        ell, diag, color_rows, num_colors, nagg,
+        time.perf_counter() - t0, "cluster", timings=timings)
 
 
 def setup_point_gs(a) -> MulticolorGSPreconditioner:
@@ -150,13 +132,18 @@ def setup_point_gs(a) -> MulticolorGSPreconditioner:
         a = a.csr_matrix
     t0 = time.perf_counter()
     v = a.num_rows
+    t_color = time.perf_counter()
     coloring = _color_graph_impl(a.graph)      # colors the FINE graph
+    t_color = time.perf_counter() - t_color
     if not coloring.converged:     # a partial coloring is unusable for GS
         raise RuntimeError("fine-graph coloring did not converge")
+    t_pack = time.perf_counter()
     labels = np.arange(v, dtype=np.int32)      # singleton clusters
     color_rows = _pack_clusters(labels, coloring.colors, coloring.num_colors, v)
+    t_pack = time.perf_counter() - t_pack
     ell = csr_to_ell_matrix(a)
     diag = extract_diagonal(a)
     return MulticolorGSPreconditioner(
         ell, diag, color_rows, coloring.num_colors, v,
-        time.perf_counter() - t0, "point")
+        time.perf_counter() - t0, "point",
+        timings={"aggregate": 0.0, "color": t_color, "pack": t_pack})

@@ -1,0 +1,346 @@
+"""``repro.multilevel`` — device-resident multilevel setup.
+
+The acceptance surface of the ``multilevel: host | resident`` engine
+pair:
+
+* digest parity: per-level ``A_l`` ELL digests, aggregation labels and
+  coarse colors bit-identical across engines, over laplace3d + an ER
+  Laplacian x all three priorities x >= 3 levels;
+* execution shape: the resident setup performs **zero** matrix-sized
+  host syncs (``SETUP_STATS`` counter-asserted) and a bounded number of
+  jitted dispatches (7 per built level);
+* the device Galerkin product agrees with the scipy reference
+  (``graphs.ops.galerkin_coarse_matrix``) on random CSR matrices
+  including empty rows, singleton aggregates and rectangular P
+  (property-style, hypothesis with the deterministic fallback);
+* the ``misk`` engine pair (dense | resident) is bit-identical;
+* coarse-solver dtype defaults + the ``dense_coarse_cap`` fallback.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # image has no hypothesis: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
+
+jnp = pytest.importorskip("jax.numpy")
+
+from repro.api import (  # noqa: E402
+    Graph,
+    Mis2Options,
+    amg_setup,
+    amg_setup_batch,
+    cluster_gs_setup,
+    list_engines,
+    misk,
+)
+from repro.core.mis2 import HOTLOOP_STATS  # noqa: E402
+from repro.graphs import er_laplacian, laplace3d  # noqa: E402
+from repro.graphs.csr import CSRMatrix, csr_from_coo  # noqa: E402
+from repro.graphs.ops import galerkin_coarse_matrix  # noqa: E402
+from repro.multilevel import SETUP_STATS, galerkin  # noqa: E402
+from repro.multilevel.packing import (  # noqa: E402
+    pack_clusters_device,
+    pack_clusters_host,
+)
+
+LEVEL_KW = dict(coarse_size=24, max_levels=6)
+
+
+@pytest.fixture(scope="module")
+def matrices():
+    return {
+        "laplace3d": Graph(laplace3d(8)),            # V = 512
+        "er": Graph(er_laplacian(600, 6.0, seed=3)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# digest parity (the acceptance gate)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("priority", ["fixed", "xorshift", "xorshift_star"])
+def test_amg_setup_digest_parity(matrices, priority):
+    opts = Mis2Options(priority=priority)
+    for name, a in matrices.items():
+        host = amg_setup(a, engine="host", options=opts, **LEVEL_KW)
+        SETUP_STATS.reset()
+        res = amg_setup(a, engine="resident", options=opts, **LEVEL_KW)
+        assert host.num_levels >= 3, (name, host.level_sizes)
+        assert host.num_levels == res.num_levels
+        assert host.level_sizes == res.level_sizes
+        # per-level A_l ELL digests bit-identical (cols + vals + mask)
+        assert host.level_digests == res.level_digests, (name, priority)
+        # zero matrix-sized host syncs in the resident setup path,
+        # 7 dispatches per built (non-coarsest) level
+        assert SETUP_STATS.host_syncs == 0
+        assert res.dispatches == 7 * (res.num_levels - 1)
+
+
+def test_amg_setup_engine_dispatch_and_result_fields(matrices):
+    a = matrices["laplace3d"]
+    assert list_engines("multilevel") == {"multilevel": ["host", "resident"]}
+    host = amg_setup(a, engine="host", **LEVEL_KW)
+    res = amg_setup(a, engine="resident", **LEVEL_KW)
+    assert host.engine == "host" and res.engine == "resident"
+    assert host.dispatches == 0
+    for setup in (host, res):
+        assert set(setup.timings) >= {"aggregate", "prolongator",
+                                      "galerkin", "pack"}
+    with pytest.raises(ValueError):
+        amg_setup(a, engine="nope")
+
+
+def test_amg_setup_vcycle_equivalence(matrices):
+    """Digest-identical hierarchies must solve identically: one V-cycle
+    from either engine produces the same iterate bit for bit."""
+    from repro.solvers.amg import v_cycle
+
+    a = matrices["laplace3d"]
+    host = amg_setup(a, engine="host", **LEVEL_KW)
+    res = amg_setup(a, engine="resident", **LEVEL_KW)
+    b = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal(a.num_vertices).astype(np.float32))
+    xh = np.asarray(v_cycle(host.hierarchy, b))
+    xr = np.asarray(v_cycle(res.hierarchy, b))
+    np.testing.assert_array_equal(xh, xr)
+
+
+def test_host_syncs_counted_on_host_engine(matrices):
+    SETUP_STATS.reset()
+    host = amg_setup(matrices["laplace3d"], engine="host", **LEVEL_KW)
+    # 3 matrix-sized round-trips per built level (the one-time coarsest
+    # densify is boundary work, counted by neither engine)
+    assert SETUP_STATS.host_syncs == 3 * (host.num_levels - 1)
+    assert SETUP_STATS.resident_dispatches == 0
+
+
+# ---------------------------------------------------------------------------
+# cluster-GS setup parity (labels, colors, packed rows, timings)
+# ---------------------------------------------------------------------------
+
+def test_cluster_gs_setup_parity(matrices):
+    for name, a in matrices.items():
+        host = cluster_gs_setup(a, engine="host")
+        SETUP_STATS.reset()
+        res = cluster_gs_setup(a, engine="resident")
+        assert SETUP_STATS.host_syncs == 0
+        assert host.digest == res.digest, name            # labels
+        assert host.colors_digest == res.colors_digest    # coarse colors
+        assert host.num_colors == res.num_colors
+        assert host.num_clusters == res.num_clusters
+        hr, rr = host.preconditioner.color_rows, res.preconditioner.color_rows
+        assert len(hr) == len(rr)
+        for x, y in zip(hr, rr):                          # packed rows
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_cluster_gs_structured_timings(matrices):
+    res = cluster_gs_setup(matrices["laplace3d"], engine="host")
+    assert set(res.timings) == {"aggregate", "color", "pack"}
+    assert all(t >= 0.0 for t in res.timings.values())
+    assert set(res.preconditioner.timings) == {"aggregate", "color", "pack"}
+    # the legacy solver entry point reports the same structure
+    from repro.solvers.multicolor_gs import setup_cluster_gs, setup_point_gs
+
+    pre = setup_cluster_gs(matrices["laplace3d"].csr_matrix)
+    assert set(pre.timings) == {"aggregate", "color", "pack"}
+    ppt = setup_point_gs(matrices["laplace3d"].csr_matrix)
+    assert set(ppt.timings) == {"aggregate", "color", "pack"}
+
+
+def test_cluster_gs_apply_parity(matrices):
+    """Bit-identical packings must precondition identically."""
+    a = matrices["er"]
+    b = jnp.asarray(np.random.default_rng(1)
+                    .standard_normal(a.num_vertices).astype(np.float32))
+    xs = [np.asarray(cluster_gs_setup(a, engine=e).preconditioner.apply(b))
+          for e in ("host", "resident")]
+    np.testing.assert_array_equal(xs[0], xs[1])
+
+
+@pytest.mark.parametrize("ncolors", [5, 70])   # 70 > coloring.MAX_COLORS
+def test_pack_clusters_device_matches_host_random(ncolors):
+    rng = np.random.default_rng(7)
+    v, nclusters = 257, 101
+    labels = rng.integers(0, nclusters, v).astype(np.int32)
+    labels[:nclusters] = np.arange(nclusters)     # every cluster non-empty
+    colors = rng.integers(0, ncolors, nclusters).astype(np.int32)
+    host = pack_clusters_host(labels, colors, ncolors, v)
+    dev = pack_clusters_device(labels, colors, ncolors, v)
+    assert len(host) == len(dev)
+    for x, y in zip(host, dev):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# device Galerkin vs the scipy reference (property-style)
+# ---------------------------------------------------------------------------
+
+def _dense_of(csr: CSRMatrix, shape) -> np.ndarray:
+    out = np.zeros(shape, dtype=np.float64)
+    ip = np.asarray(csr.indptr)
+    rows = np.repeat(np.arange(len(ip) - 1), np.diff(ip))
+    np.add.at(out, (rows, np.asarray(csr.indices)),
+              np.asarray(csr.values, dtype=np.float64))
+    return out
+
+
+def _random_case(seed: int, v: int, nagg: int, density: float):
+    rng = np.random.default_rng(seed)
+    # random symmetric-pattern CSR with empty rows possible
+    e = max(0, int(density * v * 4))
+    r = rng.integers(0, v, e)
+    c = rng.integers(0, v, e)
+    vals = rng.standard_normal(e).astype(np.float32)
+    a = csr_from_coo(np.concatenate([r, c]), np.concatenate([c, r]), v,
+                     np.concatenate([vals, vals]))
+    # rectangular P: one entry per fine row (tentative-style) plus noise;
+    # some aggregates end up singleton or empty
+    labels = rng.integers(0, nagg, v)
+    extra = rng.integers(0, 4)
+    pr = np.concatenate([np.arange(v), rng.integers(0, v, extra)])
+    pc = np.concatenate([labels, rng.integers(0, nagg, extra)])
+    pv = rng.standard_normal(len(pr))
+    return a, pr, pc, pv, nagg
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(5, 60), st.integers(1, 20),
+       st.floats(0.0, 1.5))
+def test_galerkin_matches_scipy(seed, v, nagg, density):
+    a, pr, pc, pv, nagg = _random_case(seed, v, nagg, density)
+    want = galerkin_coarse_matrix(a, pr, pc, pv, nagg)      # scipy (f64)
+    got = galerkin(a, pr, pc, pv, nagg)                     # device
+    np.testing.assert_allclose(_dense_of(got, (nagg, nagg)),
+                               _dense_of(want, (nagg, nagg)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_galerkin_empty_rows_and_singletons():
+    # 5x5 with two empty rows; P rectangular 5x3 with a singleton column
+    a = csr_from_coo(np.array([0, 0, 3]), np.array([0, 3, 0]), 5,
+                     np.array([2.0, -1.0, -1.0]))
+    pr = np.array([0, 3, 4])
+    pc = np.array([0, 1, 2])                      # aggregate 2 is a singleton
+    pv = np.array([1.0, 0.5, 2.0])
+    want = galerkin_coarse_matrix(a, pr, pc, pv, 3)
+    got = galerkin(a, pr, pc, pv, 3)
+    np.testing.assert_allclose(_dense_of(got, (3, 3)),
+                               _dense_of(want, (3, 3)), rtol=1e-6, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# misk engine pair
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_misk_engines_bit_identical(k):
+    g = Graph(laplace3d(8).graph)
+    dense = misk(g, k=k, engine="dense")
+    HOTLOOP_STATS.reset()
+    res = misk(g, k=k, engine="resident")
+    assert dense.digest == res.digest
+    assert dense.iterations == res.iterations
+    assert res.num_compiles == 1
+    assert HOTLOOP_STATS.resident_dispatches == 1
+    assert HOTLOOP_STATS.host_syncs == 0
+
+
+def test_misk_registry_and_default():
+    assert list_engines("misk") == {"misk": ["dense", "resident"]}
+    r = misk(Graph(laplace3d(6).graph), k=2)      # engine=None auto-selects
+    assert r.engine.startswith("misk2_")
+
+
+# ---------------------------------------------------------------------------
+# coarse solver: dtype threading + densification cap
+# ---------------------------------------------------------------------------
+
+def test_coarse_dtype_default_and_override(matrices):
+    from repro.api import accelerator_present
+
+    h = amg_setup(matrices["laplace3d"], **LEVEL_KW)
+    want = "float32" if accelerator_present() else "float64"
+    assert h.hierarchy.coarse_dtype == want
+    h32 = amg_setup(matrices["laplace3d"], coarse_dtype="float32", **LEVEL_KW)
+    assert h32.hierarchy.coarse_dtype == "float32"
+    # both coarse solves actually solve (residual-reducing V-cycle)
+    from repro.graphs.ops import spmv_ell
+    from repro.solvers.amg import v_cycle
+
+    a = matrices["laplace3d"]
+    b = jnp.asarray(np.random.default_rng(2)
+                    .standard_normal(a.num_vertices).astype(np.float32))
+    for h_ in (h, h32):
+        x = v_cycle(h_.hierarchy, b)
+        rel = float(jnp.linalg.norm(b - spmv_ell(a.ell_matrix, x))
+                    / jnp.linalg.norm(b))
+        assert rel < 0.3, rel
+
+
+def test_dense_coarse_cap_falls_back_to_jacobi(matrices):
+    a = matrices["laplace3d"]
+    h = amg_setup(a, max_levels=1, dense_coarse_cap=64)   # coarsest = 512
+    assert h.hierarchy.coarse_kind == "jacobi"
+    # the cap defaults to coarse_size: a max_levels cut that leaves the
+    # coarsest above what was asked for must not densify it
+    hd = amg_setup(a, max_levels=1, coarse_size=200)
+    assert hd.hierarchy.coarse_kind == "jacobi"
+    h2 = amg_setup(a, **LEVEL_KW)
+    assert h2.hierarchy.coarse_kind == "lu"
+
+
+# ---------------------------------------------------------------------------
+# batched setup
+# ---------------------------------------------------------------------------
+
+def test_amg_setup_batch_digest_parity(matrices):
+    mats = [matrices["laplace3d"], matrices["er"]]
+    batch = amg_setup_batch(mats, engine="host", **LEVEL_KW)
+    assert len(batch) == 2
+    singles = [amg_setup(m, engine="host", **LEVEL_KW) for m in mats]
+    for got, want in zip(batch, singles):
+        assert got.level_digests == want.level_digests
+        assert got.level_sizes == want.level_sizes
+
+
+# ---------------------------------------------------------------------------
+# transposed ELL SpMV (matrix-free restriction)
+# ---------------------------------------------------------------------------
+
+def test_spmv_t_kernel_matches_ref():
+    from repro.kernels.spmv_ell.kernel import spmv_ell_t_pallas
+    from repro.kernels.spmv_ell.ref import spmv_ell_t_ref
+    from repro.multilevel.prolongator import rect_ell
+
+    rng = np.random.default_rng(5)
+    rows = rng.integers(0, 300, 900)
+    cols = rng.integers(0, 40, 900)
+    vals = rng.standard_normal(900)
+    m = rect_ell(rows, cols, vals.astype(np.float32), 300)
+    x = jnp.asarray(rng.standard_normal(300).astype(np.float32))
+    want = spmv_ell_t_ref(m.cols, m.vals, x, 40)
+    got = spmv_ell_t_pallas(m.cols, m.vals, x, num_out=40, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_vcycle_matrix_free_restriction(matrices):
+    """explicit_restriction=False drops R; the V-cycle restricts through
+    the transposed SpMV and still contracts the residual."""
+    from repro.graphs.ops import spmv_ell
+    from repro.solvers.amg import v_cycle
+
+    a = matrices["laplace3d"]
+    h = amg_setup(a, engine="host", explicit_restriction=False,
+                  **LEVEL_KW).hierarchy
+    assert all(lvl.r_ell is None for lvl in h.levels)
+    b = jnp.asarray(np.random.default_rng(3)
+                    .standard_normal(a.num_vertices).astype(np.float32))
+    x = v_cycle(h, b)
+    rel = float(jnp.linalg.norm(b - spmv_ell(a.ell_matrix, x))
+                / jnp.linalg.norm(b))
+    assert rel < 0.3, rel
