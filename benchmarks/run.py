@@ -18,6 +18,7 @@ from benchmarks import (  # noqa: E402
     figs4_5_scaling,
     hotloop_overhead,
     roofline,
+    serve_throughput,
     setup_overhead,
     table1_priorities,
     table3_scaling,
@@ -40,6 +41,7 @@ ALL = {
     "batch": batch_throughput.run,
     "hotloop": hotloop_overhead.run,
     "setup": setup_overhead.run,
+    "serve": serve_throughput.run,
 }
 
 

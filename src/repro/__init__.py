@@ -3,8 +3,10 @@
 
 ``import repro`` presents the facade directly (``repro.mis2``,
 ``repro.Graph``, ...); ``repro.api`` is the same surface with the full
-registry/backend toolkit.  Subpackages (``graphs``, ``core``, ``solvers``,
-``kernels``, ``launch``) remain importable for power users.
+registry/backend toolkit; ``repro.serve`` is the persistent graph
+service (continuous batching + digest-keyed caching + streaming repair).
+Subpackages (``graphs``, ``core``, ``solvers``, ``kernels``, ``launch``)
+remain importable for power users.
 
 Facade attributes resolve lazily (PEP 562): tooling that must configure
 ``XLA_FLAGS`` before anything touches jax (``python -m
@@ -22,12 +24,12 @@ _FACADE = {
     "mis2_batch", "color_batch", "coarsen_batch", "amg_setup_batch",
 }
 
-__all__ = ["api", "__version__", *sorted(_FACADE)]
+__all__ = ["api", "serve", "__version__", *sorted(_FACADE)]
 
 
 def __getattr__(name: str):
-    if name == "api":
-        return import_module(".api", __name__)
+    if name in ("api", "serve"):
+        return import_module(f".{name}", __name__)
     if name in _FACADE:
         return getattr(import_module(".api", __name__), name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

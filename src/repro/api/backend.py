@@ -34,6 +34,36 @@ def accelerator_present() -> bool:
     return jax.default_backend() not in ("cpu",)
 
 
+def backend_platform(backend: Optional["Backend"] = None) -> str:
+    """The platform a request under ``backend`` actually executes on.
+
+    ``Backend(device=...)`` pins placement per request, so engine
+    auto-selection must consult *that* device's platform — not the
+    process-global default backend.  A server coalescing requests from
+    callers with different placements (the ``repro.serve`` dispatch path)
+    would otherwise resolve every request against whatever platform the
+    process booted with.
+    """
+    be = backend if backend is not None else _DEFAULT
+    if be.device is not None:
+        return be.device.platform
+    return jax.default_backend()
+
+
+def backend_accelerator(backend: Optional["Backend"] = None) -> bool:
+    """True iff requests under ``backend`` run on an accelerator.
+
+    With an explicit ``Backend(device=...)`` that device's platform
+    decides; otherwise this defers to :func:`accelerator_present` (the
+    process-global check — and the seam tests monkeypatch to simulate
+    accelerators on the CPU CI runner).
+    """
+    be = backend if backend is not None else _DEFAULT
+    if be.device is not None:
+        return be.device.platform not in ("cpu",)
+    return accelerator_present()
+
+
 def default_interpret() -> bool:
     """The auto policy: interpret Pallas kernels only off-accelerator."""
     return not accelerator_present()
@@ -55,10 +85,15 @@ def default_mis2_engine(backend: Optional["Backend"] = None,
     engines implement §V-B worklists by construction, so the
     ``worklists=False`` ablation auto-selects the host-driven driver
     instead of raising even on accelerators.
+
+    The platform is resolved **per request**: ``Backend(device=...)``
+    selects by that device's platform, falling back to the process
+    default backend only when no device is pinned (see
+    :func:`backend_platform`).
     """
     be = backend if backend is not None else _DEFAULT
     resident_ok = options is None or getattr(options, "worklists", True)
-    if accelerator_present() and resident_ok:
+    if backend_accelerator(be) and resident_ok:
         return "pallas_resident" if be.pallas else "compacted_resident"
     return "pallas" if be.pallas else "compacted"
 
@@ -78,8 +113,10 @@ def default_multilevel_engine(backend: Optional["Backend"] = None) -> str:
     setup (on-device prolongator/Galerkin/packing, zero matrix-sized host
     syncs) on accelerators; the host scipy/numpy path on CPU hosts, where
     the round-trips are address-space copies.  Both engines produce
-    digest-identical hierarchies."""
-    return "resident" if accelerator_present() else "host"
+    digest-identical hierarchies.  Like :func:`default_mis2_engine`, the
+    rule honors ``Backend(device=...)`` per request (the device's platform
+    wins over the process default)."""
+    return "resident" if backend_accelerator(backend) else "host"
 
 
 @dataclass(frozen=True)

@@ -184,6 +184,88 @@ def _mis2_dense_impl(graph, active: Optional[jnp.ndarray] = None,
 
 
 # ===========================================================================
+# incremental repair (repro.serve streaming mode)
+# ===========================================================================
+
+@functools.partial(jax.jit, static_argnames=("priority", "max_iters"))
+def mis2_repair_fixed_point(neighbors: jnp.ndarray, t_init: jnp.ndarray,
+                            b: jnp.ndarray, priority: str = "fixed",
+                            max_iters: int = MAX_ITERS_DEFAULT):
+    """Warm-started MIS-2 fixed point: the dense body, seeded from a prior
+    solution instead of all-undecided.
+
+    ``t_init`` holds ``IN`` / ``OUT`` on *frozen* vertices (carried over
+    from the pre-delta solution) and the undecided seed ``1`` on the
+    reactivated region.  Frozen vertices are never refreshed — frozen
+    ``IN`` poisons its distance-2 neighborhood exactly like a decided
+    vertex mid-run, frozen ``OUT`` is invisible (the same encoding the
+    dense engine uses for inactive rows) — so per-round work is
+    proportional to the reactivated region, not ``V``.
+
+    Only meaningful with a round-independent priority (``"fixed"``): the
+    result is then the unique lexicographically-first MIS-2, so a repaired
+    solution that satisfies the lex-first recurrence everywhere (see
+    :func:`lexfirst_violations`) is *bit-identical* to a from-scratch run.
+    Round-varying priorities make the fixed point history-dependent and
+    repair inexact; ``repro.serve`` falls back to recomputation there.
+    """
+    vids = jnp.arange(neighbors.shape[0], dtype=jnp.uint32)
+    prio_fn = PRIORITY_FNS[priority]
+
+    def cond(state):
+        t, it = state
+        return jnp.any(is_undecided(t)) & (it < max_iters)
+
+    def body(state):
+        t, it = state
+        und = is_undecided(t)
+        live = jnp.any(und)
+        t = jnp.where(und, pack(prio_fn(it, vids), vids, b), t)
+        tn = t[neighbors]
+        m = jnp.min(tn, axis=1)
+        m = jnp.where(m == IN, OUT, m)
+        mn = m[neighbors]
+        any_out = jnp.any(mn == OUT, axis=1)
+        all_eq = jnp.all(mn == t[:, None], axis=1)
+        t = jnp.where(und & any_out, OUT, t)
+        t = jnp.where(und & ~any_out & all_eq, IN, t)
+        return t, it + live.astype(jnp.uint32)
+
+    return jax.lax.while_loop(cond, body, (t_init, jnp.uint32(0)))
+
+
+@jax.jit
+def lexfirst_violations(neighbors: jnp.ndarray, in_set: jnp.ndarray,
+                        p: jnp.ndarray) -> jnp.ndarray:
+    """Vertices violating the lex-first MIS-2 recurrence (bool ``[V]``).
+
+    The lexicographically-first MIS-2 under the packed priority total
+    order ``p`` is the unique assignment with: ``v IN`` iff no member
+    within distance <= 2 has strictly smaller priority.  Two closed-
+    neighborhood min-propagations of the members' priorities check it
+    globally: ``m2[v]`` is the smallest member priority within distance 2
+    of ``v`` (inclusive), so ``v IN`` must see ``m2 == p[v]`` (itself) and
+    ``v OUT`` must see ``m2 < p[v]`` (a strictly earlier member justifies
+    the exclusion — this also covers maximality: no member at all means
+    ``m2 == OUT > p[v]``).  An all-clear certifies the assignment *is*
+    the lex-first solution; violations tell the repair loop which frozen
+    vertices to reactivate.
+    """
+    pin = jnp.where(in_set, p, OUT)
+    m1 = jnp.minimum(jnp.min(pin[neighbors], axis=1), pin)
+    m2 = jnp.minimum(jnp.min(m1[neighbors], axis=1), m1)
+    return ~jnp.where(in_set, m2 == p, m2 < p)
+
+
+def fixed_packed_priorities(num_vertices: int) -> jnp.ndarray:
+    """The packed ``"fixed"``-priority total order (uint32 ``[V]``) — the
+    order under which the MIS-2 fixed point computes the lex-first set."""
+    vids = jnp.arange(num_vertices, dtype=jnp.uint32)
+    b = jnp.uint32(id_bits(num_vertices))
+    return pack(PRIORITY_FNS["fixed"](jnp.uint32(0), vids), vids, b)
+
+
+# ===========================================================================
 # hot-loop accounting (test-only observability; no effect on results)
 # ===========================================================================
 

@@ -162,6 +162,37 @@ class Graph:
             self._cache[key] = csr_to_bucketed_ell(self.csr, tuple(boundaries))
         return self._cache[key]
 
+    @property
+    def digest(self) -> str:
+        """Canonical-format content digest (16 hex chars), cached.
+
+        Hashes the CSR structure (indptr + indices bytes, shapes, dtypes)
+        plus the values when the handle carries a matrix.  Because CSR
+        construction is deterministic (sorted, deduplicated), two handles
+        built from the same structure always share a digest — this is the
+        key ingredient of the serving layer's digest-keyed result cache:
+        equal graph digest + equal options means the cached result is
+        *provably* the bytes a recomputation would produce (the repo-wide
+        engine bit-identity invariant)."""
+        if "digest" not in self._cache:
+            self._converted("digest")
+            import hashlib
+
+            csr = self.csr
+            h = hashlib.sha256()
+            for arr in (csr.indptr, csr.indices):
+                a = np.asarray(arr)
+                h.update(str(a.dtype).encode())
+                h.update(str(a.shape).encode())
+                h.update(a.tobytes())
+            if self.has_values:
+                a = np.asarray(self.csr_matrix.values)
+                h.update(str(a.dtype).encode())
+                h.update(str(a.shape).encode())
+                h.update(a.tobytes())
+            self._cache["digest"] = h.hexdigest()[:16]
+        return self._cache["digest"]
+
     # -- stats --------------------------------------------------------------
 
     @property
@@ -205,7 +236,7 @@ class Graph:
         """Move every cached device array to ``device`` (in place; the
         handle's cache is shared, so all views see the placement)."""
         for key, val in list(self._cache.items()):
-            if key in ("degrees", "device"):   # host-only / non-array entries
+            if key in ("degrees", "device", "digest"):   # host-only entries
                 continue
             self._cache[key] = jax.device_put(val, device)
         self._cache["device"] = device

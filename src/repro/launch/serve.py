@@ -1,97 +1,38 @@
-"""Serving driver: batched prefill + decode for any --arch.
+"""Deprecated shim: the serving layer moved to :mod:`repro.serve`.
 
-Local run (CPU dev, reduced config)::
-
-    PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
-        --reduced --batch 4 --prompt-len 32 --decode-steps 16
-
-Production shapes are exercised (lower+compile) by the dry-run's
-prefill_32k / decode_32k / long_500k cells; this driver runs the same
-prefill/decode step functions eagerly with a request batcher:
-requests arrive with ragged prompt lengths, are right-aligned into the
-fixed prompt window (left-padded), prefilled as one batch, then decoded
-in lockstep — the static-shape batching strategy a TPU serving tier uses.
+The seed's LM prefill/decode serving driver lived here; the repo's
+serving tier is now the graph service in ``repro.serve`` (continuous
+batching over ``GraphBatch`` buckets, digest-keyed result caching,
+warm-executable registry, streaming MIS-2 repair).  This module
+re-exports that surface and warns on import — see the migration table
+in API.md.
 """
 from __future__ import annotations
 
-import argparse
-import time
+from .._compat import warn_deprecated
+from ..serve import (  # noqa: F401 - re-exported surface
+    KINDS,
+    Batcher,
+    CacheParityError,
+    CacheStats,
+    PendingRequest,
+    RepairStats,
+    ResultCache,
+    Server,
+    ServerConfig,
+    ServeStats,
+    StreamSession,
+    WarmRegistry,
+    WarmSpec,
+    warm_buckets_for,
+)
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+warn_deprecated("repro.launch.serve", "repro.serve", stacklevel=4)
 
-from repro.configs import get_config
-from repro.launch.mesh import make_dev_mesh
-from repro.launch.sharding import RULE_SETS, tree_shardings
-from repro.models import get_model
-
-
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--decode-steps", type=int, default=16)
-    ap.add_argument("--max-seq", type=int, default=None)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    model = get_model(cfg)
-    mesh = make_dev_mesh()
-    rules = RULE_SETS["default"](mesh)
-    max_seq = args.max_seq or (args.prompt_len + args.decode_steps)
-
-    rng = np.random.default_rng(args.seed)
-    # ragged requests, right-aligned into the static prompt window
-    lens = rng.integers(max(1, args.prompt_len // 2), args.prompt_len + 1,
-                        size=args.batch)
-    tokens = np.zeros((args.batch, args.prompt_len), dtype=np.int32)
-    for i, ln in enumerate(lens):
-        tokens[i, args.prompt_len - ln:] = rng.integers(
-            1, cfg.vocab_size, size=ln)
-    print(f"[serve] {args.batch} requests, prompt lens {lens.tolist()}")
-
-    with mesh:
-        param_sh = tree_shardings(mesh, model.param_axes(), rules)
-        params = jax.jit(model.init, out_shardings=param_sh)(
-            jax.random.PRNGKey(args.seed))
-
-        if cfg.family in ("encdec", "audio"):
-            frames = jnp.asarray(rng.standard_normal(
-                (args.batch, cfg.encoder_seq, cfg.d_model), dtype=np.float32))
-            batch = {"frames": frames, "tokens": jnp.asarray(tokens)}
-            prefill = jax.jit(lambda p, b: model.prefill(p, b, max_seq))
-        else:
-            batch = jnp.asarray(tokens)
-            prefill = jax.jit(lambda p, t: model.prefill(p, t, max_seq))
-        decode = jax.jit(model.decode_step)
-
-        t0 = time.time()
-        logits, cache = prefill(params, batch)
-        logits.block_until_ready()
-        prefill_s = time.time() - t0
-        print(f"[serve] prefill {args.batch}x{args.prompt_len} tokens "
-              f"in {prefill_s:.2f}s (incl. compile)")
-
-        out = [jnp.argmax(logits, -1)[:, None]]
-        t0 = time.time()
-        for _ in range(args.decode_steps):
-            logits, cache = decode(params, cache, out[-1])
-            out.append(jnp.argmax(logits, -1)[:, None])
-        jax.block_until_ready(out[-1])
-        decode_s = time.time() - t0
-        tps = args.batch * args.decode_steps / max(1e-9, decode_s)
-        print(f"[serve] decoded {args.decode_steps} steps in {decode_s:.2f}s "
-              f"(incl. compile) ~ {tps:.0f} tok/s")
-    gen = np.concatenate([np.asarray(t) for t in out], axis=1)
-    print(f"[serve] sample generations (token ids): {gen[0][:12].tolist()}")
-    return gen
-
-
-if __name__ == "__main__":
-    main()
+__all__ = [
+    "Server", "ServerConfig", "ServeStats", "KINDS", "warm_buckets_for",
+    "ResultCache", "CacheStats", "CacheParityError",
+    "WarmRegistry", "WarmSpec",
+    "Batcher", "PendingRequest",
+    "StreamSession", "RepairStats",
+]

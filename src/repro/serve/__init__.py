@@ -1,0 +1,28 @@
+"""``repro.serve`` — persistent graph service over the ``repro`` facade.
+
+Continuous batching (deadline-or-full coalescing into ``GraphBatch``
+buckets), a digest-keyed LRU result cache whose hits are provably
+bit-identical to recomputation, a warm-executable registry that
+AOT-compiles configured bucket shapes at startup, and a streaming update
+mode with exact incremental MIS-2 repair.  See API.md "Serving".
+
+    from repro.serve import Server, ServerConfig
+
+    srv = Server(ServerConfig(warm_buckets=((256, 8),)))
+    fut = srv.submit("mis2", graph)
+    srv.flush()                      # or srv.start() for a live pump
+    result = fut.result()            # bit-identical to repro.mis2(graph)
+"""
+from .batcher import Batcher, PendingRequest
+from .cache import CacheParityError, CacheStats, ResultCache
+from .server import KINDS, Server, ServerConfig, ServeStats, warm_buckets_for
+from .streaming import RepairStats, StreamSession
+from .warm import WarmRegistry, WarmSpec
+
+__all__ = [
+    "Server", "ServerConfig", "ServeStats", "KINDS", "warm_buckets_for",
+    "ResultCache", "CacheStats", "CacheParityError",
+    "WarmRegistry", "WarmSpec",
+    "Batcher", "PendingRequest",
+    "StreamSession", "RepairStats",
+]

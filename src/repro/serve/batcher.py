@@ -1,0 +1,114 @@
+"""Request queue + continuous batcher: deadline-or-full group dispatch.
+
+Requests accumulate in *groups* — one per (kind, options, requested
+engine, placement) coalescing key — and a group dispatches as one batched
+call when it reaches ``max_batch`` members (full) or its oldest member
+has waited ``max_delay_s`` (deadline).  That is the classic continuous-
+batching contract: an isolated request pays at most the latency budget,
+a burst is coalesced into the PR 2 vmapped bucket pipelines at full
+occupancy.
+
+Only auto-engine requests (``engine=None``) coalesce freely: an explicit
+engine is a caller's statement about *how* to execute, so those requests
+group per engine and dispatch through the single-graph facade path.
+Results are bit-identical either way (the repo invariant) — grouping
+affects throughput, never bytes.
+
+Timebase: every entry point takes an explicit ``now`` so tests drive the
+deadline logic with a manual clock; the server passes ``time.monotonic()``.
+"""
+from __future__ import annotations
+
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+
+@dataclass
+class PendingRequest:
+    """One queued request (kind + graph + normalized parameters)."""
+
+    kind: str
+    graph: Any                      # repro Graph handle
+    params: dict                    # kind-specific kwargs (normalized)
+    engine: Optional[str]           # None = auto-select per request backend
+    backend: Any                    # Backend or None
+    cache_key: tuple
+    future: Future = field(default_factory=Future)
+    enqueued_at: float = 0.0
+
+
+def _freeze(obj) -> tuple:
+    """Canonical hashable token for options/params of any supported shape."""
+    import dataclasses
+
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return (type(obj).__name__,) + tuple(
+            (f.name, _freeze(getattr(obj, f.name)))
+            for f in dataclasses.fields(obj))
+    if isinstance(obj, dict):
+        return tuple(sorted((k, _freeze(v)) for k, v in obj.items()))
+    if isinstance(obj, (list, tuple)):
+        return tuple(_freeze(v) for v in obj)
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    return repr(obj)
+
+
+def group_key(req: PendingRequest) -> tuple:
+    """The coalescing key: requests sharing it may dispatch as one batch."""
+    placement = id(req.backend.device) if (
+        req.backend is not None and req.backend.device is not None) else None
+    return (req.kind, _freeze(req.params),
+            req.engine if req.engine is not None else "auto", placement)
+
+
+class Batcher:
+    """Accumulates PendingRequests into dispatch groups (not thread-safe;
+    the server serializes access under its own lock)."""
+
+    def __init__(self, max_batch: int = 8, max_delay_s: float = 0.01):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.max_batch = max_batch
+        self.max_delay_s = max_delay_s
+        self._groups: dict[tuple, list[PendingRequest]] = {}
+
+    def __len__(self) -> int:
+        return sum(len(g) for g in self._groups.values())
+
+    def add(self, req: PendingRequest, now: float) -> None:
+        req.enqueued_at = now
+        self._groups.setdefault(group_key(req), []).append(req)
+
+    def due(self, now: float, force: bool = False
+            ) -> list[tuple[tuple, list[PendingRequest]]]:
+        """Pop and return every group that must dispatch now.
+
+        Full groups always dispatch (chunked to ``max_batch``); a partial
+        group dispatches once its oldest member has waited out the latency
+        budget, or unconditionally under ``force`` (flush/shutdown).
+        """
+        out: list[tuple[tuple, list[PendingRequest]]] = []
+        for key in list(self._groups):
+            reqs = self._groups[key]
+            while len(reqs) >= self.max_batch:
+                out.append((key, reqs[: self.max_batch]))
+                reqs = reqs[self.max_batch:]
+            expired = reqs and (now - reqs[0].enqueued_at >= self.max_delay_s)
+            if reqs and (force or expired):
+                out.append((key, reqs))
+                reqs = []
+            if reqs:
+                self._groups[key] = reqs
+            else:
+                del self._groups[key]
+        return out
+
+    def next_deadline(self, now: float) -> Optional[float]:
+        """Seconds until the earliest pending deadline (None if empty)."""
+        oldest = [reqs[0].enqueued_at for reqs in self._groups.values()
+                  if reqs]
+        if not oldest:
+            return None
+        return max(0.0, min(oldest) + self.max_delay_s - now)

@@ -1,0 +1,386 @@
+"""The persistent graph service: one process, many callers, zero rebits.
+
+``Server`` accepts concurrent ``mis2`` / ``color`` / ``coarsen`` /
+``amg_setup`` requests and serves every one with a result bit-identical
+to the direct facade call — batching, caching, and warm executables are
+throughput machinery, never semantics (the repo's determinism invariant
+is what makes that composition safe).
+
+Request path::
+
+    submit() -> cache lookup (digest-keyed, provably-safe hits)
+             -> batcher group (deadline-or-full continuous batching)
+    pump()   -> batched dispatch over GraphBatch buckets
+                (mis2 through the warm AOT executables; single stragglers
+                 through the per-request auto-selected resident engine)
+             -> cache insert + future resolution
+
+``pump()`` is the explicit event-loop step (deterministic for tests and
+CI); ``start()`` runs it on a daemon thread for real concurrent callers.
+Engine auto-selection happens per request at dispatch time via
+``api.backend.default_mis2_engine`` / ``default_multilevel_engine`` with
+the *request's* backend — a server booted on CPU serves a TPU-placed
+request with the resident engine, not a server-global default.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+from ..api import facade
+from ..api.backend import (
+    Backend,
+    default_mis2_engine,
+    default_multilevel_engine,
+    resolve_backend,
+)
+from ..api.result import Mis2Result
+from ..batch.container import bucket_shape
+from ..core.mis2 import IN, Mis2Options, is_undecided
+from ..core.tuples import id_bits
+from ..graphs.handle import as_graph
+from .batcher import Batcher, PendingRequest, _freeze
+from .cache import ResultCache
+from .streaming import StreamSession
+from .warm import WarmRegistry, WarmSpec
+
+KINDS = ("mis2", "color", "coarsen", "amg_setup")
+
+
+@dataclass(frozen=True)
+class ServerConfig:
+    """Serving policy: batching budget, cache budget, warm shapes.
+
+    ``warm_buckets`` lists ``(rows, width)`` bucket shapes (the
+    ``repro.batch`` power-of-two classes) to AOT-compile at startup at
+    batch capacity ``max_batch`` for the configured mis2 options; live
+    shapes outside the list still work, they just pay a counted runtime
+    compile.  ``parity_fraction`` recomputes that fraction of cache hits
+    and asserts digest equality; ``delta_check_fraction`` does the same
+    for streaming repairs.
+    """
+
+    max_batch: int = 8
+    max_delay_s: float = 0.01
+    cache_bytes: int = 64 << 20
+    parity_fraction: float = 0.0
+    warm_buckets: tuple = ()
+    mis2_options: Optional[Mis2Options] = None
+    delta_check_fraction: float = 0.0
+    single_fast_path: bool = True
+    backend: Optional[Backend] = None
+    poll_interval_s: float = 0.002
+
+
+@dataclass
+class ServeStats:
+    requests: int = 0
+    dispatches: int = 0
+    batched_graphs: int = 0
+    single_dispatches: int = 0
+    started_at: float = field(default_factory=time.monotonic)
+    window_started_at: float = field(default_factory=time.monotonic)
+
+
+class Server:
+    """Persistent graph-algorithm service over the ``repro`` facade."""
+
+    def __init__(self, config: Optional[ServerConfig] = None):
+        self.config = config if config is not None else ServerConfig()
+        self.cache = ResultCache(max_bytes=self.config.cache_bytes,
+                                 parity_fraction=self.config.parity_fraction)
+        self.batcher = Batcher(max_batch=self.config.max_batch,
+                               max_delay_s=self.config.max_delay_s)
+        self.warm = WarmRegistry()
+        self.stats = ServeStats()
+        self._lock = threading.RLock()
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        opts = self.config.mis2_options or Mis2Options()
+        self.warm.warm(WarmSpec(self.config.max_batch, rows, width,
+                                opts.priority, opts.max_iters)
+                       for rows, width in self.config.warm_buckets)
+
+    # -- request intake -----------------------------------------------------
+
+    def _normalize(self, kind: str, params: dict) -> dict:
+        if kind == "mis2":
+            options = params.get("options")
+            if options is None:
+                options = self.config.mis2_options or Mis2Options()
+            return {"options": options}
+        if kind == "color":
+            return {"max_rounds": params.get("max_rounds", 256)}
+        if kind == "coarsen":
+            return {"method": params.get("method", "two_phase"),
+                    "options": params.get("options"),
+                    "min_secondary_neighbors":
+                        params.get("min_secondary_neighbors", 2)}
+        if kind == "amg_setup":
+            out = dict(params)
+            out.setdefault("aggregation", "two_phase")
+            return out
+        raise ValueError(f"unknown request kind {kind!r} (one of {KINDS})")
+
+    def submit(self, kind: str, graph, *, engine: Optional[str] = None,
+               backend: Optional[Backend] = None, **params):
+        """Enqueue one request; returns a ``concurrent.futures.Future``.
+
+        A cache hit resolves the future immediately (optionally parity-
+        checked); otherwise the request joins its continuous-batching
+        group and resolves at the next full/deadline dispatch.
+        """
+        gh = as_graph(graph)
+        norm = self._normalize(kind, params)
+        be = backend if backend is not None else self.config.backend
+        engine_token = engine if engine is not None else "auto"
+        key = (kind, gh.digest, engine_token, _freeze(norm))
+        req = PendingRequest(kind=kind, graph=gh, params=norm, engine=engine,
+                             backend=be, cache_key=key)
+        with self._lock:
+            self.stats.requests += 1
+            cached = self.cache.lookup(
+                key, recompute=lambda: self._parity_referent(req))
+            if cached is not None:
+                req.future.set_result(cached)
+                return req.future
+            self.batcher.add(req, time.monotonic())
+        return req.future
+
+    def request(self, kind: str, graph, *, engine: Optional[str] = None,
+                backend: Optional[Backend] = None, **params):
+        """Synchronous convenience: submit, flush, return the Result."""
+        fut = self.submit(kind, graph, engine=engine, backend=backend,
+                          **params)
+        self.flush()
+        return fut.result()
+
+    def open_stream(self, graph, *,
+                    options: Optional[Mis2Options] = None) -> StreamSession:
+        """A streaming MIS-2 session governed by this server's config
+        (``delta_check_fraction`` taken from the serving config)."""
+        return StreamSession(
+            graph, options=options,
+            check_fraction=self.config.delta_check_fraction)
+
+    # -- event loop ---------------------------------------------------------
+
+    def pump(self, now: Optional[float] = None, force: bool = False) -> int:
+        """Dispatch every due group; returns the number of groups served."""
+        with self._lock:
+            groups = self.batcher.due(
+                time.monotonic() if now is None else now, force=force)
+            for _, reqs in groups:
+                self._dispatch(reqs)
+            return len(groups)
+
+    def flush(self) -> int:
+        """Dispatch everything pending regardless of deadlines."""
+        return self.pump(force=True)
+
+    def start(self) -> "Server":
+        """Run the pump on a daemon thread (idempotent)."""
+        with self._lock:
+            if self._thread is not None:
+                return self
+            self._stop.clear()
+            self._thread = threading.Thread(target=self._run, daemon=True,
+                                            name="repro-serve")
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Stop the pump thread and flush whatever is still queued."""
+        thread = self._thread
+        if thread is None:
+            return
+        self._stop.set()
+        thread.join()
+        self._thread = None
+        self.flush()
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            self.pump()
+            with self._lock:
+                delay = self.batcher.next_deadline(time.monotonic())
+            if delay is None:
+                delay = self.config.poll_interval_s
+            self._stop.wait(min(delay, self.config.poll_interval_s)
+                            if delay > 0 else 0.0)
+
+    def __enter__(self) -> "Server":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- dispatch -----------------------------------------------------------
+
+    def _resolve_engine(self, req: PendingRequest) -> Optional[str]:
+        """Per-request engine auto-selection (at dispatch time, with the
+        request's own backend — never a server-global choice)."""
+        if req.engine is not None:
+            return req.engine
+        be = resolve_backend(req.backend)
+        if req.kind == "mis2":
+            return default_mis2_engine(be, req.params.get("options"))
+        if req.kind == "amg_setup":
+            return default_multilevel_engine(be)
+        return None     # color/coarsen: the facade default is the engine
+
+    def _direct(self, req: PendingRequest):
+        """The direct facade call for one request — the bit-identity
+        referent (used for single dispatch and parity recomputation)."""
+        kw = dict(req.params)
+        kw["backend"] = req.backend
+        if req.kind == "mis2":
+            return facade.mis2(req.graph, engine=req.engine, **kw)
+        if req.kind == "color":
+            return facade.color(req.graph, **kw)
+        if req.kind == "coarsen":
+            if req.engine is not None:
+                kw["mis2_engine"] = req.engine
+            return facade.coarsen(req.graph, **kw)
+        if req.kind == "amg_setup":
+            return facade.amg_setup(req.graph, engine=req.engine, **kw)
+        raise ValueError(req.kind)
+
+    def _parity_referent(self, req: PendingRequest):
+        """Recompute a cache hit for the parity assertion.
+
+        For engine-agnostic mis2 requests the referent is the ``dense``
+        engine: every engine is digest-identical (the invariant the cache
+        relies on), and dense pads to pow2 buckets, so parity checks over
+        arbitrary graph shapes reuse a bounded set of compiled programs
+        instead of jit-specializing per exact adjacency shape.
+        """
+        if req.kind == "mis2" and req.engine is None:
+            kw = dict(req.params)
+            kw["backend"] = req.backend
+            return facade.mis2(req.graph, engine="dense", **kw)
+        return self._direct(req)
+
+    def _dispatch(self, reqs: list[PendingRequest]) -> None:
+        self.stats.dispatches += 1
+        try:
+            if len(reqs) == 1 and self.config.single_fast_path:
+                self.stats.single_dispatches += 1
+                results = [self._direct(reqs[0])]
+            else:
+                self.stats.batched_graphs += len(reqs)
+                results = self._batched(reqs)
+        except BaseException as err:    # noqa: BLE001 - fan out to callers
+            for req in reqs:
+                if not req.future.done():
+                    req.future.set_exception(err)
+            return
+        for req, res in zip(reqs, results):
+            self.cache.insert(req.cache_key, res)
+            req.future.set_result(res)
+
+    def _batched(self, reqs: list[PendingRequest]) -> list:
+        """One batched dispatch for a homogeneous group (same kind/params,
+        guaranteed by the batcher's group key)."""
+        kind, params = reqs[0].kind, reqs[0].params
+        graphs = [r.graph for r in reqs]
+        backend = reqs[0].backend
+        if kind == "mis2":
+            return self._mis2_batched(graphs, params["options"])
+        if kind == "color":
+            batch = facade.color_batch(graphs, backend=backend, **params)
+            return list(batch.results)
+        if kind == "coarsen":
+            batch = facade.coarsen_batch(graphs, backend=backend, **params)
+            return list(batch.results)
+        if kind == "amg_setup":
+            kw = dict(params)
+            engine = self._resolve_engine(reqs[0])
+            batch = facade.amg_setup_batch(graphs, engine=engine,
+                                           backend=backend, **kw)
+            return list(batch.results)
+        raise ValueError(kind)
+
+    @staticmethod
+    def _padded_np(gh, rows: int, width: int) -> np.ndarray:
+        """Host copy of the padded ELL adjacency, cached on the handle —
+        the request path stacks buckets in numpy (one device transfer per
+        dispatch, inside the AOT call) instead of paying eager jnp.stack
+        primitive dispatches per request."""
+        key = f"serve_padded_np({rows},{width})"
+        if key not in gh._cache:
+            gh._cache[key] = np.asarray(gh.padded_ell(rows, width).neighbors)
+        return gh._cache[key]
+
+    def _mis2_batched(self, graphs: Sequence,
+                      options: Mis2Options) -> list[Mis2Result]:
+        """Bucketed mis2 dispatch through the warm AOT executables.
+
+        Mirrors ``batch.pipeline._mis2_batch_impl`` — same bucket policy,
+        same per-graph ``id_bits``, same fixed point — so per-graph
+        results are bit-identical to every single-graph engine; but each
+        bucket runs through :class:`WarmRegistry`, so a configured shape
+        costs zero request-path compiles at any occupancy.
+        """
+        t0 = time.perf_counter()
+        by_shape: dict[tuple[int, int], list[int]] = {}
+        for i, gh in enumerate(graphs):
+            by_shape.setdefault(bucket_shape(gh), []).append(i)
+        out: list = [None] * len(graphs)
+        for (rows, width), idxs in sorted(by_shape.items()):
+            nv = [graphs[i].num_vertices for i in idxs]
+            nbrs = np.stack([self._padded_np(graphs[i], rows, width)
+                             for i in idxs])
+            valid = np.arange(rows)[None, :] < np.asarray(nv)[:, None]
+            bits = np.asarray([id_bits(v) for v in nv], dtype=np.uint32)
+            t, iters = self.warm.run_mis2_bucket(
+                nbrs, valid, bits, options.priority, options.max_iters)
+            t_np, iters_np = np.asarray(t), np.asarray(iters)
+            for j, gi in enumerate(idxs):
+                tj = t_np[j, :nv[j]]
+                out[gi] = (tj == np.uint32(IN), int(iters_np[j]),
+                           not is_undecided(tj).any())
+        per = (time.perf_counter() - t0) / max(1, len(out))
+        return [Mis2Result(in_set, iters, conv, per, engine="dense_batched")
+                for in_set, iters, conv in out]
+
+    # -- observability ------------------------------------------------------
+
+    def reset_window(self) -> None:
+        """Start a new uptime accounting window (compile churn counters)."""
+        with self._lock:
+            self.warm.reset_window()
+            self.stats.window_started_at = time.monotonic()
+
+    def server_stats(self) -> dict:
+        """Counters for dashboards/tests: requests, batching, cache, jit
+        churn (total and since ``reset_window()``)."""
+        with self._lock:
+            now = time.monotonic()
+            return {
+                "requests": self.stats.requests,
+                "dispatches": self.stats.dispatches,
+                "batched_graphs": self.stats.batched_graphs,
+                "single_dispatches": self.stats.single_dispatches,
+                "pending": len(self.batcher),
+                "uptime_s": now - self.stats.started_at,
+                "cache": self.cache.stats.as_dict(),
+                "compiles": {
+                    "startup_aot": self.warm.startup_compiles,
+                    "warmed_shapes": self.warm.num_executables,
+                    "runtime_cold": self.warm.runtime_compiles,
+                    "window_s": now - self.stats.window_started_at,
+                    "runtime_cold_window":
+                        self.warm.runtime_compiles_window,
+                },
+            }
+
+
+def warm_buckets_for(graphs) -> tuple:
+    """The distinct ``(rows, width)`` bucket shapes a graph fleet lands in
+    — convenience for building a ``ServerConfig`` from a known workload."""
+    return tuple(sorted({bucket_shape(as_graph(g)) for g in graphs}))

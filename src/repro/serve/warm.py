@@ -1,0 +1,154 @@
+"""Warm-executable registry: AOT-compile serving bucket shapes at startup.
+
+``jax.jit`` caches per argument shape, so a server that sees a new
+``[B, rows, width]`` bucket mid-traffic pays an XLA compile on the request
+path — jit churn, the serving analogue of the per-V recompiles PR 2's
+bucketing removed.  The registry front-loads that cost: every bucket shape
+named in the serving config is lowered and compiled once at startup
+(``jax.jit(...).lower(ShapeDtypeStruct...).compile()``) and the resulting
+executables are invoked directly on the hot path, bypassing jit dispatch
+entirely.
+
+Dispatch-time bucket membership rarely equals the configured capacity, so
+the runner pads each bucket's batch dimension up to the warmed ``B`` with
+inert members (all-padding rows: ``active=False``, self-loop adjacency) —
+the vmapped fixed point is elementwise across members, so padding cannot
+perturb real members' bits (the PR 2 invariant), and one executable serves
+every occupancy.  Oversized buckets are served in capacity-sized chunks.
+
+Shapes outside the config fall back to the ordinary jitted kernel; each
+*distinct* cold (shape, options) key is counted once as a runtime compile
+— the ``num_compiles`` accounting style the resident engines introduced —
+and exposed per uptime window so an operator can see config drift
+(`runtime_compiles > 0` means the config is missing live shapes).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import numpy as np
+
+from ..batch.pipeline import _mis2_bucket_run
+from ..core.mis2 import MAX_ITERS_DEFAULT
+
+
+@dataclass(frozen=True)
+class WarmSpec:
+    """One AOT-compiled serving shape: a mis2 bucket ``[B, rows, width]``."""
+
+    batch: int
+    rows: int
+    width: int
+    priority: str = "xorshift_star"
+    max_iters: int = MAX_ITERS_DEFAULT
+
+    @property
+    def key(self) -> tuple:
+        return (self.batch, self.rows, self.width, self.priority,
+                self.max_iters)
+
+
+def _inert_members(spec_batch: int, fill: int, rows: int, width: int):
+    """Adjacency / active / bits rows for padding members: self-loop
+    neighbors, nothing active — the fixed point decides them in 0 rounds."""
+    nbrs = np.broadcast_to(
+        np.arange(rows, dtype=np.int32)[None, :, None],
+        (fill, rows, width)).copy()
+    act = np.zeros((fill, rows), dtype=bool)
+    bits = np.ones(fill, dtype=np.uint32)
+    return nbrs, act, bits
+
+
+@dataclass
+class WarmRegistry:
+    """Holds AOT executables for configured shapes + jit-churn counters."""
+
+    startup_compiles: int = 0
+    _exe: dict = field(default_factory=dict)
+    _cold: set = field(default_factory=set)
+    _cold_window_base: int = 0
+
+    def warm(self, specs) -> int:
+        """AOT-compile every spec not yet registered; returns # compiled."""
+        done = 0
+        for spec in specs:
+            if spec.key in self._exe:
+                continue
+            shapes = (
+                jax.ShapeDtypeStruct((spec.batch, spec.rows, spec.width),
+                                     np.int32),
+                jax.ShapeDtypeStruct((spec.batch, spec.rows), np.bool_),
+                jax.ShapeDtypeStruct((spec.batch,), np.uint32),
+            )
+            lowered = _mis2_bucket_run.lower(
+                *shapes, priority=spec.priority, max_iters=spec.max_iters)
+            self._exe[spec.key] = lowered.compile()
+            self.startup_compiles += 1
+            done += 1
+        return done
+
+    @property
+    def num_executables(self) -> int:
+        return len(self._exe)
+
+    @property
+    def runtime_compiles(self) -> int:
+        """Distinct cold (shape, options) keys dispatched since startup."""
+        return len(self._cold)
+
+    @property
+    def runtime_compiles_window(self) -> int:
+        """Cold keys since the last ``reset_window()``."""
+        return len(self._cold) - self._cold_window_base
+
+    def reset_window(self) -> None:
+        self._cold_window_base = len(self._cold)
+
+    def _find(self, members: int, rows: int, width: int, priority: str,
+              max_iters: int) -> Optional[tuple]:
+        """Smallest warmed capacity at (rows, width, options) — warmed
+        buckets absorb any occupancy by padding/chunking."""
+        best = None
+        for (b, r, w, p, mi) in self._exe:
+            if (r, w, p, mi) == (rows, width, priority, max_iters):
+                if best is None or b < best:
+                    best = b
+        if best is None:
+            return None
+        return (best, rows, width, priority, max_iters)
+
+    def run_mis2_bucket(self, neighbors, active, bits, priority: str,
+                        max_iters: int):
+        """Run one stacked mis2 bucket, preferring a warmed executable.
+
+        ``neighbors`` ``[B, rows, width]`` int32, ``active`` ``[B, rows]``
+        bool, ``bits`` ``[B]`` uint32 — exactly the `_mis2_bucket_run`
+        calling convention.  Returns ``(t [B, rows], iters [B])``.
+        """
+        members, rows, width = neighbors.shape
+        key = self._find(members, rows, width, priority, max_iters)
+        if key is None:
+            cold = (members, rows, width, priority, max_iters)
+            self._cold.add(cold)
+            return _mis2_bucket_run(neighbors, active, bits, priority,
+                                    max_iters)
+        cap = key[0]
+        exe = self._exe[key]
+        nbrs_np = np.asarray(neighbors)
+        act_np = np.asarray(active)
+        bits_np = np.asarray(bits)
+        t_parts, it_parts = [], []
+        for lo in range(0, members, cap):
+            hi = min(members, lo + cap)
+            n, a, bb = nbrs_np[lo:hi], act_np[lo:hi], bits_np[lo:hi]
+            if hi - lo < cap:
+                fn, fa, fb = _inert_members(cap, cap - (hi - lo), rows, width)
+                n = np.concatenate([n, fn])
+                a = np.concatenate([a, fa])
+                bb = np.concatenate([bb, fb])
+            t, iters = exe(n, a, bb)
+            t_parts.append(np.asarray(t)[: hi - lo])
+            it_parts.append(np.asarray(iters)[: hi - lo])
+        return np.concatenate(t_parts), np.concatenate(it_parts)
