@@ -46,7 +46,17 @@ def emit_trajectory(name: str, record: dict) -> Path:
 
     The trajectory is a JSON list, one entry per benchmark run, so headline
     metrics (e.g. batched graphs/sec) accumulate across commits and can be
-    plotted or regression-checked without re-parsing per-run CSVs."""
+    plotted or regression-checked without re-parsing per-run CSVs.
+
+    Every record is stamped with a ``"metrics"`` snapshot of the process
+    ``repro.obs`` registry (flat ``name{labels} -> value``) unless the
+    caller already supplied one — execution shape (dispatches, syncs,
+    compiles, cache traffic, collective bytes) travels with the timing it
+    explains, and ``benchmarks.run --quick`` gates on its presence."""
+    if "metrics" not in record:
+        from repro import obs
+
+        record = {**record, "metrics": obs.snapshot().flat()}
     ARTIFACTS.mkdir(parents=True, exist_ok=True)
     path = ARTIFACTS / f"BENCH_{name}.json"
     root = REPO_ROOT / f"BENCH_{name}.json"

@@ -4,11 +4,22 @@
 
 Prints ``name,us_per_call,derived`` CSV lines and writes
 artifacts/bench/<name>.csv per table.
+
+Under ``--quick`` (the CI lane) the driver additionally gates on the
+observability contract: every root ``BENCH_*.json`` trajectory touched by
+the run must carry a ``"metrics"`` registry snapshot in its newest record
+(``common.emit_trajectory`` stamps it; a benchmark bypassing that helper
+fails the run).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
 
 # src path bootstrap lives in benchmarks/__init__.py (runs on package import)
 from benchmarks import (  # noqa: E402
@@ -45,6 +56,23 @@ ALL = {
 }
 
 
+def _check_trajectory_metrics(started_at: float) -> list[str]:
+    """Root ``BENCH_*.json`` files modified during this run whose newest
+    record is missing the ``"metrics"`` snapshot (the obs contract)."""
+    bad = []
+    for path in sorted(REPO_ROOT.glob("BENCH_*.json")):
+        if path.stat().st_mtime < started_at:
+            continue        # not touched by this run
+        try:
+            history = json.loads(path.read_text())
+        except (json.JSONDecodeError, OSError):
+            bad.append(f"{path.name}: unreadable")
+            continue
+        if not history or "metrics" not in history[-1]:
+            bad.append(f"{path.name}: newest record lacks 'metrics'")
+    return bad
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -53,11 +81,20 @@ def main() -> None:
                     help="comma-separated subset of " + ",".join(ALL))
     args = ap.parse_args()
     names = list(ALL) if not args.only else args.only.split(",")
+    started_at = time.time()
     for name in names:
         t0 = time.perf_counter()
         print(f"# --- {name} ---", flush=True)
         ALL[name](quick=args.quick)
         print(f"# {name} done in {time.perf_counter() - t0:.1f}s", flush=True)
+    if args.quick:
+        bad = _check_trajectory_metrics(started_at)
+        if bad:
+            for line in bad:
+                print(f"# OBS GATE FAIL: {line}", flush=True)
+            sys.exit(1)
+        print("# obs gate: every touched BENCH_*.json carries a metrics "
+              "snapshot", flush=True)
 
 
 if __name__ == "__main__":

@@ -4,9 +4,10 @@
 ``import repro`` presents the facade directly (``repro.mis2``,
 ``repro.Graph``, ...); ``repro.api`` is the same surface with the full
 registry/backend toolkit; ``repro.serve`` is the persistent graph
-service (continuous batching + digest-keyed caching + streaming repair).
-Subpackages (``graphs``, ``core``, ``solvers``, ``kernels``, ``launch``)
-remain importable for power users.
+service (continuous batching + digest-keyed caching + streaming repair);
+``repro.obs`` is the process-wide observability layer (metrics registry,
+span tracing, exporters).  Subpackages (``graphs``, ``core``,
+``solvers``, ``kernels``, ``launch``) remain importable for power users.
 
 Facade attributes resolve lazily (PEP 562): tooling that must configure
 ``XLA_FLAGS`` before anything touches jax (``python -m
@@ -24,11 +25,11 @@ _FACADE = {
     "mis2_batch", "color_batch", "coarsen_batch", "amg_setup_batch",
 }
 
-__all__ = ["api", "serve", "__version__", *sorted(_FACADE)]
+__all__ = ["api", "serve", "obs", "__version__", *sorted(_FACADE)]
 
 
 def __getattr__(name: str):
-    if name in ("api", "serve"):
+    if name in ("api", "serve", "obs"):
         return import_module(f".{name}", __name__)
     if name in _FACADE:
         return getattr(import_module(".api", __name__), name)

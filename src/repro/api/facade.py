@@ -26,7 +26,9 @@ from ..batch.pipeline import (
 )
 from ..core.mis2 import Mis2Options
 from ..graphs.handle import Graph, as_graph
-from .backend import Backend, resolve_backend
+from ..obs import Provenance
+from ..obs import span as _obs_span
+from .backend import Backend, backend_platform, resolve_backend
 from .registry import get_engine
 from .result import (
     AggregationResult,
@@ -45,6 +47,29 @@ def _prepare(graph, backend: Backend) -> Graph:
     if backend.device is not None:
         gh.place(backend.device)
     return gh
+
+
+def _traced(kind: str, engine, be: Backend, call, wrap):
+    """Run one facade engine call inside an ``obs`` span and attach the
+    serializable provenance record to the wrapped Result.
+
+    ``call()`` invokes the engine; ``wrap(core, dt)`` builds the facade
+    Result.  The root span (wall time + metric deltas: dispatches, host
+    syncs, compiles, cache and conversion traffic inside the call) plus
+    engine/backend/digest become ``result.provenance`` — every facade
+    answer can explain its own cost.
+    """
+    platform = backend_platform(be)
+    with _obs_span(f"api.{kind}", engine=str(engine),
+                   backend=platform) as sp:
+        t0 = time.perf_counter()
+        core = call()
+        dt = time.perf_counter() - t0
+        result = wrap(core, dt)
+    result.provenance = Provenance(kind, str(engine), platform,
+                                   getattr(result, "digest", ""),
+                                   sp.to_dict())
+    return result
 
 
 def mis2(graph, *, active=None, options: Optional[Mis2Options] = None,
@@ -72,12 +97,13 @@ def mis2(graph, *, active=None, options: Optional[Mis2Options] = None,
     elif be.pallas and engine == "compacted":
         engine = "pallas"       # legacy: Backend(pallas=True) upgrade
     fn = get_engine("mis2", engine)
-    t0 = time.perf_counter()
-    r = fn(gh, active, options, be)
-    dt = time.perf_counter() - t0
-    return Mis2Result(r.in_set, r.iterations, r.converged, dt, engine=engine,
-                      collectives=getattr(r, "collectives", None),
-                      num_compiles=getattr(r, "num_compiles", None))
+    return _traced(
+        "mis2", engine, be,
+        lambda: fn(gh, active, options, be),
+        lambda r, dt: Mis2Result(
+            r.in_set, r.iterations, r.converged, dt, engine=engine,
+            collectives=getattr(r, "collectives", None),
+            num_compiles=getattr(r, "num_compiles", None)))
 
 
 def misk(graph, k: int = 2, *, priority: str = "xorshift_star",
@@ -99,12 +125,13 @@ def misk(graph, k: int = 2, *, priority: str = "xorshift_star",
     if engine is None:
         engine = default_misk_engine(be)
     fn = get_engine("misk", engine)
-    t0 = time.perf_counter()
-    r = fn(gh, k, priority, max_iters, be)
-    dt = time.perf_counter() - t0
-    return Mis2Result(r.in_set, r.iterations, r.converged, dt,
-                      engine=f"misk{k}_{engine}",
-                      num_compiles=getattr(r, "num_compiles", None))
+    return _traced(
+        "misk", engine, be,
+        lambda: fn(gh, k, priority, max_iters, be),
+        lambda r, dt: Mis2Result(
+            r.in_set, r.iterations, r.converged, dt,
+            engine=f"misk{k}_{engine}",
+            num_compiles=getattr(r, "num_compiles", None)))
 
 
 def color(graph, *, max_rounds: int = 256, engine: str = "luby",
@@ -116,11 +143,11 @@ def color(graph, *, max_rounds: int = 256, engine: str = "luby",
     be = resolve_backend(backend)
     gh = _prepare(graph, be)
     fn = get_engine("coloring", engine)
-    t0 = time.perf_counter()
-    r = fn(gh, max_rounds, be)
-    dt = time.perf_counter() - t0
-    return ColoringResult(r.colors, r.rounds, r.converged, dt,
-                          num_colors=r.num_colors)
+    return _traced(
+        "color", engine, be,
+        lambda: fn(gh, max_rounds, be),
+        lambda r, dt: ColoringResult(r.colors, r.rounds, r.converged, dt,
+                                     num_colors=r.num_colors))
 
 
 def coarsen(graph, *, method: str = "two_phase",
@@ -154,12 +181,12 @@ def coarsen(graph, *, method: str = "two_phase",
         kwargs["mis2_engine"] = mis2_engine
     if "backend" in inspect.signature(fn).parameters:
         kwargs["backend"] = be
-    t0 = time.perf_counter()
-    r = fn(gh, **kwargs)
-    dt = time.perf_counter() - t0
-    return AggregationResult(r.labels, r.mis2_iterations, r.converged, dt,
-                             num_aggregates=r.num_aggregates, roots=r.roots,
-                             phase=r.phase)
+    return _traced(
+        "coarsen", method, be,
+        lambda: fn(gh, **kwargs),
+        lambda r, dt: AggregationResult(
+            r.labels, r.mis2_iterations, r.converged, dt,
+            num_aggregates=r.num_aggregates, roots=r.roots, phase=r.phase))
 
 
 def partition(graph, num_parts: int, *, coarse_target: Optional[int] = None,
@@ -170,17 +197,27 @@ def partition(graph, num_parts: int, *, coarse_target: Optional[int] = None,
     be = resolve_backend(backend)
     gh = _prepare(graph, be)
     fn = get_engine("partition", engine)
-    t0 = time.perf_counter()
-    r = fn(gh, num_parts, coarse_target, options, be)
-    dt = time.perf_counter() - t0
-    return PartitionResult(r.parts, r.levels, r.converged, dt,
-                           num_parts=r.num_parts, edge_cut=r.edge_cut,
-                           levels=r.levels, history=list(r.history))
+    return _traced(
+        "partition", engine, be,
+        lambda: fn(gh, num_parts, coarse_target, options, be),
+        lambda r, dt: PartitionResult(
+            r.parts, r.levels, r.converged, dt, num_parts=r.num_parts,
+            edge_cut=r.edge_cut, levels=r.levels, history=list(r.history)))
 
 
 # ---------------------------------------------------------------------------
 # batched entry points (repro.batch): many graphs, few compiled shapes
 # ---------------------------------------------------------------------------
+
+def _traced_batch(kind: str, engine, be: Backend, call, wrap) -> BatchResult:
+    """Batch variant of :func:`_traced`: the batch-level provenance record
+    (one span covering every bucket dispatch) is shared by the
+    ``BatchResult`` and each per-graph member Result."""
+    batch = _traced(kind, engine, be, call, wrap)
+    for r in batch.results:
+        r.provenance = batch.provenance
+    return batch
+
 
 def _prepare_batch(graphs, backend: Backend) -> GraphBatch:
     if backend.device is not None:
@@ -206,14 +243,16 @@ def mis2_batch(graphs, *, options: Optional[Mis2Options] = None,
     """
     be = resolve_backend(backend)
     batch = _prepare_batch(graphs, be)
-    t0 = time.perf_counter()
-    core = _mis2_batch_impl(batch, options)
-    dt = time.perf_counter() - t0
-    per = dt / max(1, len(core))
-    results = [Mis2Result(r.in_set, r.iterations, r.converged, per,
-                          engine="dense_batched") for r in core]
-    return BatchResult(results, dt, engine="dense_batched",
-                       bucket_shapes=batch.bucket_shapes)
+
+    def _wrap(core, dt):
+        per = dt / max(1, len(core))
+        results = [Mis2Result(r.in_set, r.iterations, r.converged, per,
+                              engine="dense_batched") for r in core]
+        return BatchResult(results, dt, engine="dense_batched",
+                           bucket_shapes=batch.bucket_shapes)
+
+    return _traced_batch("mis2_batch", "dense_batched", be,
+                         lambda: _mis2_batch_impl(batch, options), _wrap)
 
 
 def color_batch(graphs, *, max_rounds: int = 256,
@@ -222,14 +261,16 @@ def color_batch(graphs, *, max_rounds: int = 256,
     per-graph result matches ``color(g)`` bit-for-bit."""
     be = resolve_backend(backend)
     batch = _prepare_batch(graphs, be)
-    t0 = time.perf_counter()
-    core = _color_batch_impl(batch, max_rounds)
-    dt = time.perf_counter() - t0
-    per = dt / max(1, len(core))
-    results = [ColoringResult(r.colors, r.rounds, r.converged, per,
-                              num_colors=r.num_colors) for r in core]
-    return BatchResult(results, dt, engine="luby_batched",
-                       bucket_shapes=batch.bucket_shapes)
+
+    def _wrap(core, dt):
+        per = dt / max(1, len(core))
+        results = [ColoringResult(r.colors, r.rounds, r.converged, per,
+                                  num_colors=r.num_colors) for r in core]
+        return BatchResult(results, dt, engine="luby_batched",
+                           bucket_shapes=batch.bucket_shapes)
+
+    return _traced_batch("color_batch", "luby_batched", be,
+                         lambda: _color_batch_impl(batch, max_rounds), _wrap)
 
 
 def coarsen_batch(graphs, *, method: str = "two_phase",
@@ -247,26 +288,34 @@ def coarsen_batch(graphs, *, method: str = "two_phase",
 
         members = graphs.graphs if isinstance(graphs, GraphBatch) \
             else [as_graph(g) for g in graphs]
-        t0 = time.perf_counter()
-        core = [_aggregate_serial_greedy_impl(g) for g in members]
-        dt = time.perf_counter() - t0
-        per = dt / max(1, len(core))
-        results = [AggregationResult(r.labels, r.mis2_iterations, r.converged,
-                                     per, num_aggregates=r.num_aggregates,
-                                     roots=r.roots, phase=r.phase)
-                   for r in core]
-        return BatchResult(results, dt, engine="serial_batched")
+
+        def _wrap_serial(core, dt):
+            per = dt / max(1, len(core))
+            results = [AggregationResult(
+                r.labels, r.mis2_iterations, r.converged, per,
+                num_aggregates=r.num_aggregates, roots=r.roots,
+                phase=r.phase) for r in core]
+            return BatchResult(results, dt, engine="serial_batched")
+
+        return _traced_batch(
+            "coarsen_batch", "serial_batched", be,
+            lambda: [_aggregate_serial_greedy_impl(g) for g in members],
+            _wrap_serial)
     batch = _prepare_batch(graphs, be)
-    t0 = time.perf_counter()
-    core = _coarsen_batch_impl(batch, method, options,
-                               min_secondary_neighbors)
-    dt = time.perf_counter() - t0
-    per = dt / max(1, len(core))
-    results = [AggregationResult(r.labels, r.mis2_iterations, r.converged,
-                                 per, num_aggregates=r.num_aggregates,
-                                 roots=r.roots, phase=r.phase) for r in core]
-    return BatchResult(results, dt, engine=f"{method}_batched",
-                       bucket_shapes=batch.bucket_shapes)
+
+    def _wrap(core, dt):
+        per = dt / max(1, len(core))
+        results = [AggregationResult(
+            r.labels, r.mis2_iterations, r.converged, per,
+            num_aggregates=r.num_aggregates, roots=r.roots,
+            phase=r.phase) for r in core]
+        return BatchResult(results, dt, engine=f"{method}_batched",
+                           bucket_shapes=batch.bucket_shapes)
+
+    return _traced_batch(
+        "coarsen_batch", f"{method}_batched", be,
+        lambda: _coarsen_batch_impl(batch, method, options,
+                                    min_secondary_neighbors), _wrap)
 
 
 def _wrap_hierarchy(h, aggregation: str, engine: str,
@@ -322,15 +371,18 @@ def amg_setup(matrix, *, aggregation: str = "two_phase",
     if engine is None:
         engine = default_multilevel_engine(be)
     fn = get_engine("multilevel", engine)
-    t0 = time.perf_counter()
-    h = fn("amg", gh, aggregation=aggregation, max_levels=max_levels,
-           coarse_size=coarse_size, omega=omega,
-           jacobi_weight=jacobi_weight, smoother_sweeps=smoother_sweeps,
-           options=options, mis2_engine=mis2_engine,
-           interpret=be.resolve_interpret(), coarse_dtype=coarse_dtype,
-           dense_coarse_cap=dense_coarse_cap,
-           explicit_restriction=explicit_restriction)
-    return _wrap_hierarchy(h, aggregation, engine, time.perf_counter() - t0)
+    return _traced(
+        "amg_setup", engine, be,
+        lambda: fn("amg", gh, aggregation=aggregation,
+                   max_levels=max_levels, coarse_size=coarse_size,
+                   omega=omega, jacobi_weight=jacobi_weight,
+                   smoother_sweeps=smoother_sweeps, options=options,
+                   mis2_engine=mis2_engine,
+                   interpret=be.resolve_interpret(),
+                   coarse_dtype=coarse_dtype,
+                   dense_coarse_cap=dense_coarse_cap,
+                   explicit_restriction=explicit_restriction),
+        lambda h, dt: _wrap_hierarchy(h, aggregation, engine, dt))
 
 
 def amg(matrix, *, aggregation: str = "two_phase", max_levels: int = 10,
@@ -375,18 +427,24 @@ def cluster_gs_setup(matrix, *, aggregation: str = "two_phase",
     if engine is None:
         engine = default_multilevel_engine(be)
     fn = get_engine("multilevel", engine)
-    t0 = time.perf_counter()
-    color_rows, num_colors, nagg, labels, colors, timings = fn(
-        "cluster_gs", gh, aggregation=aggregation, options=options,
-        coarsen_levels=coarsen_levels, mis2_engine=mis2_engine)
-    ell = gh.ell_matrix
-    diag = extract_diagonal(gh.csr_matrix)
-    dt = time.perf_counter() - t0
-    pre = MulticolorGSPreconditioner(ell, diag, color_rows, num_colors,
-                                     nagg, dt, "cluster", timings=timings)
-    return ClusterGsSetup(labels, 0, True, dt, preconditioner=pre,
-                          num_colors=num_colors, num_clusters=nagg,
-                          colors=colors, engine=engine, timings=timings)
+
+    def _build(out, dt):
+        color_rows, num_colors, nagg, labels, colors, timings = out
+        ell = gh.ell_matrix
+        diag = extract_diagonal(gh.csr_matrix)
+        pre = MulticolorGSPreconditioner(ell, diag, color_rows, num_colors,
+                                         nagg, dt, "cluster",
+                                         timings=timings)
+        return ClusterGsSetup(labels, 0, True, dt, preconditioner=pre,
+                              num_colors=num_colors, num_clusters=nagg,
+                              colors=colors, engine=engine, timings=timings)
+
+    return _traced(
+        "cluster_gs_setup", engine, be,
+        lambda: fn("cluster_gs", gh, aggregation=aggregation,
+                   options=options, coarsen_levels=coarsen_levels,
+                   mis2_engine=mis2_engine),
+        _build)
 
 
 def amg_setup_batch(matrices, *, aggregation: str = "two_phase",
@@ -406,15 +464,19 @@ def amg_setup_batch(matrices, *, aggregation: str = "two_phase",
     batch = _prepare_batch(matrices, be)
     if engine is None:
         engine = default_multilevel_engine(be)
-    t0 = time.perf_counter()
-    hierarchies = _amg_setup_batch_impl(batch, aggregation, options,
-                                        engine=engine, **hierarchy_kwargs)
-    dt = time.perf_counter() - t0
-    per = dt / max(1, len(hierarchies))
-    results = [_wrap_hierarchy(h, aggregation, engine, per)
-               for h in hierarchies]
-    return BatchResult(results, dt, engine=f"{engine}_batched",
-                       bucket_shapes=batch.bucket_shapes)
+
+    def _wrap(hierarchies, dt):
+        per = dt / max(1, len(hierarchies))
+        results = [_wrap_hierarchy(h, aggregation, engine, per)
+                   for h in hierarchies]
+        return BatchResult(results, dt, engine=f"{engine}_batched",
+                           bucket_shapes=batch.bucket_shapes)
+
+    return _traced_batch(
+        "amg_setup_batch", f"{engine}_batched", be,
+        lambda: _amg_setup_batch_impl(batch, aggregation, options,
+                                      engine=engine, **hierarchy_kwargs),
+        _wrap)
 
 
 __all__ = [

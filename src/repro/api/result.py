@@ -12,7 +12,10 @@ contract:
 * ``wall_time_s``  facade-measured wall time of the engine call,
 * ``digest``       a determinism digest of the payload — two runs (or two
   engines) produced bit-identical output iff their digests match, which is
-  the paper's portability claim made checkable in one string compare.
+  the paper's portability claim made checkable in one string compare,
+* ``provenance``   a serializable :class:`~repro.obs.Provenance` record
+  (engine, backend, span tree with wall times and metric deltas, digest)
+  attached by the facade — any answer can explain its own cost.
 """
 from __future__ import annotations
 
@@ -49,6 +52,9 @@ class Result:
     converged: bool = True
     wall_time_s: float = 0.0
     digest: str = ""
+    # facade-attached repro.obs.Provenance (set after construction so the
+    # record can embed the payload digest computed in __post_init__)
+    provenance: object | None = None
 
     def __post_init__(self):
         # protocol guarantee: host numpy payload, digest always present
@@ -151,6 +157,7 @@ class BatchResult:
     wall_time_s: float = 0.0
     engine: str = ""
     bucket_shapes: list = field(default_factory=list)
+    provenance: object | None = None   # shared batch-level obs.Provenance
 
     def __len__(self) -> int:
         return len(self.results)

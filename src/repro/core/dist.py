@@ -52,6 +52,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..graphs.csr import ELLGraph
 from ..graphs.handle import as_ell_graph, as_graph
+from ..obs import metrics as _OBS
 from .hashing import PRIORITY_FNS
 from .mis2 import Mis2Options, Mis2Result
 from .tuples import IN, OUT, id_bits, is_undecided, pack
@@ -300,8 +301,9 @@ def _mis2_distributed_impl(graph, active=None,
     iterations = int(np.asarray(iters)[0])
     undecided = is_undecided(t_np) & act_np
     per = collective_bytes_per_iteration(v, nd, single_gather)
+    variant = "single_gather" if single_gather else "two_gather"
     collectives = {
-        "variant": "single_gather" if single_gather else "two_gather",
+        "variant": variant,
         "num_devices": nd,
         "iterations": iterations,
         **per,
@@ -309,6 +311,11 @@ def _mis2_distributed_impl(graph, active=None,
         "wire_bytes_per_device":
             per["wire_bytes_per_device_per_iteration"] * iterations,
     }
+    # mirror the analytic accounting into the process-wide registry so one
+    # obs.snapshot() carries collective volume next to dispatches/compiles
+    _OBS.counter("dist.collective_bytes", labels={"variant": variant}).inc(
+        collectives["result_bytes_total"])
+    _OBS.counter("dist.rounds", labels={"variant": variant}).inc(iterations)
     return Mis2Result(t_np == np.uint32(IN), iterations,
                       not undecided.any(), collectives)
 

@@ -53,6 +53,8 @@ import numpy as np
 
 from .._compat import warn_deprecated
 from ..graphs.handle import as_graph
+from ..obs import metrics as _OBS
+from ..obs import span as _obs_span
 from .hashing import PRIORITY_FNS
 from .tuples import IN, OUT, effective_priority, id_bits, is_undecided, pack
 
@@ -269,24 +271,44 @@ def fixed_packed_priorities(num_vertices: int) -> jnp.ndarray:
 # hot-loop accounting (test-only observability; no effect on results)
 # ===========================================================================
 
-@dataclass
 class HotLoopStats:
-    """Process-wide counters for the MIS-2 hot-loop execution shape.
+    """Compatibility view over the MIS-2 hot-loop registry counters.
 
     ``host_syncs`` counts device->host transfers issued *inside* a fixed
     point (the legacy compacted driver pays 2 per iteration to rebuild its
     worklists); ``resident_dispatches`` counts whole-fixed-point jitted
-    dispatches (the resident engines pay exactly 1 per solve).  Tests and
-    ``benchmarks/hotloop_overhead.py`` read these to enforce the
-    zero-round-trip claim; production code never consults them.
+    dispatches (the resident engines pay exactly 1 per solve).
+
+    The numbers live in the process-wide :mod:`repro.obs` registry
+    (``mis2.host_syncs`` / ``mis2.resident_dispatches``), so one
+    ``obs.snapshot()`` sees them alongside every other subsystem; this
+    shim keeps the legacy attribute surface (including ``+=`` writes)
+    working.  Tests should prefer ``obs.capture()`` over :meth:`reset` —
+    capture is scoped, reset is process-global and order-dependent.
     """
 
-    host_syncs: int = 0
-    resident_dispatches: int = 0
+    _SYNCS = "mis2.host_syncs"
+    _DISPATCHES = "mis2.resident_dispatches"
+
+    @property
+    def host_syncs(self) -> int:
+        return int(_OBS.counter(self._SYNCS).value)
+
+    @host_syncs.setter
+    def host_syncs(self, v: int) -> None:
+        _OBS.counter(self._SYNCS).set_(v)
+
+    @property
+    def resident_dispatches(self) -> int:
+        return int(_OBS.counter(self._DISPATCHES).value)
+
+    @resident_dispatches.setter
+    def resident_dispatches(self, v: int) -> None:
+        _OBS.counter(self._DISPATCHES).set_(v)
 
     def reset(self) -> None:
-        self.host_syncs = 0
-        self.resident_dispatches = 0
+        _OBS.reset(self._SYNCS)
+        _OBS.reset(self._DISPATCHES)
 
 
 HOTLOOP_STATS = HotLoopStats()
@@ -794,20 +816,24 @@ def _mis2_resident_impl(graph, active: Optional[np.ndarray] = None,
         else jnp.asarray(active)
     b = id_bits(v)
 
-    if options.layout == "ell":
-        if pallas:
-            from ..kernels._interpret import resolve_interpret
-            interpret = resolve_interpret(interpret)
-        t, it, n1 = _resident_ell_fixed_point(
-            gh.ell.neighbors, active_j, priority=options.priority,
-            packed=options.packed, max_iters=options.max_iters, b=b,
-            use_pallas=pallas, interpret=bool(interpret))
-    else:
-        edge_rows, edge_cols = gh.csr_edges
-        t, it, n1 = _resident_csr_fixed_point(
-            edge_rows, edge_cols, active_j, priority=options.priority,
-            packed=options.packed, max_iters=options.max_iters, b=b, v=v)
-    HOTLOOP_STATS.resident_dispatches += 1
+    with _obs_span("mis2.resident_fixed_point", layout=options.layout,
+                   pallas=pallas, packed=options.packed, v=v) as sp:
+        if options.layout == "ell":
+            if pallas:
+                from ..kernels._interpret import resolve_interpret
+                interpret = resolve_interpret(interpret)
+            t, it, n1 = _resident_ell_fixed_point(
+                gh.ell.neighbors, active_j, priority=options.priority,
+                packed=options.packed, max_iters=options.max_iters, b=b,
+                use_pallas=pallas, interpret=bool(interpret))
+        else:
+            edge_rows, edge_cols = gh.csr_edges
+            t, it, n1 = _resident_csr_fixed_point(
+                edge_rows, edge_cols, active_j, priority=options.priority,
+                packed=options.packed, max_iters=options.max_iters, b=b, v=v)
+        HOTLOOP_STATS.resident_dispatches += 1
+        jax.block_until_ready(t)    # span duration covers device execution
+        sp.annotate(iterations=int(it))
 
     t_np = np.asarray(t)
     in_set = (t_np == np.uint32(IN)) if options.packed else (t_np == S_IN)

@@ -15,14 +15,22 @@ bare ``CSRGraph`` still works and simply gets a fresh, uncached handle).
 
 Conversion counting: ``graph.conversions`` maps conversion name ->
 number of times the *work* was actually performed.  Tests assert a second
-``.ell`` access is a cache hit (count stays 1).
+``.ell`` access is a cache hit (count stays 1).  Each conversion is also
+timed (``graph.conversion_timings``) and mirrored into the process-wide
+``repro.obs`` registry as ``graph.conversions{kind=...}`` /
+``graph.conversion_seconds{kind=...}`` so one ``obs.snapshot()`` sees
+format churn next to dispatches and compiles.
 """
 from __future__ import annotations
 
+import time
+from contextlib import contextmanager
 from typing import Any, Iterable
 
 import jax
 import numpy as np
+
+from ..obs import metrics as _OBS
 
 from .csr import (
     BucketedELL,
@@ -58,6 +66,7 @@ class Graph:
             # share the cache: a handle of a handle is the same handle state
             self._cache = structure._cache
             self._counts = structure._counts
+            self._timings = structure._timings
             return
         if not isinstance(structure, _STRUCTS):
             raise TypeError(
@@ -66,6 +75,7 @@ class Graph:
             )
         self._cache: dict[str, Any] = {}
         self._counts: dict[str, int] = {}
+        self._timings: dict[str, float] = {}
         if isinstance(structure, CSRGraph):
             self._cache["csr"] = structure
         elif isinstance(structure, CSRMatrix):
@@ -88,13 +98,32 @@ class Graph:
 
     # -- cache plumbing -----------------------------------------------------
 
-    def _converted(self, name: str) -> None:
-        self._counts[name] = self._counts.get(name, 0) + 1
+    @contextmanager
+    def _convert(self, name: str):
+        """Count + time one conversion's actual work and mirror it into the
+        ``repro.obs`` registry.  Callers hoist prerequisite format accesses
+        (e.g. ``self.csr``) *before* entering, so nested conversions are
+        attributed to their own kind rather than the outermost one."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            dt = time.perf_counter() - t0
+            self._counts[name] = self._counts.get(name, 0) + 1
+            self._timings[name] = self._timings.get(name, 0.0) + dt
+            _OBS.counter("graph.conversions", labels={"kind": name}).inc()
+            _OBS.histogram("graph.conversion_seconds",
+                           labels={"kind": name}).observe(dt)
 
     @property
     def conversions(self) -> dict[str, int]:
         """Times each conversion's work actually ran (cache hits excluded)."""
         return dict(self._counts)
+
+    @property
+    def conversion_timings(self) -> dict[str, float]:
+        """Cumulative seconds spent per conversion kind (this handle)."""
+        return dict(self._timings)
 
     # -- structural formats -------------------------------------------------
 
@@ -105,15 +134,16 @@ class Graph:
     @property
     def csr(self) -> CSRGraph:
         if "csr" not in self._cache:
-            self._converted("ell_to_csr")
-            self._cache["csr"] = ell_to_csr_graph(self._cache["ell"])
+            with self._convert("ell_to_csr"):
+                self._cache["csr"] = ell_to_csr_graph(self._cache["ell"])
         return self._cache["csr"]
 
     @property
     def ell(self) -> ELLGraph:
         if "ell" not in self._cache:
-            self._converted("csr_to_ell")
-            self._cache["ell"] = csr_to_ell_graph(self.csr)
+            csr = self.csr
+            with self._convert("csr_to_ell"):
+                self._cache["ell"] = csr_to_ell_graph(csr)
         return self._cache["ell"]
 
     @property
@@ -125,8 +155,9 @@ class Graph:
     @property
     def ell_matrix(self) -> ELLMatrix:
         if "ell_matrix" not in self._cache:
-            self._converted("csr_to_ell_matrix")
-            self._cache["ell_matrix"] = csr_to_ell_matrix(self.csr_matrix)
+            csr_matrix = self.csr_matrix
+            with self._convert("csr_to_ell_matrix"):
+                self._cache["ell_matrix"] = csr_to_ell_matrix(csr_matrix)
         return self._cache["ell_matrix"]
 
     @property
@@ -134,15 +165,17 @@ class Graph:
         """COO edge list ``(edge_rows, edge_cols)`` as device int32 arrays —
         the ``csr_segment`` layout consumed by segment-reduction kernels."""
         if "csr_edges" not in self._cache:
-            self._converted("csr_edges")
-            import jax.numpy as jnp
+            csr = self.csr
+            with self._convert("csr_edges"):
+                import jax.numpy as jnp
 
-            indptr = np.asarray(self.csr.indptr)
-            indices = np.asarray(self.csr.indices)
-            rows = np.repeat(np.arange(len(indptr) - 1, dtype=np.int32),
-                             np.diff(indptr))
-            self._cache["csr_edges"] = (jnp.asarray(rows),
-                                        jnp.asarray(indices.astype(np.int32)))
+                indptr = np.asarray(csr.indptr)
+                indices = np.asarray(csr.indices)
+                rows = np.repeat(np.arange(len(indptr) - 1, dtype=np.int32),
+                                 np.diff(indptr))
+                self._cache["csr_edges"] = (
+                    jnp.asarray(rows),
+                    jnp.asarray(indices.astype(np.int32)))
         return self._cache["csr_edges"]
 
     def padded_ell(self, num_rows: int, width: int) -> ELLGraph:
@@ -151,15 +184,17 @@ class Graph:
         graph into the same bucket shape reuse one padded copy."""
         key = f"padded_ell({num_rows},{width})"
         if key not in self._cache:
-            self._converted("pad_ell")
-            self._cache[key] = pad_ell_graph(self.ell, num_rows, width)
+            ell = self.ell
+            with self._convert("pad_ell"):
+                self._cache[key] = pad_ell_graph(ell, num_rows, width)
         return self._cache[key]
 
     def bucketed(self, boundaries: Iterable[int] = (8, 32, 128)) -> BucketedELL:
         key = f"bucketed{tuple(boundaries)}"
         if key not in self._cache:
-            self._converted("csr_to_bucketed_ell")
-            self._cache[key] = csr_to_bucketed_ell(self.csr, tuple(boundaries))
+            csr = self.csr
+            with self._convert("csr_to_bucketed_ell"):
+                self._cache[key] = csr_to_bucketed_ell(csr, tuple(boundaries))
         return self._cache[key]
 
     @property
@@ -175,22 +210,22 @@ class Graph:
         *provably* the bytes a recomputation would produce (the repo-wide
         engine bit-identity invariant)."""
         if "digest" not in self._cache:
-            self._converted("digest")
-            import hashlib
-
             csr = self.csr
-            h = hashlib.sha256()
-            for arr in (csr.indptr, csr.indices):
-                a = np.asarray(arr)
-                h.update(str(a.dtype).encode())
-                h.update(str(a.shape).encode())
-                h.update(a.tobytes())
-            if self.has_values:
-                a = np.asarray(self.csr_matrix.values)
-                h.update(str(a.dtype).encode())
-                h.update(str(a.shape).encode())
-                h.update(a.tobytes())
-            self._cache["digest"] = h.hexdigest()[:16]
+            with self._convert("digest"):
+                import hashlib
+
+                h = hashlib.sha256()
+                for arr in (csr.indptr, csr.indices):
+                    a = np.asarray(arr)
+                    h.update(str(a.dtype).encode())
+                    h.update(str(a.shape).encode())
+                    h.update(a.tobytes())
+                if self.has_values:
+                    a = np.asarray(self.csr_matrix.values)
+                    h.update(str(a.dtype).encode())
+                    h.update(str(a.shape).encode())
+                    h.update(a.tobytes())
+                self._cache["digest"] = h.hexdigest()[:16]
         return self._cache["digest"]
 
     # -- stats --------------------------------------------------------------
@@ -210,8 +245,9 @@ class Graph:
     @property
     def degrees(self) -> np.ndarray:
         if "degrees" not in self._cache:
-            self._converted("degrees")
-            self._cache["degrees"] = np.diff(np.asarray(self.csr.indptr))
+            csr = self.csr
+            with self._convert("degrees"):
+                self._cache["degrees"] = np.diff(np.asarray(csr.indptr))
         return self._cache["degrees"]
 
     @property

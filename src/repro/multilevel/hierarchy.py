@@ -37,6 +37,8 @@ import numpy as np
 # MIS-2 worklist buckets, imported so the two can never drift
 from ..core.mis2 import _bucket as _bucket_pow2
 from ..graphs.csr import CSRMatrix, ELLMatrix, csr_to_ell_matrix
+from ..obs import metrics as _OBS
+from ..obs import span as _obs_span
 from ..graphs.handle import Graph, as_graph
 from ..graphs.ops import extract_diagonal, matrix_to_scipy
 from .galerkin import (
@@ -76,9 +78,8 @@ def x64_context():
 # setup-phase accounting (HOTLOOP_STATS counterpart for the setup path)
 # ---------------------------------------------------------------------------
 
-@dataclass
 class SetupStats:
-    """Process-wide counters for the multilevel setup execution shape.
+    """Compatibility view over the multilevel-setup registry counters.
 
     ``host_syncs`` counts matrix-sized device<->host round-trips in the
     *per-level* setup path of a hierarchy/cluster-GS build (the host
@@ -87,17 +88,36 @@ class SetupStats:
     bounded by ``dense_coarse_cap`` and needed only when the dense
     factorization runs on the host — is boundary work and counted by
     neither engine.  ``resident_dispatches`` counts whole-stage jitted
-    dispatches of the resident engine (7 per AMG level).  Tests and
-    ``benchmarks/setup_overhead.py`` read these to enforce the
-    zero-round-trip claim; production code never consults them.
+    dispatches of the resident engine (7 per AMG level).
+
+    The numbers live in the process-wide :mod:`repro.obs` registry
+    (``multilevel.host_syncs`` / ``multilevel.resident_dispatches``); this
+    shim keeps the legacy attribute surface (including ``+=``) working.
+    Tests should prefer ``obs.capture()`` over :meth:`reset`.
     """
 
-    host_syncs: int = 0
-    resident_dispatches: int = 0
+    _SYNCS = "multilevel.host_syncs"
+    _DISPATCHES = "multilevel.resident_dispatches"
+
+    @property
+    def host_syncs(self) -> int:
+        return int(_OBS.counter(self._SYNCS).value)
+
+    @host_syncs.setter
+    def host_syncs(self, v: int) -> None:
+        _OBS.counter(self._SYNCS).set_(v)
+
+    @property
+    def resident_dispatches(self) -> int:
+        return int(_OBS.counter(self._DISPATCHES).value)
+
+    @resident_dispatches.setter
+    def resident_dispatches(self, v: int) -> None:
+        _OBS.counter(self._DISPATCHES).set_(v)
 
     def reset(self) -> None:
-        self.host_syncs = 0
-        self.resident_dispatches = 0
+        _OBS.reset(self._SYNCS)
+        _OBS.reset(self._DISPATCHES)
 
 
 SETUP_STATS = SetupStats()
@@ -414,29 +434,32 @@ def _build_hierarchy_impl(a, aggregation: str = "two_phase",
         cur_ell = gh.ell_matrix
         cur_graph, cur_n, cur_nnz = gh, gh.num_vertices, gh.num_entries
     while len(levels) < max_levels - 1 and cur_n > coarse_size:
-        t0 = time.perf_counter()
-        if first_agg is not None:
-            agg, first_agg = first_agg, None
-        else:
-            agg = agg_fn(cur_graph, **agg_kwargs)
-        dt = time.perf_counter() - t0
-        t_agg += dt
-        timings["aggregate"] = timings.get("aggregate", 0.0) + dt
-        if agg.num_aggregates >= cur_n:
-            break
-        if engine == "host":
-            level, cur = _host_level(cur, agg.labels, agg.num_aggregates,
-                                     omega, timings)
-            sizes.append((level.n, level.nnz))
-            cur_graph, cur_n, cur_nnz = cur.graph, cur.num_rows, \
-                cur.num_entries
-        else:
-            level, cur_ell, cur_nnz = _resident_level(
-                cur_ell, cur_nnz, agg.labels, agg.num_aggregates, omega,
-                timings)
-            sizes.append((level.n, level.nnz))
-            cur_graph = Graph(cur_ell)
-            cur_n = agg.num_aggregates
+        with _obs_span("multilevel.level", engine=engine,
+                       level=len(levels), n=cur_n) as lvl_span:
+            t0 = time.perf_counter()
+            if first_agg is not None:
+                agg, first_agg = first_agg, None
+            else:
+                agg = agg_fn(cur_graph, **agg_kwargs)
+            dt = time.perf_counter() - t0
+            t_agg += dt
+            timings["aggregate"] = timings.get("aggregate", 0.0) + dt
+            if agg.num_aggregates >= cur_n:
+                break
+            if engine == "host":
+                level, cur = _host_level(cur, agg.labels,
+                                         agg.num_aggregates, omega, timings)
+                sizes.append((level.n, level.nnz))
+                cur_graph, cur_n, cur_nnz = cur.graph, cur.num_rows, \
+                    cur.num_entries
+            else:
+                level, cur_ell, cur_nnz = _resident_level(
+                    cur_ell, cur_nnz, agg.labels, agg.num_aggregates, omega,
+                    timings)
+                sizes.append((level.n, level.nnz))
+                cur_graph = Graph(cur_ell)
+                cur_n = agg.num_aggregates
+            lvl_span.annotate(num_aggregates=agg.num_aggregates)
         levels.append(level)
 
     # coarsest level

@@ -1,0 +1,68 @@
+"""``repro.obs`` — unified observability: metrics, spans, exporters.
+
+One registry for the whole process::
+
+    from repro import obs
+
+    obs.metrics.counter("mis2.dispatches", labels={"engine": "dense"}).inc()
+    snap = obs.snapshot()                 # execution shape, one object
+    snap.value("mis2.resident_dispatches")
+    print(obs.to_prometheus(snap))        # scrape endpoint body
+
+Context-scoped capture (the test-safe replacement for resetting global
+stats)::
+
+    with obs.capture() as cap:
+        repro.mis2(g, engine="compacted_resident")
+    assert cap.value("mis2.resident_dispatches") == 1
+    assert cap.value("mis2.host_syncs") == 0
+
+Span tracing (nested wall time + metric deltas; the facade attaches the
+root span to every ``Result`` as ``result.provenance``)::
+
+    with obs.span("serve.dispatch", bucket="1024x32"):
+        ...
+
+Every legacy stats object (``HOTLOOP_STATS``, ``SETUP_STATS``,
+``CacheStats``, ``ServeStats``, ``WarmRegistry`` counters, ``Graph``
+conversion counts) is a live view over this registry — reading either
+surface sees the same numbers.
+"""
+from .export import from_json, to_json, to_prometheus
+from .registry import (
+    Capture,
+    CardinalityError,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    Sample,
+    Snapshot,
+    metrics,
+)
+from .spans import Provenance, Span, current_span, recent_spans, span
+
+
+def snapshot() -> Snapshot:
+    """Snapshot the process-wide registry."""
+    return metrics.snapshot()
+
+
+def capture() -> Capture:
+    """Context-scoped delta capture over the process-wide registry."""
+    return metrics.capture()
+
+
+def reset(prefix=None) -> None:
+    """Zero the process-wide registry (or one name prefix).  Prefer
+    :func:`capture` in tests — reset is global and order-dependent."""
+    metrics.reset(prefix)
+
+
+__all__ = [
+    "metrics", "snapshot", "capture", "reset",
+    "MetricsRegistry", "Snapshot", "Sample", "Capture",
+    "Counter", "Gauge", "Histogram", "CardinalityError",
+    "span", "Span", "current_span", "recent_spans", "Provenance",
+    "to_prometheus", "to_json", "from_json",
+]

@@ -21,6 +21,8 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 
+from ..obs import metrics as _OBS
+
 
 class CacheParityError(AssertionError):
     """A sampled cache hit did not match its recomputation bit-for-bit."""
@@ -44,6 +46,13 @@ def _result_nbytes(result) -> int:
 
 @dataclass
 class CacheStats:
+    """Per-cache counters, mirrored into the process-wide ``repro.obs``
+    registry (``serve.cache.*`` counters + ``serve.cache.bytes_used``
+    gauge) so one ``obs.snapshot()`` sees cache traffic next to
+    dispatches and compiles.  The instance fields remain the per-cache
+    truth (two caches in one process split cleanly); the registry carries
+    the process aggregate."""
+
     hits: int = 0
     misses: int = 0
     evictions: int = 0
@@ -51,6 +60,14 @@ class CacheStats:
     parity_checks: int = 0
     parity_failures: int = 0
     bytes_used: int = 0
+
+    def bump(self, name: str, n: int = 1) -> None:
+        setattr(self, name, getattr(self, name) + n)
+        _OBS.counter(f"serve.cache.{name}").inc(n)
+
+    def set_bytes(self, used: int) -> None:
+        self.bytes_used = used
+        _OBS.gauge("serve.cache.bytes_used").set(used)
 
     def as_dict(self) -> dict:
         return {
@@ -93,19 +110,19 @@ class ResultCache:
         accumulator, optionally parity-checked against ``recompute()``.
         """
         if self.max_bytes <= 0 or key not in self._entries:
-            self.stats.misses += 1
+            self.stats.bump("misses")
             return None
         result, _ = self._entries[key]
         self._entries.move_to_end(key)
-        self.stats.hits += 1
+        self.stats.bump("hits")
         if recompute is not None and self.parity_fraction > 0.0:
             self._parity_acc += min(1.0, self.parity_fraction)
             if self._parity_acc >= 1.0:
                 self._parity_acc -= 1.0
-                self.stats.parity_checks += 1
+                self.stats.bump("parity_checks")
                 fresh = recompute()
                 if fresh.digest != result.digest:
-                    self.stats.parity_failures += 1
+                    self.stats.bump("parity_failures")
                     raise CacheParityError(
                         f"cache parity violation for {key}: cached digest "
                         f"{result.digest} != recomputed {fresh.digest}")
@@ -119,15 +136,15 @@ class ResultCache:
             return  # would evict everything and still not fit
         if key in self._entries:
             _, old = self._entries.pop(key)
-            self.stats.bytes_used -= old
+            self.stats.set_bytes(self.stats.bytes_used - old)
         self._entries[key] = (result, nbytes)
-        self.stats.bytes_used += nbytes
-        self.stats.inserts += 1
+        self.stats.set_bytes(self.stats.bytes_used + nbytes)
+        self.stats.bump("inserts")
         while self.stats.bytes_used > self.max_bytes and self._entries:
             _, (_, evicted) = self._entries.popitem(last=False)
-            self.stats.bytes_used -= evicted
-            self.stats.evictions += 1
+            self.stats.set_bytes(self.stats.bytes_used - evicted)
+            self.stats.bump("evictions")
 
     def clear(self) -> None:
         self._entries.clear()
-        self.stats.bytes_used = 0
+        self.stats.set_bytes(0)

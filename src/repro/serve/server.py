@@ -34,10 +34,14 @@ import numpy as np
 from ..api import facade
 from ..api.backend import (
     Backend,
+    backend_platform,
     default_mis2_engine,
     default_multilevel_engine,
     resolve_backend,
 )
+from ..obs import Provenance
+from ..obs import metrics as _OBS
+from ..obs import span as _obs_span
 from ..api.result import Mis2Result
 from ..batch.container import bucket_shape
 from ..core.mis2 import IN, Mis2Options, is_undecided
@@ -78,12 +82,23 @@ class ServerConfig:
 
 @dataclass
 class ServeStats:
+    """Per-server counters, mirrored into the ``repro.obs`` registry
+    (``serve.requests`` / ``serve.dispatches`` / ``serve.batched_graphs``
+    / ``serve.single_dispatches``).  All timestamps come from
+    ``time.perf_counter()`` — the one clock every timing in this repo
+    reports on (uptime windows, cache timings, span durations), so
+    derived intervals are mutually comparable and monotone."""
+
     requests: int = 0
     dispatches: int = 0
     batched_graphs: int = 0
     single_dispatches: int = 0
-    started_at: float = field(default_factory=time.monotonic)
-    window_started_at: float = field(default_factory=time.monotonic)
+    started_at: float = field(default_factory=time.perf_counter)
+    window_started_at: float = field(default_factory=time.perf_counter)
+
+    def bump(self, name: str, n: int = 1) -> None:
+        setattr(self, name, getattr(self, name) + n)
+        _OBS.counter(f"serve.{name}").inc(n)
 
 
 class Server:
@@ -141,14 +156,17 @@ class Server:
         key = (kind, gh.digest, engine_token, _freeze(norm))
         req = PendingRequest(kind=kind, graph=gh, params=norm, engine=engine,
                              backend=be, cache_key=key)
-        with self._lock:
-            self.stats.requests += 1
-            cached = self.cache.lookup(
-                key, recompute=lambda: self._parity_referent(req))
+        with self._lock, _obs_span("serve.submit", kind=kind) as sp:
+            self.stats.bump("requests")
+            with _obs_span("serve.cache_lookup", kind=kind):
+                cached = self.cache.lookup(
+                    key, recompute=lambda: self._parity_referent(req))
             if cached is not None:
+                sp.annotate(cache="hit")
                 req.future.set_result(cached)
                 return req.future
-            self.batcher.add(req, time.monotonic())
+            sp.annotate(cache="miss")
+            self.batcher.add(req, time.perf_counter())
         return req.future
 
     def request(self, kind: str, graph, *, engine: Optional[str] = None,
@@ -173,7 +191,7 @@ class Server:
         """Dispatch every due group; returns the number of groups served."""
         with self._lock:
             groups = self.batcher.due(
-                time.monotonic() if now is None else now, force=force)
+                time.perf_counter() if now is None else now, force=force)
             for _, reqs in groups:
                 self._dispatch(reqs)
             return len(groups)
@@ -207,7 +225,7 @@ class Server:
         while not self._stop.is_set():
             self.pump()
             with self._lock:
-                delay = self.batcher.next_deadline(time.monotonic())
+                delay = self.batcher.next_deadline(time.perf_counter())
             if delay is None:
                 delay = self.config.poll_interval_s
             self._stop.wait(min(delay, self.config.poll_interval_s)
@@ -266,14 +284,16 @@ class Server:
         return self._direct(req)
 
     def _dispatch(self, reqs: list[PendingRequest]) -> None:
-        self.stats.dispatches += 1
+        self.stats.bump("dispatches")
         try:
-            if len(reqs) == 1 and self.config.single_fast_path:
-                self.stats.single_dispatches += 1
-                results = [self._direct(reqs[0])]
-            else:
-                self.stats.batched_graphs += len(reqs)
-                results = self._batched(reqs)
+            with _obs_span("serve.dispatch", kind=reqs[0].kind,
+                           group=len(reqs)):
+                if len(reqs) == 1 and self.config.single_fast_path:
+                    self.stats.bump("single_dispatches")
+                    results = [self._direct(reqs[0])]
+                else:
+                    self.stats.bump("batched_graphs", len(reqs))
+                    results = self._batched(reqs)
         except BaseException as err:    # noqa: BLE001 - fan out to callers
             for req in reqs:
                 if not req.future.done():
@@ -331,22 +351,31 @@ class Server:
         for i, gh in enumerate(graphs):
             by_shape.setdefault(bucket_shape(gh), []).append(i)
         out: list = [None] * len(graphs)
-        for (rows, width), idxs in sorted(by_shape.items()):
-            nv = [graphs[i].num_vertices for i in idxs]
-            nbrs = np.stack([self._padded_np(graphs[i], rows, width)
-                             for i in idxs])
-            valid = np.arange(rows)[None, :] < np.asarray(nv)[:, None]
-            bits = np.asarray([id_bits(v) for v in nv], dtype=np.uint32)
-            t, iters = self.warm.run_mis2_bucket(
-                nbrs, valid, bits, options.priority, options.max_iters)
-            t_np, iters_np = np.asarray(t), np.asarray(iters)
-            for j, gi in enumerate(idxs):
-                tj = t_np[j, :nv[j]]
-                out[gi] = (tj == np.uint32(IN), int(iters_np[j]),
-                           not is_undecided(tj).any())
+        with _obs_span("serve.batch_mis2", graphs=len(graphs),
+                       buckets=len(by_shape)) as sp:
+            for (rows, width), idxs in sorted(by_shape.items()):
+                nv = [graphs[i].num_vertices for i in idxs]
+                nbrs = np.stack([self._padded_np(graphs[i], rows, width)
+                                 for i in idxs])
+                valid = np.arange(rows)[None, :] < np.asarray(nv)[:, None]
+                bits = np.asarray([id_bits(v) for v in nv], dtype=np.uint32)
+                t, iters = self.warm.run_mis2_bucket(
+                    nbrs, valid, bits, options.priority, options.max_iters)
+                t_np, iters_np = np.asarray(t), np.asarray(iters)
+                for j, gi in enumerate(idxs):
+                    tj = t_np[j, :nv[j]]
+                    out[gi] = (tj == np.uint32(IN), int(iters_np[j]),
+                               not is_undecided(tj).any())
         per = (time.perf_counter() - t0) / max(1, len(out))
-        return [Mis2Result(in_set, iters, conv, per, engine="dense_batched")
-                for in_set, iters, conv in out]
+        results = [Mis2Result(in_set, iters, conv, per,
+                              engine="dense_batched")
+                   for in_set, iters, conv in out]
+        span_dict = sp.to_dict()
+        platform = backend_platform(resolve_backend(self.config.backend))
+        for r in results:
+            r.provenance = Provenance("mis2", "dense_batched", platform,
+                                      r.digest, span_dict)
+        return results
 
     # -- observability ------------------------------------------------------
 
@@ -354,13 +383,20 @@ class Server:
         """Start a new uptime accounting window (compile churn counters)."""
         with self._lock:
             self.warm.reset_window()
-            self.stats.window_started_at = time.monotonic()
+            self.stats.window_started_at = time.perf_counter()
 
     def server_stats(self) -> dict:
         """Counters for dashboards/tests: requests, batching, cache, jit
-        churn (total and since ``reset_window()``)."""
+        churn (total and since ``reset_window()``).
+
+        Every counter here is also live in the process-wide ``repro.obs``
+        registry (``serve.*`` / ``serve.cache.*`` / ``serve.warm.*``) —
+        ``obs.snapshot()`` or the Prometheus exporter sees the same
+        numbers without going through a ``Server`` reference; this dict
+        is the per-instance view.  All intervals are ``perf_counter``
+        deltas (monotone, same clock as spans and cache timings)."""
         with self._lock:
-            now = time.monotonic()
+            now = time.perf_counter()
             return {
                 "requests": self.stats.requests,
                 "dispatches": self.stats.dispatches,

@@ -51,7 +51,11 @@ from ..core.mis2 import (
 from ..core.tuples import IN, OUT, id_bits, is_undecided
 from ..graphs.csr import CSRGraph, csr_from_coo, ensure_self_loops
 from ..graphs.handle import Graph, as_graph
+from ..api.backend import backend_platform
 from ..api.result import Mis2Result
+from ..obs import Provenance
+from ..obs import metrics as _OBS
+from ..obs import span as _obs_span
 
 
 @dataclass
@@ -153,10 +157,28 @@ class StreamSession:
         """Apply symmetric edge insertions/removals and repair the set.
 
         Returns the updated facade ``Mis2Result`` (also stored as
-        ``self.result``); per-call accounting lands in ``self.last_repair``.
+        ``self.result``); per-call accounting lands in ``self.last_repair``
+        and mirrors into the ``repro.obs`` registry (``serve.repair.*``);
+        the result carries a span-tree ``provenance`` like facade results.
         Self-loops cannot be removed (closed-neighborhood semantics) and
         the vertex set is fixed — grow-by-vertex is a resize, not a delta.
         """
+        with _obs_span("serve.repair") as sp:
+            result = self._apply_delta_impl(edge_adds, edge_removes)
+            st = self.last_repair
+            sp.annotate(mode=st.mode, touched=st.touched,
+                        reactivated=st.reactivated, expansions=st.expansions)
+            _OBS.counter("serve.repair.deltas",
+                         labels={"mode": st.mode}).inc()
+            _OBS.counter("serve.repair.reactivated").inc(st.reactivated)
+            _OBS.counter("serve.repair.expansions").inc(st.expansions)
+            _OBS.counter("serve.repair.iterations").inc(st.iterations)
+        result.provenance = Provenance(
+            "mis2", result.engine, backend_platform(), result.digest,
+            sp.to_dict())
+        return result
+
+    def _apply_delta_impl(self, edge_adds=None, edge_removes=None):
         t_start = time.perf_counter()
         adds = _edge_keys(edge_adds, self._v)
         removes = _edge_keys(edge_removes, self._v)

@@ -32,6 +32,7 @@ import numpy as np
 
 from ..batch.pipeline import _mis2_bucket_run
 from ..core.mis2 import MAX_ITERS_DEFAULT
+from ..obs import metrics as _OBS
 
 
 @dataclass(frozen=True)
@@ -86,6 +87,7 @@ class WarmRegistry:
                 *shapes, priority=spec.priority, max_iters=spec.max_iters)
             self._exe[spec.key] = lowered.compile()
             self.startup_compiles += 1
+            _OBS.counter("serve.warm.startup_compiles").inc()
             done += 1
         return done
 
@@ -131,7 +133,9 @@ class WarmRegistry:
         key = self._find(members, rows, width, priority, max_iters)
         if key is None:
             cold = (members, rows, width, priority, max_iters)
-            self._cold.add(cold)
+            if cold not in self._cold:
+                self._cold.add(cold)
+                _OBS.counter("serve.warm.runtime_compiles").inc()
             return _mis2_bucket_run(neighbors, active, bits, priority,
                                     max_iters)
         cap = key[0]

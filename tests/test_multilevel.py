@@ -7,8 +7,8 @@ pair:
   coarse colors bit-identical across engines, over laplace3d + an ER
   Laplacian x all three priorities x >= 3 levels;
 * execution shape: the resident setup performs **zero** matrix-sized
-  host syncs (``SETUP_STATS`` counter-asserted) and a bounded number of
-  jitted dispatches (7 per built level);
+  host syncs (``obs.capture()`` counter-asserted) and a bounded number
+  of jitted dispatches (7 per built level);
 * the device Galerkin product agrees with the scipy reference
   (``graphs.ops.galerkin_coarse_matrix``) on random CSR matrices
   including empty rows, singleton aggregates and rectangular P
@@ -36,11 +36,11 @@ from repro.api import (  # noqa: E402
     list_engines,
     misk,
 )
-from repro.core.mis2 import HOTLOOP_STATS  # noqa: E402
+from repro import obs  # noqa: E402
 from repro.graphs import er_laplacian, laplace3d  # noqa: E402
 from repro.graphs.csr import CSRMatrix, csr_from_coo  # noqa: E402
 from repro.graphs.ops import galerkin_coarse_matrix  # noqa: E402
-from repro.multilevel import SETUP_STATS, galerkin  # noqa: E402
+from repro.multilevel import galerkin  # noqa: E402
 from repro.multilevel.packing import (  # noqa: E402
     pack_clusters_device,
     pack_clusters_host,
@@ -66,8 +66,8 @@ def test_amg_setup_digest_parity(matrices, priority):
     opts = Mis2Options(priority=priority)
     for name, a in matrices.items():
         host = amg_setup(a, engine="host", options=opts, **LEVEL_KW)
-        SETUP_STATS.reset()
-        res = amg_setup(a, engine="resident", options=opts, **LEVEL_KW)
+        with obs.capture() as cap:
+            res = amg_setup(a, engine="resident", options=opts, **LEVEL_KW)
         assert host.num_levels >= 3, (name, host.level_sizes)
         assert host.num_levels == res.num_levels
         assert host.level_sizes == res.level_sizes
@@ -75,7 +75,7 @@ def test_amg_setup_digest_parity(matrices, priority):
         assert host.level_digests == res.level_digests, (name, priority)
         # zero matrix-sized host syncs in the resident setup path,
         # 7 dispatches per built (non-coarsest) level
-        assert SETUP_STATS.host_syncs == 0
+        assert cap.value("multilevel.host_syncs") == 0
         assert res.dispatches == 7 * (res.num_levels - 1)
 
 
@@ -109,12 +109,12 @@ def test_amg_setup_vcycle_equivalence(matrices):
 
 
 def test_host_syncs_counted_on_host_engine(matrices):
-    SETUP_STATS.reset()
-    host = amg_setup(matrices["laplace3d"], engine="host", **LEVEL_KW)
+    with obs.capture() as cap:
+        host = amg_setup(matrices["laplace3d"], engine="host", **LEVEL_KW)
     # 3 matrix-sized round-trips per built level (the one-time coarsest
     # densify is boundary work, counted by neither engine)
-    assert SETUP_STATS.host_syncs == 3 * (host.num_levels - 1)
-    assert SETUP_STATS.resident_dispatches == 0
+    assert cap.value("multilevel.host_syncs") == 3 * (host.num_levels - 1)
+    assert cap.value("multilevel.resident_dispatches") == 0
 
 
 # ---------------------------------------------------------------------------
@@ -124,9 +124,9 @@ def test_host_syncs_counted_on_host_engine(matrices):
 def test_cluster_gs_setup_parity(matrices):
     for name, a in matrices.items():
         host = cluster_gs_setup(a, engine="host")
-        SETUP_STATS.reset()
-        res = cluster_gs_setup(a, engine="resident")
-        assert SETUP_STATS.host_syncs == 0
+        with obs.capture() as cap:
+            res = cluster_gs_setup(a, engine="resident")
+        assert cap.value("multilevel.host_syncs") == 0
         assert host.digest == res.digest, name            # labels
         assert host.colors_digest == res.colors_digest    # coarse colors
         assert host.num_colors == res.num_colors
@@ -240,13 +240,13 @@ def test_galerkin_empty_rows_and_singletons():
 def test_misk_engines_bit_identical(k):
     g = Graph(laplace3d(8).graph)
     dense = misk(g, k=k, engine="dense")
-    HOTLOOP_STATS.reset()
-    res = misk(g, k=k, engine="resident")
+    with obs.capture() as cap:
+        res = misk(g, k=k, engine="resident")
     assert dense.digest == res.digest
     assert dense.iterations == res.iterations
     assert res.num_compiles == 1
-    assert HOTLOOP_STATS.resident_dispatches == 1
-    assert HOTLOOP_STATS.host_syncs == 0
+    assert cap.value("mis2.resident_dispatches") == 1
+    assert cap.value("mis2.host_syncs") == 0
 
 
 def test_misk_registry_and_default():

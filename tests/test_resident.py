@@ -8,8 +8,9 @@ import pytest
 import jax.numpy as jnp
 
 from conftest import verify_mis2
+from repro import obs
 from repro.api import Backend, Graph, Mis2Options, coarsen, color, mis2
-from repro.core.mis2 import HOTLOOP_STATS, compact_worklist
+from repro.core.mis2 import compact_worklist
 from repro.graphs import csr_from_coo, laplace3d, random_uniform_graph
 
 PRIORITIES = ("fixed", "xorshift", "xorshift_star")
@@ -96,24 +97,24 @@ def test_resident_rejects_no_worklist_ablation():
 def test_resident_zero_host_syncs_one_dispatch():
     g = graph_cases()["er_random"]
     mis2(g, engine="compacted_resident")        # warm the jit cache
-    HOTLOOP_STATS.reset()
-    r = mis2(g, engine="compacted_resident")
+    with obs.capture() as cap:
+        r = mis2(g, engine="compacted_resident")
     assert r.iterations > 1                      # a real multi-round solve
-    assert HOTLOOP_STATS.host_syncs == 0
-    assert HOTLOOP_STATS.resident_dispatches == 1
-    HOTLOOP_STATS.reset()
-    mis2(g, engine="pallas_resident")
-    assert HOTLOOP_STATS.host_syncs == 0
-    assert HOTLOOP_STATS.resident_dispatches == 1
+    assert cap.value("mis2.host_syncs") == 0
+    assert cap.value("mis2.resident_dispatches") == 1
+    with obs.capture() as cap:
+        mis2(g, engine="pallas_resident")
+    assert cap.value("mis2.host_syncs") == 0
+    assert cap.value("mis2.resident_dispatches") == 1
 
 
 def test_host_driven_engine_pays_syncs_every_round():
     g = graph_cases()["er_random"]
-    HOTLOOP_STATS.reset()
-    r = mis2(g, engine="compacted")
+    with obs.capture() as cap:
+        r = mis2(g, engine="compacted")
     # 2 transfers (T and M) per fixed-point round to rebuild worklists
-    assert HOTLOOP_STATS.host_syncs == 2 * r.iterations
-    assert HOTLOOP_STATS.resident_dispatches == 0
+    assert cap.value("mis2.host_syncs") == 2 * r.iterations
+    assert cap.value("mis2.resident_dispatches") == 0
 
 
 def test_num_compiles_accounting():

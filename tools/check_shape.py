@@ -1,0 +1,172 @@
+#!/usr/bin/env python
+"""Execution-shape regression gates over the ``repro.obs`` registry.
+
+Each gate runs a small workload under ``obs.capture()`` and asserts the
+*shape* of the execution — the counters the whole optimization story hangs
+on — by diffing registry snapshots:
+
+* ``resident``   the device-resident MIS-2 hot loop is exactly ONE jitted
+  dispatch with ZERO in-loop host syncs (PR 4's contract).
+* ``serve``      a warmed server keeps the request path compile-free:
+  dispatching distinct graphs in a configured bucket shape performs ZERO
+  runtime compiles (PR 6's contract).
+* ``dist``       the sharded engine's collective traffic matches the §V-C
+  analytic model byte-for-byte: the registry delta equals
+  ``collective_bytes_per_iteration(V, P) x iterations`` and the result's
+  own ``collectives`` accounting.
+
+Usage::
+
+    PYTHONPATH=src python tools/check_shape.py [--gates resident,serve,dist]
+
+Prints one PASS/FAIL line per gate; exits nonzero if any gate fails.
+CI runs this in the test lane (the ``obs-gates`` step).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+class GateFailure(AssertionError):
+    pass
+
+
+def _expect(cond: bool, msg: str) -> None:
+    if not cond:
+        raise GateFailure(msg)
+
+
+# ---------------------------------------------------------------------------
+# gate: resident — 1 dispatch, 0 host syncs per solve
+# ---------------------------------------------------------------------------
+
+def gate_resident() -> str:
+    import repro
+    from repro import obs
+    from repro.graphs.generators import random_uniform_graph
+
+    g = repro.Graph(random_uniform_graph(4000, 8.0, seed=7))
+    repro.mis2(g, engine="compacted_resident")      # warm the jit cache
+    with obs.capture() as cap:
+        r = repro.mis2(g, engine="compacted_resident")
+    _expect(r.iterations > 1, "workload too easy: need a multi-round solve")
+    dispatches = cap.value("mis2.resident_dispatches")
+    syncs = cap.value("mis2.host_syncs")
+    _expect(dispatches == 1,
+            f"resident solve took {dispatches} dispatches, want exactly 1")
+    _expect(syncs == 0,
+            f"resident solve paid {syncs} in-loop host syncs, want 0")
+    return (f"1 dispatch, 0 host syncs across {r.iterations} rounds "
+            f"(engine={r.engine})")
+
+
+# ---------------------------------------------------------------------------
+# gate: serve — warmed buckets keep the request path compile-free
+# ---------------------------------------------------------------------------
+
+def gate_serve() -> str:
+    import repro
+    from repro import obs
+    from repro.graphs.generators import random_uniform_graph
+    from repro.serve import Server, ServerConfig, warm_buckets_for
+
+    graphs = [repro.Graph(random_uniform_graph(600, 6.0, seed=s))
+              for s in range(4)]
+    config = ServerConfig(max_batch=4, max_delay_s=0.0,
+                          warm_buckets=warm_buckets_for(graphs),
+                          single_fast_path=False)
+    server = Server(config)
+    try:
+        with obs.capture() as cap:
+            futures = [server.submit("mis2", g) for g in graphs]
+            server.flush()
+            results = [f.result(timeout=120) for f in futures]
+        _expect(all(r.converged for r in results), "serve results diverged")
+        compiles = cap.value("serve.warm.runtime_compiles")
+        dispatches = cap.value("serve.dispatches")
+        _expect(dispatches >= 1, "server never dispatched")
+        _expect(compiles == 0,
+                f"warm request path paid {compiles} runtime compiles, want 0")
+    finally:
+        server.stop()
+    return (f"{len(graphs)} graphs through warmed buckets: "
+            f"0 request-path compiles ({int(dispatches)} dispatches)")
+
+
+# ---------------------------------------------------------------------------
+# gate: dist — registry collective bytes == analytic model == result record
+# ---------------------------------------------------------------------------
+
+def gate_dist() -> str:
+    import jax
+
+    import repro
+    from repro import obs
+    from repro.core.dist import collective_bytes_per_iteration
+    from repro.graphs.generators import random_uniform_graph
+
+    devices = jax.devices()
+    v = 2048
+    g = repro.Graph(random_uniform_graph(v, 8.0, seed=11))
+    with obs.capture() as cap:
+        r = repro.mis2(g, engine="distributed")
+    variant = r.collectives["variant"]
+    got = cap.value("dist.collective_bytes", {"variant": variant})
+    per = collective_bytes_per_iteration(v, len(devices),
+                                         variant == "single_gather")
+    want = per["result_bytes_per_iteration"] * r.iterations
+    _expect(got == want,
+            f"registry recorded {got} collective bytes, analytic model says "
+            f"{want} ({variant}, {len(devices)} devices, "
+            f"{r.iterations} iterations)")
+    _expect(got == r.collectives["result_bytes_total"],
+            f"registry ({got}) disagrees with the result's own accounting "
+            f"({r.collectives['result_bytes_total']})")
+    return (f"{int(got)} bytes == analytic model == result record "
+            f"({variant}, {len(devices)} devices, {r.iterations} iters)")
+
+
+GATES = {
+    "resident": gate_resident,
+    "serve": gate_serve,
+    "dist": gate_dist,
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--gates", default=",".join(GATES),
+                    help="comma-separated subset of " + ",".join(GATES))
+    args = ap.parse_args()
+    names = [n.strip() for n in args.gates.split(",") if n.strip()]
+    unknown = [n for n in names if n not in GATES]
+    if unknown:
+        print(f"unknown gate(s): {', '.join(unknown)}", file=sys.stderr)
+        return 2
+    failed = 0
+    for name in names:
+        try:
+            detail = GATES[name]()
+        except GateFailure as e:
+            print(f"FAIL  {name:<9} {e}")
+            failed += 1
+        except Exception:
+            print(f"FAIL  {name:<9} crashed:")
+            traceback.print_exc()
+            failed += 1
+        else:
+            print(f"PASS  {name:<9} {detail}")
+    if failed:
+        print(f"{failed}/{len(names)} execution-shape gates failed")
+        return 1
+    print(f"all {len(names)} execution-shape gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
