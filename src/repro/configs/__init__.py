@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM model configs, no graph-facade consumers
 """Architecture config registry: --arch <id> -> ModelConfig."""
 from __future__ import annotations
 

@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM model configs, no graph-facade consumers
 """chameleon-34b [arXiv:2405.09818; unverified] — early-fusion VLM backbone.
 
 Modality note (assignment): the VQ image tokenizer is a STUB — inputs are

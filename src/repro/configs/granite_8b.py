@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM model configs, no graph-facade consumers
 """granite-8b [arXiv:2405.04324; hf] — llama-arch dense, code model."""
 from repro.models.config import ModelConfig
 

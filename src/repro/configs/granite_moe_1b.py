@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM model configs, no graph-facade consumers
 """granite-moe-1b-a400m [hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
 — 32 experts, top-8."""
 from repro.models.config import ModelConfig

@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM model configs, no graph-facade consumers
 """llama3.2-3b [hf:meta-llama/Llama-3.2-*; unverified] — small llama3 dense."""
 from repro.models.config import ModelConfig
 

@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM model configs, no graph-facade consumers
 """mamba2-780m [arXiv:2405.21060; unverified] — SSD, attention-free."""
 from repro.models.config import ModelConfig
 

@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM model configs, no graph-facade consumers
 """qwen2-moe-a2.7b [hf:Qwen/Qwen1.5-MoE-A2.7B; hf]
 — 60 routed experts top-4 + 4 shared experts (shared hidden 4x1408=5632)."""
 from repro.models.config import ModelConfig

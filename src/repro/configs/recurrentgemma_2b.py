@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM model configs, no graph-facade consumers
 """recurrentgemma-2b [arXiv:2402.19427; hf] — RG-LRU + local attention 1:2."""
 from repro.models.config import ModelConfig
 

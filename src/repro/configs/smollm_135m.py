@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM model configs, no graph-facade consumers
 """smollm-135m [hf:HuggingFaceTB/SmolLM-135M; hf] — llama-arch small dense."""
 from repro.models.config import ModelConfig
 

@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM model configs, no graph-facade consumers
 """smollm-360m [hf:HuggingFaceTB/SmolLM-135M family; hf] — llama-arch small dense."""
 from repro.models.config import ModelConfig
 

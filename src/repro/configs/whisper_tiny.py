@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM model configs, no graph-facade consumers
 """whisper-tiny [arXiv:2212.04356; unverified] — enc-dec audio backbone.
 
 Modality note (assignment): the conv/mel frontend is a STUB — input_specs

@@ -589,7 +589,7 @@ def _mis2_compacted_impl(graph, active: Optional[np.ndarray] = None,
             t_np = np.asarray(t)
             und = is_undecided(t_np)
             live = np.asarray(m) != U32MAX
-            HOTLOOP_STATS.host_syncs += 2    # t + m pulled to rebuild worklists
+            _OBS.counter(HotLoopStats._SYNCS).inc(2)  # t + m pulled to rebuild worklists
         else:
             ts, tr, ti = _refresh_rows_unpacked(ts, tr, ti, wl1, np.uint32(it),
                                                 options.priority, b)
@@ -606,7 +606,7 @@ def _mis2_compacted_impl(graph, active: Optional[np.ndarray] = None,
             t_np = np.asarray(ts)
             und = t_np == S_UND
             live = np.asarray(ms) != S_OUT
-            HOTLOOP_STATS.host_syncs += 2    # ts + ms pulled to rebuild worklists
+            _OBS.counter(HotLoopStats._SYNCS).inc(2)  # ts + ms pulled to rebuild worklists
         wl1_np = np.flatnonzero(und).astype(np.int32)
         wl2_np = np.flatnonzero(live).astype(np.int32)
         it += 1
@@ -831,7 +831,7 @@ def _mis2_resident_impl(graph, active: Optional[np.ndarray] = None,
             t, it, n1 = _resident_csr_fixed_point(
                 edge_rows, edge_cols, active_j, priority=options.priority,
                 packed=options.packed, max_iters=options.max_iters, b=b, v=v)
-        HOTLOOP_STATS.resident_dispatches += 1
+        _OBS.counter(HotLoopStats._DISPATCHES).inc()
         jax.block_until_ready(t)    # span duration covers device execution
         sp.annotate(iterations=int(it))
 

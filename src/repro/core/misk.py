@@ -122,15 +122,16 @@ def _misk_resident_fixpoint(neighbors, k: int, priority: str, max_iters: int):
 def _misk_resident_impl(graph, k: int = 2, priority: str = "xorshift_star",
                         max_iters: int = 256) -> Mis2Result:
     """Engine entry for ``misk: resident`` — one jitted dispatch per solve
-    (counted in ``HOTLOOP_STATS.resident_dispatches``)."""
-    from .mis2 import HOTLOOP_STATS
+    (counted in ``mis2.resident_dispatches``)."""
+    from ..obs import metrics as _obs
+    from .mis2 import HotLoopStats
 
     if k < 1:
         raise ValueError("k >= 1")
     ell = as_ell_graph(graph)
     t, iters, n = _misk_resident_fixpoint(ell.neighbors, k, priority,
                                           max_iters)
-    HOTLOOP_STATS.resident_dispatches += 1
+    _obs.counter(HotLoopStats._DISPATCHES).inc()
     t_np = np.asarray(t)
     return Mis2Result(t_np == np.uint32(IN), int(iters), int(n) == 0,
                       num_compiles=1)

@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM data pipeline, test-only surface
 from .pipeline import DataConfig, SyntheticTokens
 
 __all__ = ["DataConfig", "SyntheticTokens"]

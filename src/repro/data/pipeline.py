@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM data pipeline, test-only surface
 """Deterministic, seekable synthetic data pipeline.
 
 ``batch_at(step)`` is a pure function of (seed, step) via counter-based

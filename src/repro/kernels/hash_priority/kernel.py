@@ -20,6 +20,7 @@ from ...core.tuples import pack
 BLOCK = 1024
 
 
+# repro-lint: ignore[RL106] elementwise, no gathered indexing; tail lanes drop at BlockSpec write
 def _hash_pack_kernel(it_ref, ids_ref, out_ref, *, b: int):
     ids = ids_ref[...]
     prio = priorities_xorshift_star(it_ref[0], ids)

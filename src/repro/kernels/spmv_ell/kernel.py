@@ -17,12 +17,20 @@ from jax.experimental import pallas as pl
 BLOCK_ROWS = 256
 
 
-def _spmv_kernel(cols_ref, vals_ref, x_ref, y_ref):
-    cols = cols_ref[...]                        # [B, D] int32
-    vals = vals_ref[...]                        # [B, D] f32
+def _spmv_kernel(cols_ref, vals_ref, x_ref, y_ref, *, num_rows: int):
+    """Rows past ``num_rows`` (the ragged final block) gather from col 0
+    with zero weight — compiled Pallas pads partial blocks with
+    unspecified values, so an unmasked ``jnp.take`` would read out of
+    bounds on hardware while interpret mode (zero padding) stays green."""
+    i = pl.program_id(0)
+    block = cols_ref.shape[0]
+    valid = i * block + jnp.arange(block) < num_rows
+    cols = jnp.where(valid[:, None], cols_ref[...], 0)      # [B, D] int32
+    vals = jnp.where(valid[:, None],
+                     vals_ref[...].astype(jnp.float32), 0.0)  # [B, D] f32
     x = x_ref[...]                              # [V]  (VMEM-resident)
     xg = jnp.take(x, cols.reshape(-1), axis=0).reshape(cols.shape)
-    y_ref[...] = jnp.sum(vals.astype(jnp.float32) * xg.astype(jnp.float32),
+    y_ref[...] = jnp.sum(vals * xg.astype(jnp.float32),
                          axis=1).astype(y_ref.dtype)
 
 
@@ -34,7 +42,7 @@ def spmv_ell_pallas(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray, *,
     block = min(block_rows, v)
     grid = pl.cdiv(v, block)
     return pl.pallas_call(
-        _spmv_kernel,
+        functools.partial(_spmv_kernel, num_rows=v),
         grid=(grid,),
         in_specs=[
             pl.BlockSpec((block, d), lambda i: (i, 0)),

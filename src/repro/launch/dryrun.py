@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM dry-run harness, exercised only by tests
 """Multi-pod dry-run: lower + compile every (architecture x shape x mesh)
 cell against the production mesh and record memory / while-aware HLO cost /
 collective analyses (EXPERIMENTS.md §Dry-run, §Roofline).
@@ -49,11 +50,14 @@ from repro.models import get_model
 from repro.models.config import LM_SHAPES, cell_applicable
 from repro.train import AdamWConfig, adamw_init, make_train_step
 
-# TPU v5e hardware constants (EXPERIMENTS.md §Roofline)
-PEAK_FLOPS_BF16 = 197e12        # per chip
-HBM_BW = 819e9                  # bytes/s per chip
-ICI_LINK_BW = 50e9              # bytes/s per link (one direction)
-HBM_BYTES = 16e9                # v5e HBM per chip
+# TPU v5e hardware constants — canonical home is hlo_analysis (live);
+# re-exported here for the seed-era import surface
+from repro.launch.hlo_analysis import (  # noqa: E402, F401
+    HBM_BW,
+    HBM_BYTES,
+    ICI_LINK_BW,
+    PEAK_FLOPS_BF16,
+)
 
 
 def count_params(tree) -> int:
@@ -247,7 +251,7 @@ def _lower_inner(cfg, cell, model, mesh, nd, rules, rec, microbatches, zero1,
                 for k, v in batch.items()}
     batch_spec = _with_sharding(batch, batch_sh)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     if cell.kind == "train":
         opt_spec = jax.eval_shape(adamw_init, params_spec)
         opt_sh = opt_state_shardings(mesh, param_sh,
@@ -293,15 +297,15 @@ def _lower_inner(cfg, cell, model, mesh, nd, rules, rec, microbatches, zero1,
                 donate_argnums=(1,),
             ).lower(params_spec, cache_spec, batch_spec)
         rec["model_flops"] = 2 * n_active * cell.global_batch
-    rec["lower_s"] = round(time.time() - t0, 2)
+    rec["lower_s"] = round(time.perf_counter() - t0, 2)
 
     if not compile_:
         rec["ok"] = True
         return rec
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    rec["compile_s"] = round(time.time() - t0, 2)
+    rec["compile_s"] = round(time.perf_counter() - t0, 2)
 
     mem = compiled.memory_analysis()
     rec["memory_analysis"] = {
@@ -325,9 +329,9 @@ def _lower_inner(cfg, cell, model, mesh, nd, rules, rec, microbatches, zero1,
         if isinstance(v, (int, float)) and k in ("flops", "bytes accessed")}
     hlo = compiled.as_text()
     rec["hlo_bytes"] = len(hlo)
-    t0 = time.time()
+    t0 = time.perf_counter()
     hc = hlo_analyze(hlo, nd)
-    rec["analyze_s"] = round(time.time() - t0, 2)
+    rec["analyze_s"] = round(time.perf_counter() - t0, 2)
     rec["hlo_cost"] = {"flops": hc["flops"], "bytes": hc["bytes"]}
     rec["collectives"] = hc["collectives"]
 

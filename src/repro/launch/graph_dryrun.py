@@ -26,9 +26,13 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.dist import _mis2_local_fixpoint, _shard_map
-from repro.launch.hlo_analysis import analyze as hlo_analyze
+from repro.launch.hlo_analysis import (
+    HBM_BW,
+    ICI_LINK_BW,
+    PEAK_FLOPS_BF16,
+    analyze as hlo_analyze,
+)
 from repro.launch.mesh import make_production_mesh
-from repro.launch.dryrun import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16
 
 
 def lower_variant(v: int, d: int, mesh, single_gather: bool,
@@ -64,9 +68,9 @@ def lower_variant(v: int, d: int, mesh, single_gather: bool,
             jax.ShapeDtypeStruct(a.shape, a.dtype,
                                  sharding=NamedSharding(mesh, s))
             for a, s in zip(args, in_specs)])
-        t0 = time.time()
+        t0 = time.perf_counter()
         compiled = lowered.compile()
-        compile_s = time.time() - t0
+        compile_s = time.perf_counter() - t0
     hc = hlo_analyze(compiled.as_text(), nd)
     mem = compiled.memory_analysis()
     wire = sum(c["wire_bytes"] for c in hc["collectives"].values())

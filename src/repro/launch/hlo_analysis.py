@@ -23,6 +23,13 @@ from __future__ import annotations
 import json
 import re
 from dataclasses import dataclass, field
+
+# TPU v5e hardware constants (EXPERIMENTS.md §Roofline) — shared by every
+# dry-run/roofline consumer so the analytic cost model has one source
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_LINK_BW = 50e9              # bytes/s per link (one direction)
+HBM_BYTES = 16e9                # v5e HBM per chip
 from functools import lru_cache
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,

@@ -1,3 +1,4 @@
+# repro-lint: legacy deprecation shim for repro.serve
 """Deprecated shim: the serving layer moved to :mod:`repro.serve`.
 
 The seed's LM prefill/decode serving driver lived here; the repo's

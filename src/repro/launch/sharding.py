@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM sharding rules, used only by the quarantined LM stack
 """Logical-axis -> mesh-axis sharding rules (GSPMD / pjit).
 
 Every model exposes ``param_axes()``: a tree congruent with its params whose

@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM train driver, exercised only by the fault-tolerance tests
 """Training driver: any --arch, any mesh, checkpoint/restart, preemption
 handling, straggler hooks.
 
@@ -120,12 +121,12 @@ def main(argv=None):
     stragglers = 0
     with mesh:
         for step in range(start, args.steps):
-            t0 = time.time()
+            t0 = time.perf_counter()
             batch = {k: jax.numpy.asarray(v)
                      for k, v in pipeline.batch_at(step).items()}
             params, opt_state, metrics = step_jit(params, opt_state, batch)
             metrics = {k: float(v) for k, v in metrics.items()}
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             times.append(dt)
             med = float(np.median(times[-50:]))
             if len(times) > 5 and dt > args.straggler_factor * med:

@@ -1,0 +1,519 @@
+"""The ``repro.lint`` analysis engine.
+
+One :class:`Project` is built per run: every target file is parsed once,
+imports are resolved to qualified names, a call graph is grown over the
+module-level functions, and the **jit context** — the set of functions
+reachable from any ``jax.jit`` site, ``shard_map``/``pallas_call``
+wrapper, or ``lax`` control-flow body — is computed by a breadth-first
+walk.  Rules receive the project plus one :class:`SourceFile` at a time
+and emit :class:`~repro.lint.findings.Finding` values; the engine owns
+suppression matching, legacy quarantine tags, and the module-level
+reachability report that backs the quarantine checks.
+
+The analyzer is deliberately *syntactic*: it never imports the code under
+analysis, so it runs in milliseconds, needs no jax, and can lint a file
+that would crash on import.  The price is approximation — the call graph
+is best-effort (dynamic dispatch through the engine registry is invisible
+to it) and tracedness is inferred, not typed.  Rules are therefore tuned
+for precision over recall and every rule supports inline suppression with
+a mandatory reason (``# repro-lint: ignore[RLxxx] why``).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from .findings import Finding, parse_legacy_tag, parse_suppressions
+
+# ---------------------------------------------------------------------------
+# call sites that open a traced (jit) context for function-valued arguments
+# ---------------------------------------------------------------------------
+
+#: resolved callee suffixes whose function arguments are traced entry points
+JIT_WRAPPER_SUFFIXES = (
+    "jax.jit", "jax.pmap", "shard_map", "pallas_call", "jax.checkpoint",
+    "jax.remat", "jax.grad", "jax.value_and_grad", "jax.vmap",
+)
+
+#: resolved callee suffixes whose function arguments are *loop bodies* —
+#: every parameter of such a closure is a traced value by construction
+LOOP_BODY_SUFFIXES = (
+    "while_loop", "fori_loop", "scan", "cond", "switch", "associated_scan",
+)
+
+
+def _name_chain(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` -> "a.b.c"; returns None for non-trivial expressions."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+@dataclass
+class FunctionInfo:
+    qualname: str               # "repro.core.mis2.HotLoopStats.reset"
+    module: str                 # "repro.core.mis2" (or pseudo-module)
+    node: ast.AST               # FunctionDef | AsyncFunctionDef | Lambda
+    src: "SourceFile"
+    decorators: List[str] = field(default_factory=list)
+    static_argnames: Set[str] = field(default_factory=set)
+    jit_entry: bool = False     # directly decorated / passed to jax.jit
+    loop_body: bool = False     # passed to lax.while_loop / scan / ...
+    kernel_body: bool = False   # pallas kernel body (``*_ref`` params)
+    calls: Set[str] = field(default_factory=set)     # resolved callees
+    refs: Set[str] = field(default_factory=set)      # referenced functions
+
+    @property
+    def params(self) -> List[str]:
+        a = self.node.args
+        names = [p.arg for p in (a.posonlyargs + a.args + a.kwonlyargs)]
+        if a.vararg:
+            names.append(a.vararg.arg)
+        if a.kwarg:
+            names.append(a.kwarg.arg)
+        return names
+
+
+@dataclass
+class SourceFile:
+    path: Path
+    relpath: str                # repo-relative posix string
+    module: str                 # dotted module name ("repro.core.mis2")
+    text: str
+    tree: ast.Module
+    suppressions: dict          # line -> Suppression
+    legacy: Optional[str]       # quarantine reason, or None
+    imports: Dict[str, str] = field(default_factory=dict)  # alias -> qualified
+    is_root: bool = False       # reachability seed (benchmarks/tools/examples)
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Resolve a Name/Attribute chain to a qualified dotted name."""
+        chain = _name_chain(node)
+        if chain is None:
+            return None
+        head, _, rest = chain.partition(".")
+        base = self.imports.get(head)
+        if base is None:
+            # module-local symbol: qualify against this module
+            base = f"{self.module}.{head}" if self.module else head
+        return f"{base}.{rest}" if rest else base
+
+
+def _module_name_for(path: Path, src_root: Path) -> Optional[str]:
+    try:
+        rel = path.resolve().relative_to(src_root.resolve())
+    except ValueError:
+        return None
+    parts = list(rel.with_suffix("").parts)
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts) if parts else None
+
+
+def _collect_imports(tree: ast.Module, module: str) -> Dict[str, str]:
+    out: Dict[str, str] = {}
+    pkg_parts = module.split(".")[:-1] if module else []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+                if a.asname:
+                    out[a.asname] = a.name
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:
+                base_parts = pkg_parts[: len(pkg_parts) - (node.level - 1)] \
+                    if node.level > 1 else list(pkg_parts)
+                base = ".".join(base_parts + ([node.module] if node.module
+                                              else []))
+            else:
+                base = node.module or ""
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                out[a.asname or a.name] = f"{base}.{a.name}" if base else a.name
+    return out
+
+
+class Project:
+    """Whole-target analysis context shared by every rule."""
+
+    def __init__(self, files: List[SourceFile]):
+        self.files = files
+        self.by_module: Dict[str, SourceFile] = {
+            f.module: f for f in files if f.module}
+        self.functions: Dict[str, FunctionInfo] = {}
+        self._jit_context: Set[str] = set()
+        self._index_functions()
+        self._build_call_graph()
+        self._propagate_jit_context()
+
+    # -- indexing ----------------------------------------------------------
+
+    def _index_functions(self) -> None:
+        for src in self.files:
+            for qual, node, parents in _walk_functions(src.tree, src.module):
+                info = FunctionInfo(qualname=qual, module=src.module,
+                                    node=node, src=src)
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    for dec in node.decorator_list:
+                        name, statics = _decorator_jit(dec, src)
+                        if name:
+                            info.decorators.append(name)
+                        if statics is not None:
+                            info.jit_entry = True
+                            info.static_argnames |= statics
+                info.kernel_body = any(p.endswith("_ref")
+                                       for p in info.params)
+                self.functions[qual] = info
+
+    def _build_call_graph(self) -> None:
+        for src in self.files:
+            for qual, node, _ in _walk_functions(src.tree, src.module):
+                info = self.functions[qual]
+                body = node.body if isinstance(node, (ast.FunctionDef,
+                                                      ast.AsyncFunctionDef)) \
+                    else [node.body]
+                local_defs = {
+                    n.name: f"{qual}.{n.name}" for n in ast.walk(node)
+                    if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and n is not node}
+                for stmt in body:
+                    for sub in ast.walk(stmt):
+                        if isinstance(sub, ast.Call):
+                            self._record_call(info, sub, local_defs)
+                        elif isinstance(sub, (ast.Name, ast.Attribute)):
+                            target = self._resolve_function(sub, info.src,
+                                                            local_defs)
+                            if target:
+                                info.refs.add(target)
+
+    def _resolve_function(self, node, src: SourceFile,
+                          local_defs: Dict[str, str]) -> Optional[str]:
+        if isinstance(node, ast.Name) and node.id in local_defs:
+            return local_defs[node.id]
+        resolved = src.resolve(node)
+        if resolved and resolved in self.functions:
+            return resolved
+        return None
+
+    def _record_call(self, info: FunctionInfo, call: ast.Call,
+                     local_defs: Dict[str, str]) -> None:
+        callee = self._resolve_function(call.func, info.src, local_defs)
+        if callee:
+            info.calls.add(callee)
+        resolved = info.src.resolve(call.func) or _name_chain(call.func) or ""
+        fn_args = list(call.args) + [kw.value for kw in call.keywords]
+        is_jit_wrapper = resolved.endswith(JIT_WRAPPER_SUFFIXES)
+        is_loop = resolved.endswith(LOOP_BODY_SUFFIXES)
+        if not (is_jit_wrapper or is_loop):
+            return
+        for arg in fn_args:
+            arg = _unwrap_partial(arg)
+            target = None
+            if isinstance(arg, ast.Lambda):
+                target = self._lambda_qual(arg, info)
+            elif isinstance(arg, (ast.Name, ast.Attribute)):
+                target = self._resolve_function(arg, info.src, local_defs)
+            if target and target in self.functions:
+                tgt = self.functions[target]
+                if is_loop:
+                    tgt.loop_body = True
+                else:
+                    tgt.jit_entry = True
+                info.refs.add(target)
+
+    def _lambda_qual(self, node: ast.Lambda, info: FunctionInfo) -> str:
+        qual = f"{info.qualname}.<lambda@{node.lineno}>"
+        if qual not in self.functions:
+            self.functions[qual] = FunctionInfo(
+                qualname=qual, module=info.module, node=node, src=info.src)
+        return qual
+
+    # -- jit-context propagation ------------------------------------------
+
+    def _propagate_jit_context(self) -> None:
+        seeds = [q for q, f in self.functions.items()
+                 if f.jit_entry or f.loop_body or f.kernel_body]
+        seen: Set[str] = set()
+        frontier = list(seeds)
+        while frontier:
+            qual = frontier.pop()
+            if qual in seen:
+                continue
+            seen.add(qual)
+            f = self.functions.get(qual)
+            if f is None:
+                continue
+            for callee in f.calls | f.refs:
+                if callee not in seen:
+                    frontier.append(callee)
+            # nested defs of a jit function run traced when called
+            prefix = qual + "."
+            for other in self.functions:
+                if other.startswith(prefix) and other not in seen:
+                    frontier.append(other)
+        self._jit_context = seen
+
+    def is_jit_context(self, qualname: str) -> bool:
+        return qualname in self._jit_context
+
+    # -- module reachability ----------------------------------------------
+
+    def module_reachability(self) -> Tuple[Set[str], Set[str]]:
+        """(reachable, unreachable) repro modules, walked over static
+        imports from the entry roots: ``repro.api``, ``repro.serve``,
+        ``repro.obs``, ``repro.lint``, every non-``repro`` root file
+        (benchmarks / examples / tools) handed to the engine, and every
+        non-legacy module with an ``if __name__ == "__main__"`` guard
+        (directly runnable via ``python -m``)."""
+        graph = self.import_graph()
+        roots: Set[str] = set()
+        for src in self.files:
+            if src.is_root:
+                roots |= graph.get(src.module, set())
+            elif src.module and (
+                    src.module.startswith(("repro.api", "repro.serve",
+                                           "repro.obs", "repro.lint"))
+                    or src.module == "repro"):
+                roots.add(src.module)
+            elif src.module and src.legacy is None and _has_main_guard(
+                    src.tree):
+                roots.add(src.module)
+        reachable = self.reachable_from(roots)
+        tracked = {f.module for f in self.files
+                   if f.module and f.module.startswith("repro") and not f.is_root}
+        return reachable & tracked, tracked - reachable
+
+    def import_graph(self) -> Dict[str, Set[str]]:
+        """module -> tracked modules it statically imports."""
+        graph: Dict[str, Set[str]] = {}
+        for src in self.files:
+            deps = set()
+            for alias in src.imports.values():
+                mod = self._owning_module(alias)
+                if mod:
+                    deps.add(mod)
+            graph[src.module] = deps
+        return graph
+
+    def reachable_from(self, seeds: Set[str]) -> Set[str]:
+        """Transitive import closure over tracked modules; importing any
+        submodule also executes every ancestor package ``__init__``."""
+        graph = self.import_graph()
+        reachable: Set[str] = set()
+        frontier = [m for m in seeds if m in graph]
+        while frontier:
+            mod = frontier.pop()
+            if mod in reachable:
+                continue
+            reachable.add(mod)
+            for dep in graph.get(mod, ()):
+                if dep not in reachable:
+                    frontier.append(dep)
+            if "." in mod:
+                pkg = mod.rsplit(".", 1)[0]
+                if pkg not in reachable:
+                    frontier.append(pkg)
+        return reachable
+
+    def _owning_module(self, qualified: str) -> Optional[str]:
+        """Longest tracked-module prefix of a qualified name, if any."""
+        parts = qualified.split(".")
+        for cut in range(len(parts), 0, -1):
+            cand = ".".join(parts[:cut])
+            if cand in self.by_module:
+                return cand
+        return None
+
+
+def _has_main_guard(tree: ast.Module) -> bool:
+    """True iff the module has a top-level ``if __name__ == "__main__"``."""
+    for node in tree.body:
+        if isinstance(node, ast.If) and isinstance(node.test, ast.Compare):
+            names = {n.id for n in ast.walk(node.test)
+                     if isinstance(n, ast.Name)}
+            if "__name__" in names:
+                return True
+    return False
+
+
+def _unwrap_partial(node: ast.AST) -> ast.AST:
+    """functools.partial(f, ...) -> f (so the wrapped function seeds)."""
+    if isinstance(node, ast.Call):
+        chain = _name_chain(node.func) or ""
+        if chain.endswith("partial") and node.args:
+            return node.args[0]
+    return node
+
+
+def _decorator_jit(dec: ast.AST, src: SourceFile):
+    """(decorator name, static_argnames | None).  static set is non-None
+    iff the decorator establishes a jit entry."""
+    target = dec.func if isinstance(dec, ast.Call) else dec
+    chain = src.resolve(target) or _name_chain(target) or ""
+    if chain.endswith("partial") and isinstance(dec, ast.Call) and dec.args:
+        inner = dec.args[0]
+        inner_chain = src.resolve(inner) or _name_chain(inner) or ""
+        if inner_chain.endswith(JIT_WRAPPER_SUFFIXES):
+            statics: Set[str] = set()
+            for kw in dec.keywords:
+                if kw.arg in ("static_argnames", "static_argnums"):
+                    statics |= _literal_strings(kw.value)
+            return inner_chain, statics
+        return chain, None
+    if chain.endswith(JIT_WRAPPER_SUFFIXES):
+        statics = set()
+        if isinstance(dec, ast.Call):
+            for kw in dec.keywords:
+                if kw.arg in ("static_argnames", "static_argnums"):
+                    statics |= _literal_strings(kw.value)
+        return chain, statics
+    return chain or None, None
+
+
+def _literal_strings(node: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+            out.add(sub.value)
+    return out
+
+
+def _walk_functions(tree: ast.Module, module: str) -> Iterator[tuple]:
+    """Yield (qualname, node, parent_chain) for every def in the module."""
+    def rec(node, prefix, parents):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}.{child.name}" if prefix else child.name
+                yield qual, child, parents
+                yield from rec(child, qual, parents + [child])
+            elif isinstance(child, ast.ClassDef):
+                qual = f"{prefix}.{child.name}" if prefix else child.name
+                yield from rec(child, qual, parents + [child])
+            elif isinstance(child, (ast.If, ast.Try, ast.With)):
+                # defs behind conditionals/try/with at any nesting
+                yield from rec(child, prefix, parents)
+    yield from rec(tree, module, [])
+
+
+# ---------------------------------------------------------------------------
+# engine entry points
+# ---------------------------------------------------------------------------
+
+def load_file(path: Path, repo_root: Path, src_root: Optional[Path] = None,
+              is_root: bool = False) -> Optional[SourceFile]:
+    try:
+        text = path.read_text()
+        tree = ast.parse(text, filename=str(path))
+    except (SyntaxError, UnicodeDecodeError, OSError) as e:  # pragma: no cover
+        raise LintError(f"cannot parse {path}: {e}") from e
+    module = None
+    if src_root is not None:
+        module = _module_name_for(path, src_root)
+    if module is None:
+        module = f"<root:{path.stem}>"
+    try:
+        rel = str(path.resolve().relative_to(repo_root.resolve()).as_posix())
+    except ValueError:
+        rel = str(path)
+    src = SourceFile(
+        path=path, relpath=rel, module=module, text=text, tree=tree,
+        suppressions=parse_suppressions(text),
+        legacy=parse_legacy_tag(text), is_root=is_root)
+    src.imports = _collect_imports(tree, module if not is_root else "")
+    return src
+
+
+class LintError(RuntimeError):
+    pass
+
+
+def discover(targets: List[Path], repo_root: Path,
+             roots: Optional[List[Path]] = None) -> Project:
+    """Parse ``targets`` (files or directories) plus reachability ``roots``
+    into a :class:`Project`.  The src root is inferred so module names come
+    out as ``repro.x.y`` (targets under ``.../src/repro/...``)."""
+    files: List[SourceFile] = []
+    seen: Set[Path] = set()
+
+    def src_root_for(p: Path) -> Optional[Path]:
+        for parent in [p] + list(p.parents):
+            if parent.name == "src":
+                return parent
+        return None
+
+    def add(path: Path, is_root: bool) -> None:
+        path = path.resolve()
+        if path in seen or path.name.startswith("."):
+            return
+        seen.add(path)
+        files.append(load_file(path, repo_root, src_root_for(path),
+                               is_root=is_root))
+
+    for target in targets:
+        target = Path(target)
+        if target.is_dir():
+            for p in sorted(target.rglob("*.py")):
+                add(p, is_root=False)
+        elif target.suffix == ".py":
+            add(target, is_root=False)
+        else:
+            raise LintError(f"not a python file or directory: {target}")
+    for root in roots or []:
+        root = Path(root)
+        if root.is_dir():
+            for p in sorted(root.glob("*.py")):
+                add(p, is_root=True)
+        elif root.suffix == ".py" and root.exists():
+            add(root, is_root=True)
+    return Project(files)
+
+
+def run_rules(project: Project, rules) -> List[Finding]:
+    """Run every rule over every non-root file; attach suppressions and
+    legacy tags.  An invalid suppression (missing reason) does NOT
+    suppress — the finding stays live with the problem appended."""
+    findings: List[Finding] = []
+    for src in project.files:
+        if src.is_root:
+            continue
+        for rule in rules:
+            for f in rule.check_file(src, project):
+                sup = src.suppressions.get(f.line)
+                if sup is not None and f.rule in sup.codes:
+                    if sup.valid:
+                        f.suppressed_by = sup
+                    else:
+                        f.message += ("  [suppression ignored: a reason is "
+                                      "mandatory after ignore[...]]")
+                if src.legacy is not None:
+                    f.tag = "legacy"
+                findings.append(f)
+    findings.extend(quarantine_findings(project))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def quarantine_findings(project: Project) -> List[Finding]:
+    """RL001: a legacy-quarantined module is reachable from the live entry
+    points — the quarantine is violated and must be resolved explicitly."""
+    out: List[Finding] = []
+    reachable, _ = project.module_reachability()
+    for src in project.files:
+        if src.legacy is None or src.is_root:
+            continue
+        if src.module in reachable:
+            out.append(Finding(
+                rule="RL001", path=src.relpath, line=1, symbol="<module>",
+                message=(f"legacy-quarantined module {src.module} is "
+                         "reachable from a facade/serve/bench entry point — "
+                         "either un-quarantine it or cut the import")))
+    return out

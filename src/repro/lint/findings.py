@@ -1,0 +1,116 @@
+"""Finding and suppression value types for ``repro.lint``.
+
+A :class:`Finding` is one rule violation anchored to (path, line) with a
+stable identity key ``(rule, path, symbol)`` — line numbers are carried
+for display but deliberately kept out of the identity, so a finding that
+merely moves inside its function keeps matching its baseline entry.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+#: ``# repro-lint: ignore[RL101] reason`` / ``ignore[RL101,RL103] reason``
+SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*ignore\[([A-Z]{2}\d{3}(?:\s*,\s*[A-Z]{2}\d{3})*)\]"
+    r"\s*(.*?)\s*$")
+
+#: ``# repro-lint: legacy reason`` — file-level quarantine pragma.
+LEGACY_RE = re.compile(r"#\s*repro-lint:\s*legacy\s+(.+?)\s*$")
+
+
+@dataclass(frozen=True)
+class Suppression:
+    """One inline ``ignore[...]`` pragma (line it guards, codes, reason)."""
+    line: int           # the source line the pragma applies to
+    codes: tuple
+    reason: str
+
+    @property
+    def valid(self) -> bool:
+        return bool(self.reason.strip())
+
+
+@dataclass
+class Finding:
+    rule: str                  # "RL101" ... "RL106" (or engine "RL00x")
+    path: str                  # repo-relative, posix separators
+    line: int
+    symbol: str                # enclosing function/class qualname or "<module>"
+    message: str
+    tag: str = ""              # "legacy" for findings in quarantined files
+    suppressed_by: Optional[Suppression] = field(default=None, repr=False)
+
+    @property
+    def key(self) -> tuple:
+        """Baseline identity: stable across line-number churn."""
+        return (self.rule, self.path, self.symbol)
+
+    @property
+    def suppressed(self) -> bool:
+        return self.suppressed_by is not None and self.suppressed_by.valid
+
+    def to_dict(self) -> dict:
+        d = {"rule": self.rule, "path": self.path, "line": self.line,
+             "symbol": self.symbol, "message": self.message}
+        if self.tag:
+            d["tag"] = self.tag
+        if self.suppressed_by is not None:
+            d["suppressed"] = self.suppressed
+            d["suppress_reason"] = self.suppressed_by.reason
+        return d
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.line}"
+        sym = f" [{self.symbol}]" if self.symbol != "<module>" else ""
+        tag = f" ({self.tag})" if self.tag else ""
+        return f"{loc}: {self.rule}{tag}{sym} {self.message}"
+
+
+def _comment_tokens(text: str):
+    """(line, col, comment_text) for every REAL comment token — pragmas
+    quoted inside docstrings or string literals never count."""
+    import io
+    import tokenize
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(text).readline):
+            if tok.type == tokenize.COMMENT:
+                yield tok.start[0], tok.start[1], tok.string
+    except (tokenize.TokenError, IndentationError):  # pragma: no cover
+        return
+
+
+def parse_suppressions(text: str) -> dict:
+    """Map line number -> :class:`Suppression` for every inline pragma.
+
+    A pragma on its own line guards the next line; a trailing pragma
+    guards its own line.  Both entries are recorded so rules can anchor a
+    finding at either the construct line or the pragma line.
+    """
+    out = {}
+    n_lines = text.count("\n") + 1
+    for lineno, col, comment in _comment_tokens(text):
+        m = SUPPRESS_RE.search(comment)
+        if not m:
+            continue
+        codes = tuple(c.strip() for c in m.group(1).split(","))
+        sup = Suppression(line=lineno, codes=codes, reason=m.group(2))
+        out[lineno] = sup
+        if col == 0 and lineno + 1 <= n_lines:
+            # standalone comment: also guards the next line
+            out.setdefault(lineno + 1, Suppression(
+                line=lineno + 1, codes=codes, reason=m.group(2)))
+    return out
+
+
+def parse_legacy_tag(text: str, scan_lines: int = 40) -> Optional[str]:
+    """Return the quarantine reason if the file opens with a legacy pragma
+    (a real comment within the first ``scan_lines`` lines)."""
+    for lineno, _col, comment in _comment_tokens(text):
+        if lineno > scan_lines:
+            return None
+        m = LEGACY_RE.match(comment)
+        if m:
+            return m.group(1)
+    return None

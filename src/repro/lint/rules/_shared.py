@@ -1,0 +1,262 @@
+"""Shared per-function analyses used by the RL rules.
+
+:class:`LocalDataflow` is an intentionally approximate reaching-definition
+map — straight-line, last-write-wins, control flow ignored — which is the
+right fidelity for provenance questions ("does this argument descend from
+a padded size?") where a false negative on a convoluted path is acceptable
+and a false positive on ordinary code is not.
+
+:class:`TracedInference` classifies names inside a jit-context function as
+traced (device values) or static (Python values), seeding from the
+function's role: loop/kernel bodies trace every parameter; ``jax.jit``
+entries trace everything not named in ``static_argnames``; transitively
+reachable helpers trace only what provably flows from ``jnp``/``lax``
+expressions — precision over recall, again.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from ..engine import FunctionInfo, Project, SourceFile, _name_chain
+
+#: attribute reads that yield static (host) values even on traced arrays
+STATIC_ATTRS = {"shape", "dtype", "ndim", "size", "itemsize", "weak_type"}
+
+#: call-prefixes whose results are traced arrays
+TRACED_CALL_PREFIXES = (
+    "jax.numpy.", "jnp.", "jax.lax.", "lax.", "jax.nn.", "jax.random.",
+    "jax.scipy.",
+)
+
+
+def iter_file_functions(project: Project,
+                        src: SourceFile) -> Iterator[FunctionInfo]:
+    for info in project.functions.values():
+        if info.src is src:
+            yield info
+
+
+def short_symbol(info: FunctionInfo) -> str:
+    """Module-relative symbol for findings/baseline keys."""
+    qual = info.qualname
+    if info.module and qual.startswith(info.module + "."):
+        qual = qual[len(info.module) + 1:]
+    return qual
+
+
+def resolve_chain(src: SourceFile, node: ast.AST) -> str:
+    return src.resolve(node) or _name_chain(node) or ""
+
+
+class LocalDataflow:
+    """name -> assigned value expressions, collected over one function."""
+
+    def __init__(self, fn_node: ast.AST):
+        self.defs: Dict[str, List[ast.AST]] = {}
+        body = fn_node.body if isinstance(
+            fn_node, (ast.FunctionDef, ast.AsyncFunctionDef)) else [fn_node]
+        for stmt in body:
+            for sub in ast.walk(stmt if isinstance(stmt, ast.stmt)
+                                else ast.Expr(value=stmt)):
+                self._collect(sub)
+
+    def _collect(self, node: ast.AST) -> None:
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                self._bind(tgt, node.value)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            self._bind(node.target, node.value)
+        elif isinstance(node, ast.AugAssign):
+            self._bind(node.target, node.value)
+        elif isinstance(node, ast.For):
+            self._bind(node.target, node.iter)
+        elif isinstance(node, (ast.NamedExpr,)):
+            self._bind(node.target, node.value)
+
+    def _bind(self, target: ast.AST, value: ast.AST) -> None:
+        if isinstance(target, ast.Name):
+            self.defs.setdefault(target.id, []).append(value)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._bind(elt, value)
+
+    def origin_tokens(self, expr: ast.AST, depth: int = 6) -> Set[str]:
+        """Every name, dotted chain, and callee name in the transitive
+        provenance of ``expr`` (bounded by ``depth`` hops)."""
+        tokens: Set[str] = set()
+        frontier: List[Tuple[ast.AST, int]] = [(expr, depth)]
+        seen_names: Set[str] = set()
+        while frontier:
+            node, d = frontier.pop()
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Name):
+                    tokens.add(sub.id)
+                    if d > 0 and sub.id not in seen_names:
+                        seen_names.add(sub.id)
+                        for value in self.defs.get(sub.id, ()):
+                            frontier.append((value, d - 1))
+                elif isinstance(sub, ast.Attribute):
+                    chain = _name_chain(sub)
+                    if chain:
+                        tokens.add(chain)
+                elif isinstance(sub, ast.Call):
+                    chain = _name_chain(sub.func)
+                    if chain:
+                        tokens.add(chain + "()")
+        return tokens
+
+
+class TracedInference:
+    """Classify local names of one jit-context function as traced."""
+
+    def __init__(self, info: FunctionInfo, src: SourceFile):
+        self.src = src
+        self.traced: Set[str] = set()
+        if info.loop_body or info.kernel_body:
+            self.traced |= set(info.params)
+        elif info.jit_entry:
+            self.traced |= {p for p in info.params
+                            if p not in info.static_argnames}
+        # params annotated with host types (bool/str/...) or defaulted to a
+        # literal bool are closed over statically even in shard_map/jit
+        # entries — `if single_gather:` on a bool kwarg is host control flow
+        self.traced -= _static_params(info.node)
+        # fixpoint over straight-line assignments (2 passes settle loops)
+        node = info.node
+        body = node.body if isinstance(
+            node, (ast.FunctionDef, ast.AsyncFunctionDef)) else []
+        for _ in range(2):
+            for stmt in body:
+                for sub in ast.walk(stmt):
+                    if isinstance(sub, ast.Assign):
+                        if self.is_traced(sub.value):
+                            for tgt in sub.targets:
+                                self._mark(tgt)
+                    elif isinstance(sub, ast.AugAssign):
+                        if self.is_traced(sub.value) or \
+                                self.is_traced(sub.target):
+                            self._mark(sub.target)
+
+    def _mark(self, target: ast.AST) -> None:
+        if isinstance(target, ast.Name):
+            self.traced.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._mark(elt)
+
+    def is_traced(self, expr: ast.AST) -> bool:
+        if isinstance(expr, ast.Name):
+            return expr.id in self.traced
+        if isinstance(expr, ast.Attribute):
+            if expr.attr in STATIC_ATTRS:
+                return False
+            return self.is_traced(expr.value)
+        if isinstance(expr, ast.Subscript):
+            # x.shape[0] is static even when x is traced
+            if isinstance(expr.value, ast.Attribute) and \
+                    expr.value.attr in STATIC_ATTRS:
+                return False
+            return self.is_traced(expr.value)
+        if isinstance(expr, ast.Call):
+            chain = resolve_chain(self.src, expr.func)
+            if chain.startswith(TRACED_CALL_PREFIXES) or \
+                    ".at." in chain:
+                return True
+            args = list(expr.args) + [kw.value for kw in expr.keywords]
+            if chain.rpartition(".")[2] in _TRACED_PRESERVING and any(
+                    self.is_traced(a) for a in args):
+                return True
+            return False
+        if isinstance(expr, (ast.BinOp,)):
+            return self.is_traced(expr.left) or self.is_traced(expr.right)
+        if isinstance(expr, ast.UnaryOp):
+            return self.is_traced(expr.operand)
+        if isinstance(expr, ast.Compare):
+            return self.is_traced(expr.left) or any(
+                self.is_traced(c) for c in expr.comparators)
+        if isinstance(expr, ast.BoolOp):
+            return any(self.is_traced(v) for v in expr.values)
+        if isinstance(expr, ast.IfExp):
+            return self.is_traced(expr.body) or self.is_traced(expr.orelse)
+        if isinstance(expr, (ast.Tuple, ast.List)):
+            return any(self.is_traced(e) for e in expr.elts)
+        if isinstance(expr, ast.Starred):
+            return self.is_traced(expr.value)
+        return False
+
+    def traced_names_in(self, expr: ast.AST) -> Set[str]:
+        """Traced names appearing in ``expr`` outside is/is-not checks."""
+        out: Set[str] = set()
+
+        def rec(node: ast.AST) -> None:
+            if isinstance(node, ast.Compare) and all(
+                    isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return                      # `x is None` guards are host-side
+            if isinstance(node, ast.Attribute) and node.attr in STATIC_ATTRS:
+                return
+            if isinstance(node, ast.Name) and node.id in self.traced:
+                out.add(node.id)
+            for child in ast.iter_child_nodes(node):
+                rec(child)
+
+        rec(expr)
+        return out
+
+
+def iter_own_nodes(fn_node: ast.AST) -> Iterator[ast.AST]:
+    """Walk a function body without descending into nested def/class
+    bodies (those are indexed and checked as their own functions).
+    Lambdas stay in — they are part of the enclosing function unless a
+    jit/loop wrapper promoted them to entries."""
+    body = fn_node.body if isinstance(
+        fn_node, (ast.FunctionDef, ast.AsyncFunctionDef)) else [fn_node.body]
+
+    def rec(node: ast.AST) -> Iterator[ast.AST]:
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                continue
+            yield from rec(child)
+
+    for stmt in body:
+        yield from rec(stmt)
+
+
+#: annotations naming host-side (never traced) parameter types
+_STATIC_ANNOTATIONS = {"bool", "str", "bytes", "Mesh", "Path"}
+
+
+def _static_params(fn_node: ast.AST) -> Set[str]:
+    """Params whose annotation or default marks them as static Python
+    values (not device arrays), regardless of how the function is traced."""
+    if not isinstance(fn_node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return set()
+    a = fn_node.args
+    out: Set[str] = set()
+    for p in a.posonlyargs + a.args + a.kwonlyargs:
+        ann = p.annotation
+        if ann is not None:
+            name = _name_chain(ann) or ""
+            if name.rpartition(".")[2] in _STATIC_ANNOTATIONS:
+                out.add(p.arg)
+    # positional/keyword params defaulted to a literal bool
+    pos = a.posonlyargs + a.args
+    for p, d in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+        if isinstance(d, ast.Constant) and isinstance(d.value, bool):
+            out.add(p.arg)
+    for p, d in zip(a.kwonlyargs, a.kw_defaults):
+        if d is not None and isinstance(d, ast.Constant) and \
+                isinstance(d.value, bool):
+            out.add(p.arg)
+    return out
+
+
+#: functions that return traced values when fed traced values
+_TRACED_PRESERVING = {
+    "where", "minimum", "maximum", "sum", "min", "max", "any", "all",
+    "take", "reshape", "concatenate", "stack", "pack", "unpack_id",
+    "is_undecided", "effective_priority", "astype", "clip", "cumsum",
+    "searchsorted", "sort", "argsort", "dot", "matmul", "abs",
+}

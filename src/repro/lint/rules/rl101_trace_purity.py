@@ -1,0 +1,105 @@
+"""RL101 — trace purity: no host syncs or Python control flow on traced
+values inside jit-reachable code."""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..engine import Project, SourceFile
+from ..findings import Finding
+from . import Rule, register
+from ._shared import TracedInference, iter_file_functions, iter_own_nodes, \
+    resolve_chain, short_symbol
+
+_SYNC_ATTRS = {"item": ".item() forces a device->host sync",
+               "block_until_ready": ".block_until_ready() blocks on device "
+                                    "execution"}
+_HOST_FUNCS = {
+    "numpy.asarray": "np.asarray materializes the traced value on the host",
+    "numpy.array": "np.array materializes the traced value on the host",
+    "numpy.copy": "np.copy materializes the traced value on the host",
+    "jax.device_get": "jax.device_get pulls the traced value to the host",
+}
+_CASTS = {"int", "bool", "float"}
+
+
+@register
+class TracePurity(Rule):
+    code = "RL101"
+    name = "trace-purity"
+    explain = """\
+RL101 trace-purity — no host syncs inside jit-reachable code.
+
+Inside any function reachable from a jax.jit site, a shard_map/pallas_call
+wrapper, or a lax.while_loop/fori_loop/scan body, the following force a
+device->host round trip (or simply fail to trace) and are flagged:
+
+  * .item() / .block_until_ready() on a traced value
+  * int(x) / bool(x) / float(x) where x is traced
+  * np.asarray / np.array / np.copy / jax.device_get of a traced value
+  * Python `if` / `while` whose condition reads a traced value
+    (use lax.cond / lax.while_loop / jnp.where instead)
+
+History: before PR 4 the MIS-2 fixed point hid host syncs inside what
+looked like a jitted loop — the driver pulled T and M back every round to
+rebuild worklists, costing 2 syncs/iteration; making the loop a single
+lax.while_loop bought ~3x rounds/sec at V=4096.  The runtime half of this
+invariant is tools/check_shape.py's `resident` gate (1 dispatch, 0 syncs
+on a golden workload); RL101 is the static half that covers every code
+path, including ones no benchmark runs.
+
+Jit-reachability is computed over the project call graph, seeded from
+@jax.jit decorators, functions passed to jax.jit/shard_map/pallas_call,
+lax control-flow bodies, and Pallas kernel bodies (functions with *_ref
+parameters).  Tracedness is inferred conservatively: loop/kernel bodies
+trace all parameters, jit entries trace everything not in
+static_argnames, helpers trace only values flowing from jnp/lax calls.
+
+Suppress a deliberate host boundary (e.g. jax.pure_callback internals)
+with `# repro-lint: ignore[RL101] <reason>`.
+"""
+
+    def check_file(self, src: SourceFile, project: Project) -> List[Finding]:
+        out: List[Finding] = []
+        for info in iter_file_functions(project, src):
+            if not project.is_jit_context(info.qualname):
+                continue
+            inf = TracedInference(info, src)
+            symbol = short_symbol(info)
+            for sub in iter_own_nodes(info.node):
+                out.extend(self._check_node(sub, inf, src, symbol))
+        return out
+
+    def _check_node(self, sub: ast.AST, inf: TracedInference,
+                    src: SourceFile, symbol: str) -> List[Finding]:
+        out: List[Finding] = []
+
+        def flag(node, msg):
+            out.append(Finding(rule=self.code, path=src.relpath,
+                               line=node.lineno, symbol=symbol, message=msg))
+
+        if isinstance(sub, ast.Call):
+            if isinstance(sub.func, ast.Attribute) and \
+                    sub.func.attr in _SYNC_ATTRS and not sub.args:
+                if inf.is_traced(sub.func.value):
+                    flag(sub, f"{_SYNC_ATTRS[sub.func.attr]} inside a "
+                              "jit-reachable function")
+            chain = resolve_chain(src, sub.func)
+            if chain in _HOST_FUNCS and sub.args and \
+                    inf.is_traced(sub.args[0]):
+                flag(sub, f"{_HOST_FUNCS[chain]} inside a jit-reachable "
+                          "function")
+            if isinstance(sub.func, ast.Name) and \
+                    sub.func.id in _CASTS and len(sub.args) == 1 and \
+                    inf.is_traced(sub.args[0]):
+                flag(sub, f"{sub.func.id}() on a traced value forces a "
+                          "concretization sync inside a jit-reachable "
+                          "function")
+        elif isinstance(sub, (ast.If, ast.While)):
+            names = inf.traced_names_in(sub.test)
+            if names:
+                kw = "while" if isinstance(sub, ast.While) else "if"
+                flag(sub, f"Python `{kw}` on traced value(s) "
+                          f"{sorted(names)} inside a jit-reachable function "
+                          "— use lax.cond/lax.while_loop/jnp.where")
+        return out

@@ -1,0 +1,98 @@
+"""RL102 — priority provenance: ``id_bits`` must be fed the REAL vertex
+count, never a padded/bucketed size."""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Set
+
+from ..engine import Project, SourceFile, _name_chain
+from ..findings import Finding
+from . import Rule, register
+from ._shared import LocalDataflow, iter_file_functions, short_symbol
+
+#: provenance tokens that mean "this size includes padding"
+_PADDED_NAME_RE = re.compile(
+    r"(^|[._])(vp|vp_total|padded|pad|bucket|bucketed)([._]|\d|$)|"
+    r"(^|[._])padded_|_padded([._]|$)")
+
+#: calls in the provenance chain that *produce* padded/bucketed sizes
+_PADDING_CALLS = re.compile(
+    r"(pad_graph_for_mesh|pad_ell_graph|prepare_padded|_bucket|"
+    r"next_pow2|pow2_bucket)\(\)$")
+
+#: provenance tokens that positively mean "real vertex count" — their
+#: presence alone never clears a padded token, but a *pure* real-count
+#: argument is the documented good shape
+_REAL_TOKENS = {"num_vertices", "v_real", "n_real", "real_v"}
+
+
+@register
+class PriorityProvenance(Rule):
+    code = "RL102"
+    name = "priority-provenance"
+    explain = """\
+RL102 priority-provenance — id_bits() must see the real vertex count.
+
+The packed status tuple (paper SV-C) reserves b = ceil(log2(V + 2)) low
+bits for the vertex id; the remaining 32-b bits hold the priority.  The
+bit width b is therefore part of the *mathematical definition* of the
+total order the MIS-2 fixed point resolves — feed id_bits() a padded or
+bucketed vertex count and the effective priorities change, silently
+diverging from every engine that used the real count.
+
+History (the PR 3 bug, found as a real determinism break): core/dist.py
+packed priorities with id_bits(vp_total) — the device-padded count —
+so any graph whose mesh padding crossed a power of two (V=1022 on 8
+devices pads to 1024: b goes 10 -> 11) produced a DIFFERENT maximal
+independent set than the single-device dense engine.  At paper scale
+(V=1M, 12 effective priority bits) divergence is near-certain.  The fix
+threaded num_vertices=V_real through the sharded fixed point; RL102 keeps
+the bug class out of the tree by flagging any id_bits()/pack-width
+argument whose dataflow reaches:
+
+  * a name matching vp/vp_total/padded_*/pad/bucket (padded sizes)
+  * a call to pad_graph_for_mesh / pad_ell_graph / prepare_padded /
+    _bucket (pow2 bucketing)
+  * .shape[0] of a buffer whose own provenance is padded
+
+Pass V_real / num_vertices / graph.num_vertices instead.  If a padded
+width is genuinely intended (it never is for priorities), suppress with
+`# repro-lint: ignore[RL102] <reason>`.
+"""
+
+    def check_file(self, src: SourceFile, project: Project) -> List[Finding]:
+        out: List[Finding] = []
+        for info in iter_file_functions(project, src):
+            flow = None
+            for sub in ast.walk(info.node):
+                if not isinstance(sub, ast.Call):
+                    continue
+                chain = src.resolve(sub.func) or _name_chain(sub.func) or ""
+                if chain.rpartition(".")[2] != "id_bits" or not sub.args:
+                    continue
+                if flow is None:
+                    flow = LocalDataflow(info.node)
+                evidence = self._padded_evidence(flow, sub.args[0])
+                if evidence:
+                    out.append(Finding(
+                        rule=self.code, path=src.relpath, line=sub.lineno,
+                        symbol=short_symbol(info),
+                        message=(f"id_bits({ast.unparse(sub.args[0])}) "
+                                 f"descends from padded/bucketed size "
+                                 f"{sorted(evidence)} — the packing bit "
+                                 "width must come from the REAL vertex "
+                                 "count (the PR 3 determinism bug)")))
+        return out
+
+    def _padded_evidence(self, flow: LocalDataflow,
+                         arg: ast.AST) -> Set[str]:
+        tokens = flow.origin_tokens(arg)
+        bad: Set[str] = set()
+        for tok in tokens:
+            if tok.endswith("()"):
+                if _PADDING_CALLS.search(tok):
+                    bad.add(tok)
+            elif _PADDED_NAME_RE.search(tok):
+                bad.add(tok)
+        return bad

@@ -1,0 +1,104 @@
+"""RL106 — kernel masking: Pallas kernel bodies must guard the ragged
+final grid block."""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from ..engine import Project, SourceFile
+from ..findings import Finding
+from . import Rule, register
+from ._shared import iter_file_functions, resolve_chain, short_symbol
+
+
+@register
+class KernelMasking(Rule):
+    code = "RL106"
+    name = "kernel-masking"
+    explain = """\
+RL106 kernel-masking — Pallas kernel bodies must handle the ragged final
+grid block.
+
+Every wrapper in kernels/ launches `grid = pl.cdiv(n, block)` steps, so
+whenever `n % block != 0` the LAST step sees a partial tile.  Interpret
+mode (the CPU CI path) pads that tile with zeros; COMPILED Pallas pads it
+with unspecified values.  A kernel that gathers with those values
+(`jnp.take(x, cols)` where cols came from the pad) reads out of bounds on
+hardware while every CPU test stays green — the worst kind of
+portability bug for a repo whose headline claim is bit-identity across
+backends.
+
+A kernel body (any function with *_ref parameters) that reads or writes
+refs must therefore show one of:
+
+  * a `pl.when` guard comparing the block position against a prefetched
+    count (`@pl.when(i * block < count_ref[0])` — the SV-B worklist
+    skipping shape), or
+  * an explicit validity mask derived from `pl.program_id` /
+    iota/arange vs a row bound
+    (`valid = i * block + jnp.arange(block) < num_rows`).
+
+Purely elementwise kernels whose tail lanes are dropped by the BlockSpec
+write (no data-dependent indexing) may suppress with
+`# repro-lint: ignore[RL106] <reason>` — the reason should say WHY the
+tail cannot read through a gathered index.
+"""
+
+    def check_file(self, src: SourceFile, project: Project) -> List[Finding]:
+        if not any("pallas" in q for q in src.imports.values()):
+            return []
+        out: List[Finding] = []
+        for info in iter_file_functions(project, src):
+            if not info.kernel_body or not isinstance(
+                    info.node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            refs = {p for p in info.params if p.endswith("_ref")}
+            if not self._touches_refs(info.node, refs):
+                continue
+            if self._has_guard(info.node, src):
+                continue
+            out.append(Finding(
+                rule=self.code, path=src.relpath, line=info.node.lineno,
+                symbol=short_symbol(info),
+                message=("Pallas kernel body indexes refs with no pl.when "
+                         "guard or ragged-tail mask — the final grid block "
+                         "reads unspecified pad values when compiled "
+                         "(interpret mode hides it with zero padding)")))
+        return out
+
+    def _touches_refs(self, node: ast.AST, refs: Set[str]) -> bool:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Subscript) and \
+                    isinstance(sub.value, ast.Name) and \
+                    sub.value.id in refs:
+                return True
+        return False
+
+    def _has_guard(self, node: ast.AST, src: SourceFile) -> bool:
+        # names bound from pl.program_id(...)
+        pid_names: Set[str] = set()
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Assign) and isinstance(
+                    sub.value, ast.Call):
+                chain = resolve_chain(src, sub.value.func)
+                if chain.endswith("program_id"):
+                    for tgt in sub.targets:
+                        if isinstance(tgt, ast.Name):
+                            pid_names.add(tgt.id)
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                chain = resolve_chain(src, sub.func)
+                if chain.endswith(".when") or chain == "when":
+                    return True
+            if isinstance(sub, ast.Compare):
+                tokens = {n.id for n in ast.walk(sub)
+                          if isinstance(n, ast.Name)}
+                if tokens & pid_names:
+                    return True
+                for call in ast.walk(sub):
+                    if isinstance(call, ast.Call):
+                        chain = resolve_chain(src, call.func)
+                        if chain.endswith(("program_id", "iota",
+                                           "broadcasted_iota", "arange")):
+                            return True
+        return False

@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM model zoo, no graph-facade consumers
 from .config import (
     LM_SHAPES,
     ModelConfig,

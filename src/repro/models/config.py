@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM model zoo, no graph-facade consumers
 """Model configuration covering all ten assigned architectures.
 
 Every architecture is a ``ModelConfig``; family-specific fields are unused

@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM model zoo, no graph-facade consumers
 """RecurrentGemma / Griffin hybrid [arXiv:2402.19427].
 
 Block pattern (RG-LRU, RG-LRU, local attention) with an MLP after every

@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM model zoo, no graph-facade consumers
 """Shared model layers: RMSNorm, RoPE, flash attention (pure-JAX online
 softmax), GQA without KV materialization, SwiGLU FFN, dropless MoE with
 sort-based dispatch, initializers.

@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM model zoo, no graph-facade consumers
 """Mamba-2 (SSD — state-space duality) language model [arXiv:2405.21060].
 
 Chunked SSD forward: within a chunk the recurrence is computed in its dual

@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM model zoo, no graph-facade consumers
 """Decoder-only transformer LM covering the dense, MoE and VLM-token
 architectures (smollm x2, llama3.2-3b, granite-8b, chameleon-34b,
 granite-moe, qwen2-moe).

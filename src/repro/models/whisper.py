@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM model zoo, no graph-facade consumers
 """Whisper-style encoder-decoder backbone [arXiv:2212.04356].
 
 Per the assignment the conv/mel frontend is a STUB: ``input_specs`` feeds

@@ -269,14 +269,14 @@ def _host_level(cur: CSRMatrix, labels: np.ndarray, nagg: int, omega: float,
     v = cur.num_rows
     t0 = time.perf_counter()
     pr, pc, pv = smoothed_prolongator_host(cur, labels, nagg, omega)
-    SETUP_STATS.host_syncs += 1
+    _OBS.counter(SetupStats._SYNCS).inc()
     timings["prolongator"] = timings.get("prolongator", 0.0) \
         + time.perf_counter() - t0
     t0 = time.perf_counter()
     a_ell = csr_to_ell_matrix(cur)
     p_pad_cols, p_pad_vals = _pad_p_rows(pr, pc, pv, v)
     cr, cc, cv = galerkin_coo_host(a_ell, p_pad_cols, p_pad_vals, nagg)
-    SETUP_STATS.host_syncs += 1
+    _OBS.counter(SetupStats._SYNCS).inc()
     indptr = np.zeros(nagg + 1, dtype=np.int64)
     np.add.at(indptr, cr + 1, 1)
     a_next = CSRMatrix(jnp.asarray(np.cumsum(indptr).astype(np.int32)),
@@ -287,7 +287,7 @@ def _host_level(cur: CSRMatrix, labels: np.ndarray, nagg: int, omega: float,
     t0 = time.perf_counter()
     p_ell = rect_ell(pr, pc, pv.astype(np.float32), v)
     r_ell = rect_ell(pc, pr, pv.astype(np.float32), nagg)
-    SETUP_STATS.host_syncs += 1
+    _OBS.counter(SetupStats._SYNCS).inc()
     level = AMGLevel(a_ell, extract_diagonal(cur), p_ell, r_ell,
                      v, cur.num_entries)
     timings["pack"] = timings.get("pack", 0.0) + time.perf_counter() - t0
@@ -304,7 +304,7 @@ def _resident_level(cur_ell: ELLMatrix, cur_nnz: int, labels: np.ndarray,
         labels_j = jnp.asarray(labels.astype(np.int32))
         p_cols, p_vals, p_keep, diag, dp_real, dr = _prolongator_device(
             cur_ell.cols, cur_ell.vals, cur_ell.mask, labels_j, float(omega))
-        SETUP_STATS.resident_dispatches += 2   # scan + finish (FMA boundary)
+        _OBS.counter(SetupStats._DISPATCHES).inc(2)   # scan + finish (FMA boundary)
         dp_real, dr = int(dp_real), int(dr)       # shape scalars only
         timings["prolongator"] = timings.get("prolongator", 0.0) \
             + time.perf_counter() - t0
@@ -320,38 +320,38 @@ def _resident_level(cur_ell: ELLMatrix, cur_nnz: int, labels: np.ndarray,
             # per entry as the sorted path -> bit-identical values)
             dense1, csum1, dq, nnz_q = _spgemm_stage1_dense_device(
                 cur_ell.cols, a_vals64, p_cols, p_vals, num_cols=cpad)
-            SETUP_STATS.resident_dispatches += 1
+            _OBS.counter(SetupStats._DISPATCHES).inc()
             dq, nnz_qi = int(dq), int(nnz_q)
             q_cols, q_vals = _dense_rows_extract_device(
                 dense1, csum1, nnz_q, num_cols=cpad,
                 width=_bucket_pow2(dq), nnz_bucket=_bucket_pow2(nnz_qi))
-            SETUP_STATS.resident_dispatches += 1
+            _OBS.counter(SetupStats._DISPATCHES).inc()
             dense2, csum2, width_c, nnz_c = _spgemm_stage2_dense_device(
                 p_cols, p_vals, q_cols, q_vals, num_cols=cpad)
-            SETUP_STATS.resident_dispatches += 1
+            _OBS.counter(SetupStats._DISPATCHES).inc()
             width_c, nnz_c = int(width_c), int(nnz_c)
             ac_cols, ac_vals, ac_mask, _ = _dense_to_ell_device(
                 dense2, csum2, jnp.int32(nnz_c), num_cols=cpad,
                 num_rows=nagg, width=width_c,
                 nnz_bucket=_bucket_pow2(nnz_c))
-            SETUP_STATS.resident_dispatches += 1
+            _OBS.counter(SetupStats._DISPATCHES).inc()
         else:
             # sorted-COO fallback when the dense accumulator would not
             # fit; key_base = v (shape-derived) so the sort kernels
             # compile once per level shape
             k1, s1, kp1, dq = _spgemm_stage1_device(
                 cur_ell.cols, a_vals64, p_cols, p_vals, key_base=v)
-            SETUP_STATS.resident_dispatches += 1
+            _OBS.counter(SetupStats._DISPATCHES).inc()
             q_cols, q_vals = _coo_rows_repack_device(
                 k1, s1, kp1, key_base=v, num_rows=v, width=int(dq))
-            SETUP_STATS.resident_dispatches += 1
+            _OBS.counter(SetupStats._DISPATCHES).inc()
             keys, sums, keep, nnz_c, width_c = _spgemm_stage2_device(
                 p_cols, p_vals, q_cols, q_vals, key_base=v)
-            SETUP_STATS.resident_dispatches += 1
+            _OBS.counter(SetupStats._DISPATCHES).inc()
             nnz_c, width_c = int(nnz_c), int(width_c)
             ac_cols, ac_vals, ac_mask, _ = _coo_to_ell_device(
                 keys, sums, keep, key_base=v, num_rows=nagg, width=width_c)
-            SETUP_STATS.resident_dispatches += 1
+            _OBS.counter(SetupStats._DISPATCHES).inc()
         timings["galerkin"] = timings.get("galerkin", 0.0) \
             + time.perf_counter() - t0
         t0 = time.perf_counter()
@@ -359,7 +359,7 @@ def _resident_level(cur_ell: ELLMatrix, cur_nnz: int, labels: np.ndarray,
             _prolongator_pack_device(p_cols, p_vals, p_keep,
                                      num_aggregates=nagg, p_width=dp_real,
                                      r_width=dr)
-        SETUP_STATS.resident_dispatches += 1
+        _OBS.counter(SetupStats._DISPATCHES).inc()
         timings["pack"] = timings.get("pack", 0.0) + time.perf_counter() - t0
     level = AMGLevel(cur_ell, diag,
                      ELLMatrix(pe_cols, pe_vals, pe_mask),
@@ -539,18 +539,18 @@ def _cluster_gs_setup_impl(a, aggregation: str = "two_phase", options=None,
     def coarse_structure(graph_handle, labels, nagg):
         if engine == "host":
             g = coarse_graph_from_labels(graph_handle.csr, labels, nagg)
-            SETUP_STATS.host_syncs += 1
+            _OBS.counter(SetupStats._SYNCS).inc()
             return Graph(g)
         ell = graph_handle.ell
         with x64_context():     # int64 edge keys (la * V + lb)
             keys, keep, _, width = _coarse_graph_keys_device(
                 ell.neighbors, ell.mask, jnp.asarray(labels.astype(np.int32)),
                 key_base=ell.num_vertices)
-            SETUP_STATS.resident_dispatches += 1
+            _OBS.counter(SetupStats._DISPATCHES).inc()
             nbrs, mask = _coarse_graph_ell_device(
                 keys, keep, key_base=ell.num_vertices, num_rows=nagg,
                 width=int(width))
-        SETUP_STATS.resident_dispatches += 1
+        _OBS.counter(SetupStats._DISPATCHES).inc()
         from ..graphs.csr import ELLGraph
 
         return Graph(ELLGraph(nbrs, mask))
@@ -578,12 +578,12 @@ def _cluster_gs_setup_impl(a, aggregation: str = "two_phase", options=None,
     if engine == "host":
         color_rows = pack_clusters_host(labels, coloring.colors,
                                         coloring.num_colors, v)
-        SETUP_STATS.host_syncs += 1
+        _OBS.counter(SetupStats._SYNCS).inc()
     else:
         with x64_context():     # int64 (color, cluster) sort keys
             color_rows = pack_clusters_device(labels, coloring.colors,
                                               coloring.num_colors, v)
-        SETUP_STATS.resident_dispatches += 2
+        _OBS.counter(SetupStats._DISPATCHES).inc(2)
     timings["pack"] += time.perf_counter() - t0
     return color_rows, coloring.num_colors, nagg, labels, \
         coloring.colors, timings

@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM train step/optimizer, test-only surface
 from .optimizer import AdamWConfig, adamw_init, adamw_update, schedule
 from .step import (
     cross_entropy,

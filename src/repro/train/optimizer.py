@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM train step/optimizer, test-only surface
 """Pure-JAX AdamW with warmup+cosine schedule (no external deps).
 
 Optimizer state is a pytree congruent with params, so the same

@@ -1,3 +1,4 @@
+# repro-lint: legacy seed-era LM train step/optimizer, test-only surface
 """Train / eval step construction for every architecture family.
 
 ``make_train_step(model, cfg, opt_cfg)`` returns a pure function
@@ -12,7 +13,7 @@ coefficient.
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -50,13 +51,15 @@ def make_loss_fn(model, cfg: ModelConfig) -> Callable:
 
 
 def make_train_step(model, cfg: ModelConfig,
-                    opt_cfg: AdamWConfig = AdamWConfig(),
+                    opt_cfg: Optional[AdamWConfig] = None,
                     num_microbatches: int = 1,
                     grad_shardings=None) -> Callable:
     """num_microbatches > 1: batch leaves carry a leading microbatch axis
     [k, B/k, ...]; gradients are accumulated over a ``lax.scan`` so live
     activation memory is one microbatch's worth (the standard fit-in-HBM
     lever for the train_4k cells)."""
+    if opt_cfg is None:
+        opt_cfg = AdamWConfig()
     loss_fn = make_loss_fn(model, cfg)
 
     if num_microbatches == 1:

@@ -1,0 +1,496 @@
+"""repro.lint (ISSUE 8): the AST-level determinism & execution-shape
+analyzer.  Per-rule positive/negative/suppressed fixtures, baseline
+semantics (grandfathering, monotonic shrinkage, mandatory reasons), the
+self-run gate (src/repro lints clean modulo the committed baseline), and
+the historical-bug reconstructions: RL102 must fire on the PR 3
+``id_bits(vp_total)`` bug re-introduced into the real core/dist.py code
+shape, and the facade must never alias a shared options default (PR 2)."""
+import inspect
+import json
+import textwrap
+from pathlib import Path
+
+from repro.lint import Baseline, BaselineEntry, check, lint_paths
+from repro.lint.findings import parse_legacy_tag, parse_suppressions
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+SRC_REPRO = REPO_ROOT / "src" / "repro"
+BASELINE = REPO_ROOT / "tools" / "lint_baseline.json"
+
+
+def run_lint(tmp_path, source, name="mod.py"):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(source))
+    return lint_paths([p], repo_root=tmp_path, roots=[])
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+def live(findings):
+    return [f for f in findings if not f.suppressed]
+
+
+# ---------------------------------------------------------------------------
+# RL101 trace-purity
+# ---------------------------------------------------------------------------
+
+def test_rl101_positive_branch_and_item_in_jit(tmp_path):
+    findings = run_lint(tmp_path, """\
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return x.item()
+        """)
+    rl101 = [f for f in findings if f.rule == "RL101"]
+    assert len(rl101) >= 2          # the Python branch AND the .item() sync
+    assert all(f.symbol == "f" for f in rl101)
+
+
+def test_rl101_positive_loop_body(tmp_path):
+    findings = run_lint(tmp_path, """\
+        import jax.lax as lax
+
+        def solve(x0):
+            def body(carry):
+                return carry + int(carry)
+            return lax.while_loop(lambda c: True, body, x0)
+        """)
+    assert any(f.rule == "RL101" and "int" in f.message for f in findings)
+
+
+def test_rl101_negative_without_jit(tmp_path):
+    findings = run_lint(tmp_path, """\
+        def f(x):
+            if x > 0:
+                return x.item()
+            return x
+        """)
+    assert not [f for f in findings if f.rule == "RL101"]
+
+
+def test_rl101_negative_static_bool_param(tmp_path):
+    # the _mis2_local_fixpoint shape: a bool-annotated kwarg of a
+    # shard_map-seeded function is host control flow, not a traced branch
+    findings = run_lint(tmp_path, """\
+        import jax
+
+        @jax.jit
+        def f(x, single_gather: bool = False):
+            if single_gather:
+                return x + 1
+            return x
+        """)
+    assert not [f for f in findings if f.rule == "RL101"]
+
+
+def test_rl101_negative_shape_is_static(tmp_path):
+    findings = run_lint(tmp_path, """\
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x.shape[0] > 4:
+                return x + 1
+            return x
+        """)
+    assert not [f for f in findings if f.rule == "RL101"]
+
+
+def test_rl101_respects_static_argnames(tmp_path):
+    findings = run_lint(tmp_path, """\
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("mode",))
+        def f(x, mode):
+            if mode:
+                return x + 1
+            return x
+        """)
+    assert not [f for f in findings if f.rule == "RL101"]
+
+
+# ---------------------------------------------------------------------------
+# RL102 priority-provenance
+# ---------------------------------------------------------------------------
+
+def test_rl102_positive_padded_name(tmp_path):
+    findings = run_lint(tmp_path, """\
+        from repro.core.tuples import id_bits
+
+        def pack_width(padded_graph):
+            vp_total = padded_graph.num_vertices
+            return id_bits(vp_total)
+        """)
+    rl102 = [f for f in findings if f.rule == "RL102"]
+    assert len(rl102) == 1
+    assert "vp_total" in rl102[0].message
+
+
+def test_rl102_positive_bucketing_call(tmp_path):
+    findings = run_lint(tmp_path, """\
+        from repro.core.tuples import id_bits
+
+        def _bucket(n):
+            return 1 << (n - 1).bit_length()
+
+        def pack_width(n):
+            size = _bucket(n)
+            return id_bits(size)
+        """)
+    assert any(f.rule == "RL102" for f in findings)
+
+
+def test_rl102_negative_real_count(tmp_path):
+    findings = run_lint(tmp_path, """\
+        from repro.core.tuples import id_bits
+
+        def pack_width(num_vertices):
+            return id_bits(num_vertices)
+        """)
+    assert not [f for f in findings if f.rule == "RL102"]
+
+
+def test_rl102_fires_on_reintroduced_pr3_bug(tmp_path):
+    """Reconstruct the PR 3 determinism bug on the REAL core/dist.py code
+    shape: swap the (fixed) ``id_bits(num_vertices)`` back to the padded
+    count and RL102 must fire inside the sharded fixed point."""
+    real = (SRC_REPRO / "core" / "dist.py").read_text()
+    assert "id_bits(num_vertices)" in real    # today's fixed shape
+    bugged = real.replace("id_bits(num_vertices)", "id_bits(vp_total)")
+    assert bugged != real
+    findings = run_lint(tmp_path, bugged, name="dist.py")
+    rl102 = [f for f in findings if f.rule == "RL102"]
+    assert rl102, "RL102 must catch the reconstructed PR 3 bug"
+    assert any("vp_total" in f.message for f in rl102)
+
+
+def test_rl102_clean_on_current_dist(tmp_path):
+    findings = run_lint(tmp_path, (SRC_REPRO / "core" / "dist.py").read_text(),
+                        name="dist.py")
+    assert not [f for f in findings if f.rule == "RL102"]
+
+
+# ---------------------------------------------------------------------------
+# RL103 timing
+# ---------------------------------------------------------------------------
+
+def test_rl103_positive(tmp_path):
+    findings = run_lint(tmp_path, """\
+        import time
+
+        def bench():
+            t0 = time.time()
+            return time.time() - t0
+        """)
+    assert len([f for f in findings if f.rule == "RL103"]) >= 1
+
+
+def test_rl103_negative_perf_counter(tmp_path):
+    findings = run_lint(tmp_path, """\
+        import time
+
+        def bench():
+            t0 = time.perf_counter()
+            return time.perf_counter() - t0
+        """)
+    assert not [f for f in findings if f.rule == "RL103"]
+
+
+def test_rl103_suppressed_epoch_alias(tmp_path):
+    findings = run_lint(tmp_path, """\
+        import time
+
+        _EPOCH_NOW = time.time  # repro-lint: ignore[RL103] epoch stamp, not a duration
+        """)
+    rl103 = [f for f in findings if f.rule == "RL103"]
+    assert rl103 and all(f.suppressed for f in rl103)
+
+
+def test_rl103_suppression_without_reason_stays_live(tmp_path):
+    findings = run_lint(tmp_path, """\
+        import time
+
+        _EPOCH_NOW = time.time  # repro-lint: ignore[RL103]
+        """)
+    rl103 = [f for f in findings if f.rule == "RL103"]
+    assert rl103 and not any(f.suppressed for f in rl103)
+    assert any("reason is mandatory" in f.message for f in rl103)
+
+
+# ---------------------------------------------------------------------------
+# RL104 obs hygiene
+# ---------------------------------------------------------------------------
+
+def test_rl104_positive_bad_name_and_legacy_write(tmp_path):
+    findings = run_lint(tmp_path, """\
+        from repro.obs import metrics
+        from repro.core.mis2 import HOTLOOP_STATS
+
+        def record(n):
+            metrics.counter("BadName").inc()
+            HOTLOOP_STATS.host_syncs += n
+        """)
+    msgs = [f.message for f in findings if f.rule == "RL104"]
+    assert any("scheme" in m for m in msgs)
+    assert any("legacy stats view" in m for m in msgs)
+
+
+def test_rl104_positive_fstring_name_and_digest_label(tmp_path):
+    findings = run_lint(tmp_path, """\
+        from repro.obs import metrics
+
+        def record(name, digest):
+            metrics.counter(f"{name}.calls").inc()
+            metrics.gauge("serve.cache.entries",
+                          labels={"graph": digest}).set(1)
+        """)
+    msgs = [f.message for f in findings if f.rule == "RL104"]
+    assert any("prefix" in m for m in msgs)
+    assert any("digest" in m for m in msgs)
+
+
+def test_rl104_negative_scheme_names(tmp_path):
+    findings = run_lint(tmp_path, """\
+        from repro.obs import metrics
+
+        def record(name):
+            metrics.counter("mis2.host_syncs").inc(2)
+            metrics.counter(f"serve.cache.{name}").inc()
+            metrics.histogram("serve.batch.size_vertices").observe(4)
+        """)
+    assert not [f for f in findings if f.rule == "RL104"]
+
+
+# ---------------------------------------------------------------------------
+# RL105 options aliasing
+# ---------------------------------------------------------------------------
+
+def test_rl105_positive_call_default(tmp_path):
+    findings = run_lint(tmp_path, """\
+        class Options:
+            pass
+
+        def solve(graph, options=Options(), sizes=[]):
+            return graph, options, sizes
+        """)
+    rl105 = [f for f in findings if f.rule == "RL105"]
+    assert len(rl105) >= 2          # the Options() call AND the [] literal
+
+
+def test_rl105_negative_none_sentinel(tmp_path):
+    findings = run_lint(tmp_path, """\
+        class Options:
+            pass
+
+        def solve(graph, options=None):
+            options = Options() if options is None else options
+            return graph, options
+        """)
+    assert not [f for f in findings if f.rule == "RL105"]
+
+
+def test_facade_calls_do_not_alias_options():
+    """PR 2 regression: two facade invocations must never share one
+    options object — every public facade signature uses the None
+    sentinel, and the resolver mints a fresh Mis2Options per call."""
+    from repro.api import engines, facade
+
+    a, b = engines._opts(None), engines._opts(None)
+    assert a is not b
+
+    for name, fn in inspect.getmembers(facade, inspect.isfunction):
+        if name.startswith("_"):
+            continue
+        for p in inspect.signature(fn).parameters.values():
+            if p.default is inspect.Parameter.empty or p.default is None:
+                continue
+            assert isinstance(
+                p.default, (int, float, str, bool, bytes, tuple, frozenset)
+            ) or p.default is Ellipsis, (
+                f"{name}({p.name}=...) has a shared mutable default "
+                f"{p.default!r} — the PR 2 aliasing bug class")
+
+
+# ---------------------------------------------------------------------------
+# RL106 kernel masking
+# ---------------------------------------------------------------------------
+
+def test_rl106_positive_unguarded_kernel(tmp_path):
+    findings = run_lint(tmp_path, """\
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def _gather_kernel(cols_ref, x_ref, y_ref):
+            cols = cols_ref[...]
+            y_ref[...] = jnp.take(x_ref[...], cols)
+        """)
+    rl106 = [f for f in findings if f.rule == "RL106"]
+    assert len(rl106) == 1
+    assert rl106[0].symbol == "_gather_kernel"
+
+
+def test_rl106_negative_pl_when_guard(tmp_path):
+    findings = run_lint(tmp_path, """\
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def _guarded_kernel(cols_ref, y_ref, *, count):
+            i = pl.program_id(0)
+
+            @pl.when(i * 8 < count)
+            def _():
+                y_ref[...] = cols_ref[...] * 2
+        """)
+    assert not [f for f in findings if f.rule == "RL106"]
+
+
+def test_rl106_negative_validity_mask(tmp_path):
+    findings = run_lint(tmp_path, """\
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def _masked_kernel(cols_ref, y_ref, *, num_rows):
+            i = pl.program_id(0)
+            block = cols_ref.shape[0]
+            valid = i * block + jnp.arange(block) < num_rows
+            y_ref[...] = jnp.where(valid, cols_ref[...], 0)
+        """)
+    assert not [f for f in findings if f.rule == "RL106"]
+
+
+def test_rl106_negative_non_pallas_file(tmp_path):
+    # "_ref" params without a pallas import are not kernel bodies
+    findings = run_lint(tmp_path, """\
+        def update(x_ref, y_ref):
+            y_ref[...] = x_ref[...]
+        """)
+    assert not [f for f in findings if f.rule == "RL106"]
+
+
+# ---------------------------------------------------------------------------
+# suppression / legacy pragma parsing
+# ---------------------------------------------------------------------------
+
+def test_suppression_parsing_trailing_and_standalone():
+    sups = parse_suppressions(
+        "x = 1  # repro-lint: ignore[RL103] trailing reason\n"
+        "# repro-lint: ignore[RL101,RL104] standalone reason\n"
+        "y = 2\n")
+    assert sups[1].codes == ("RL103",)
+    assert sups[2].codes == ("RL101", "RL104")   # the pragma line itself
+    assert sups[3].codes == ("RL101", "RL104")   # ...and the guarded line
+    assert sups[3].reason == "standalone reason"
+
+
+def test_pragmas_inside_strings_do_not_count():
+    text = '"""docs show `# repro-lint: legacy example` usage"""\nx = 1\n'
+    assert parse_legacy_tag(text) is None
+    assert parse_suppressions(
+        's = "# repro-lint: ignore[RL103] not a comment"\n') == {}
+
+
+def test_legacy_tag_real_comment():
+    assert parse_legacy_tag(
+        "# repro-lint: legacy seed-era module\nx = 1\n") \
+        == "seed-era module"
+
+
+def test_legacy_findings_are_nonfatal(tmp_path):
+    (tmp_path / "old.py").write_text(
+        "# repro-lint: legacy retired module\n"
+        "import time\n"
+        "t0 = time.time()\n")
+    result = check([tmp_path / "old.py"], repo_root=tmp_path, roots=[])
+    assert result.ok
+    assert any(f.rule == "RL103" for f in result.legacy)
+
+
+# ---------------------------------------------------------------------------
+# baseline semantics
+# ---------------------------------------------------------------------------
+
+def _one_rl103(tmp_path):
+    p = tmp_path / "mod.py"
+    p.write_text("import time\nt0 = time.time()\n")
+    return p
+
+
+def test_baseline_grandfathers_matching_finding(tmp_path):
+    p = _one_rl103(tmp_path)
+    bl = Baseline(entries=[BaselineEntry(
+        rule="RL103", path="mod.py", symbol="<module>",
+        reason="seed-era stamp, scheduled cleanup")])
+    result = check([p], baseline=bl, repo_root=tmp_path, roots=[])
+    assert result.ok
+    assert len(result.grandfathered) == 1
+    assert not result.findings
+
+
+def test_stale_baseline_entry_fails(tmp_path):
+    p = tmp_path / "mod.py"
+    p.write_text("import time\nt0 = time.perf_counter()\n")
+    bl = Baseline(entries=[BaselineEntry(
+        rule="RL103", path="mod.py", symbol="<module>", reason="paid off")])
+    result = check([p], baseline=bl, repo_root=tmp_path, roots=[])
+    assert not result.ok
+    assert any("stale" in m for m in result.baseline_problems)
+
+
+def test_baseline_placeholder_reason_fails(tmp_path):
+    p = _one_rl103(tmp_path)
+    bl = Baseline(entries=[BaselineEntry(
+        rule="RL103", path="mod.py", symbol="<module>", reason="FILLME")])
+    result = check([p], baseline=bl, repo_root=tmp_path, roots=[])
+    assert not result.ok
+    assert any("reason" in m for m in result.baseline_problems)
+
+
+def test_committed_baseline_is_small_and_reasoned():
+    data = json.loads(BASELINE.read_text())
+    entries = data["entries"]
+    assert len(entries) <= 10
+    for e in entries:
+        assert e["reason"].strip().lower() not in ("", "fillme", "todo", "tbd")
+
+
+# ---------------------------------------------------------------------------
+# the self-run gate + quarantine
+# ---------------------------------------------------------------------------
+
+def test_src_repro_lints_clean_modulo_baseline():
+    """The CI gate, as a test: the whole tree must be free of live
+    findings and baseline problems."""
+    result = check([SRC_REPRO], baseline=BASELINE, repo_root=REPO_ROOT)
+    assert result.ok, (
+        "repro-lint regressions:\n  "
+        + "\n  ".join(f.render() for f in result.findings)
+        + "\n  ".join(result.baseline_problems))
+
+
+def test_quarantined_modules_stay_unreachable():
+    result = check([SRC_REPRO], baseline=BASELINE, repo_root=REPO_ROOT)
+    # the seed-era LM stack is quarantined, and no RL001 violation means
+    # nothing live imports it
+    assert "repro.models" in result.quarantined
+    assert "repro.configs" in result.quarantined
+    assert not any(f.rule == "RL001" for f in result.findings)
+    # parity/reference kernels are test-only, not dead
+    assert "repro.kernels.minprop_ell.ref" in result.test_only
+
+
+def test_rl001_fires_when_quarantine_violated(tmp_path):
+    src = tmp_path / "src" / "repro"
+    src.mkdir(parents=True)
+    (src / "__init__.py").write_text("")
+    (src / "api.py").write_text("from repro.old import f\n")
+    (src / "old.py").write_text(
+        "# repro-lint: legacy retired\ndef f():\n    return 1\n")
+    result = check([src], repo_root=tmp_path, roots=[])
+    assert any(f.rule == "RL001" for f in result.findings)
+    assert not result.ok

@@ -1,0 +1,145 @@
+#!/usr/bin/env python
+"""repro.lint CLI — the static half of the repo's invariant gates.
+
+Usage::
+
+    python tools/repro_lint.py --check src/repro
+    python tools/repro_lint.py --check src/repro --format json
+    python tools/repro_lint.py --explain RL102
+    python tools/repro_lint.py --write-baseline src/repro
+
+``--check`` exits nonzero on any live finding (not suppressed inline, not
+in the committed baseline), on any baseline problem (a stale entry that no
+longer fires — baselines shrink monotonically — or an entry without a
+reason), or on a quarantine violation (RL001: a ``# repro-lint: legacy``
+module reachable from a facade/serve/bench entry point).
+
+Rules: RL101 trace-purity, RL102 priority-provenance, RL103 timing,
+RL104 obs-hygiene, RL105 options-aliasing, RL106 kernel-masking.
+``--explain RLxxx`` prints each rule's full story, including the
+historical bug it would have caught.
+
+CI runs this as the ``lint-invariants`` step; ``tools/check_shape.py``
+is the runtime half of the same invariant set (execution-shape gates on
+golden workloads).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+DEFAULT_BASELINE = REPO_ROOT / "tools" / "lint_baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro_lint",
+        description="AST-level determinism & execution-shape analyzer")
+    ap.add_argument("--check", nargs="+", metavar="PATH",
+                    help="lint these files/directories; exit nonzero on "
+                         "any live finding or baseline problem")
+    ap.add_argument("--explain", metavar="RLxxx",
+                    help="print the full docs for one rule and exit")
+    ap.add_argument("--write-baseline", nargs="+", metavar="PATH",
+                    help="lint and (re)write the baseline with every "
+                         "current live finding (reasons stubbed FILLME — "
+                         "an unedited baseline cannot pass --check)")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help=f"baseline file (default {DEFAULT_BASELINE})")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--no-reachability", action="store_true",
+                    help="skip the module-reachability report section")
+    args = ap.parse_args(argv)
+
+    from repro.lint import (
+        Baseline,
+        baseline_from_findings,
+        check,
+        get_rule,
+    )
+
+    if args.explain:
+        try:
+            rule = get_rule(args.explain.upper())
+        except KeyError:
+            known = ", ".join(sorted(
+                r.code for r in __import__(
+                    "repro.lint.rules", fromlist=["all_rules"]).all_rules()))
+            print(f"unknown rule {args.explain!r}; known: {known}",
+                  file=sys.stderr)
+            return 2
+        print(rule.explain.rstrip())
+        return 0
+
+    targets = args.check or args.write_baseline
+    if not targets:
+        ap.error("one of --check, --explain, --write-baseline is required")
+
+    result = check(targets, baseline=args.baseline, repo_root=REPO_ROOT)
+
+    if args.write_baseline:
+        bl = baseline_from_findings(result.findings)
+        # keep still-firing existing entries (and their curated reasons)
+        old = Baseline.load(args.baseline)
+        live_keys = {e.key for e in bl.entries}
+        merged = {e.key: e for e in bl.entries}
+        for f, entry in result.grandfathered:
+            merged[entry.key] = entry
+        bl.entries = [merged[k] for k in sorted(merged)]
+        bl.save(args.baseline)
+        kept = sum(1 for e in bl.entries if e.reason != "FILLME")
+        print(f"wrote {args.baseline}: {len(bl.entries)} entries "
+              f"({kept} with curated reasons, "
+              f"{len(bl.entries) - kept} FILLME stubs to edit)")
+        del old
+        return 0
+
+    if args.format == "json":
+        print(json.dumps(result.to_dict(), indent=2))
+        return 0 if result.ok else 1
+
+    # ---- text report ----------------------------------------------------
+    for f in result.findings:
+        print(f.render())
+    for f, entry in result.grandfathered:
+        print(f"{f.render()}  [baseline: {entry.reason}]")
+    for msg in result.baseline_problems:
+        print(f"BASELINE: {msg}")
+    if result.legacy:
+        print(f"-- {len(result.legacy)} finding(s) in legacy-quarantined "
+              "modules (non-fatal):")
+        for f in result.legacy:
+            print(f"   {f.render()}")
+    if not args.no_reachability:
+        print("-- reachability (entry roots: repro.api / repro.serve / "
+              "repro.obs / benchmarks / examples / tools / runnable "
+              "__main__ modules):")
+        print(f"   quarantined legacy modules: "
+              f"{len(result.quarantined)}")
+        for m in sorted(result.quarantined):
+            print(f"     legacy      {m}")
+        for m in sorted(result.test_only):
+            print(f"     test-only   {m}  (parity/reference surface, "
+                  "consumed by tests only)")
+        for m in sorted(result.unreachable):
+            print(f"     unreachable {m}  (no legacy tag — retire or wire "
+                  "it up)")
+    n_sup = len(result.suppressed)
+    n_bl = len(result.grandfathered)
+    verdict = "clean" if result.ok else "FAILED"
+    print(f"repro-lint: {verdict} — {len(result.findings)} live finding(s), "
+          f"{n_bl} baselined, {n_sup} suppressed inline, "
+          f"{len(result.legacy)} legacy")
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except BrokenPipeError:  # e.g. `--explain RLxxx | head`
+        sys.exit(0)
