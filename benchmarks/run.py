@@ -29,6 +29,7 @@ from benchmarks import (  # noqa: E402
     figs4_5_scaling,
     hotloop_overhead,
     roofline,
+    serve_resilience,
     serve_throughput,
     setup_overhead,
     table1_priorities,
@@ -53,6 +54,7 @@ ALL = {
     "hotloop": hotloop_overhead.run,
     "setup": setup_overhead.run,
     "serve": serve_throughput.run,
+    "serve_resilience": serve_resilience.run,
 }
 
 

@@ -1,0 +1,193 @@
+"""repro.serve resilience: shed-mode latency, fault-rate sweeps, restart.
+
+Three measurements of the hardened serving layer:
+
+* **overload** — a burst far past batched capacity, served (a) by an
+  unbounded queue (the pre-hardening execution model: everything is
+  admitted, p99 grows with the backlog) and (b) under admission control
+  (bounded queue + deadline-aware shedding: excess requests fail fast
+  with typed errors and the p99 of *served* requests stays bounded by
+  the queue depth, not the offered load).  The run asserts shed-mode
+  p99 <= unbounded p99 and that every served result is digest-correct.
+* **faults** — a seeded fault-rate sweep on the engine site (transient
+  errors, retried with zero backoff): throughput vs injected fault rate,
+  with every response digest-asserted against the direct referent — the
+  cost of resilience, with proof it never trades away correctness.
+* **persist** — cold compute vs restart-rehydration from the
+  digest-verified disk tier (same workload, fresh server on the same
+  directory): the restart serves entirely from disk (0 dispatches,
+  0 corrupt entries served).
+
+Headline metrics append to ``BENCH_serve_resilience.json`` at the repo
+root via ``emit_trajectory``.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+import repro
+from repro.graphs import laplace3d, random_uniform_graph
+from repro.serve import (Fault, FaultPlan, QuotaConfig, RetryPolicy,
+                         ServeError, Server, ServerConfig, warm_buckets_for)
+
+from .common import emit, emit_trajectory
+
+
+def _pool(quick: bool):
+    """Digest-distinct small graphs — the serving regime (request-rate
+    bound, not solve-bound)."""
+    if quick:
+        meshes, uniforms = (4, 5), ((150, 5.0), (250, 6.0))
+    else:
+        meshes, uniforms = (5, 6, 8), ((400, 6.0), (800, 8.0), (250, 5.0))
+    graphs = [repro.Graph(laplace3d(n)) for n in meshes]
+    graphs += [repro.Graph(random_uniform_graph(v, d, seed=i))
+               for i, (v, d) in enumerate(uniforms)]
+    return graphs
+
+
+def _burst(server, graphs, n_requests):
+    """Submit a burst, wait everything out; returns (latencies of served
+    requests in seconds, shed count, digest-ok bool)."""
+    referents = {g.digest: repro.mis2(g).digest for g in graphs}
+    records = []
+    for i in range(n_requests):
+        g = graphs[i % len(graphs)]
+        t0 = time.perf_counter()
+        fut = server.submit("mis2", g)
+        records.append((g, t0, fut))
+    served, shed, ok = [], 0, True
+    for g, t0, fut in records:
+        try:
+            res = fut.result(timeout=300)
+        except ServeError:
+            shed += 1
+            continue
+        served.append(time.perf_counter() - t0)
+        ok = ok and (res.digest == referents[g.digest])
+    return served, shed, ok
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
+def run(quick: bool = False) -> None:
+    graphs = _pool(quick)
+    warm = warm_buckets_for(graphs)
+    n_burst = 48 if quick else 160
+    rows = []
+
+    # --- overload: unbounded backlog vs admission-controlled shedding ----
+    base = dict(max_batch=8, max_delay_s=0.002, warm_buckets=warm,
+                cache_bytes=0, dedup=False, poll_interval_s=0.0005)
+    with Server(ServerConfig(**base)) as srv:
+        lat_u, shed_u, ok_u = _burst(srv, graphs, n_burst)
+    assert ok_u and shed_u == 0
+    p99_unbounded = _percentile(lat_u, 99)
+
+    with Server(ServerConfig(**base, max_pending=8,
+                             quota=QuotaConfig(rate=1e6, burst=1e6))) as srv:
+        lat_s, shed_s, ok_s = _burst(srv, graphs, n_burst)
+        shed_stats = srv.server_stats()
+    assert ok_s, "shed-mode served a digest-incorrect result"
+    assert shed_s > 0, "overload burst was never shed; raise n_burst"
+    p99_shed = _percentile(lat_s, 99)
+    assert p99_shed <= p99_unbounded, (
+        f"shed-mode p99 {p99_shed:.4f}s exceeds unbounded {p99_unbounded:.4f}s")
+    rows.append({"section": "overload", "variant": "unbounded",
+                 "seconds": p99_unbounded, "served": len(lat_u), "shed": 0,
+                 "p50_s": round(_percentile(lat_u, 50), 6)})
+    rows.append({"section": "overload", "variant": "admission",
+                 "seconds": p99_shed, "served": len(lat_s), "shed": shed_s,
+                 "p50_s": round(_percentile(lat_s, 50), 6)})
+
+    # --- faults: throughput vs seeded transient fault rate ---------------
+    fault_rows = []
+    referents = {g.digest: repro.mis2(g).digest for g in graphs}
+    n_fault = 24 if quick else 60
+    for rate in (0.0, 0.25, 0.5):
+        plan = None
+        if rate > 0.0:
+            plan = FaultPlan(seed=11, sites={
+                "engine": Fault("error", rate=rate, transient=True)})
+        srv = Server(ServerConfig(
+            max_batch=8, max_delay_s=0.0, warm_buckets=warm, cache_bytes=0,
+            dedup=False, faults=plan,
+            retry=RetryPolicy(max_attempts=3, base_backoff_s=0.0)))
+        t0 = time.perf_counter()
+        futs = [(graphs[i % len(graphs)],
+                 srv.submit("mis2", graphs[i % len(graphs)]))
+                for i in range(n_fault)]
+        srv.flush()
+        dt = time.perf_counter() - t0
+        for g, fut in futs:
+            assert fut.result().digest == referents[g.digest], (
+                f"fault rate {rate}: digest-incorrect response")
+        st = srv.server_stats()
+        srv.stop()
+        fault_rows.append({"section": "faults", "rate": rate,
+                           "seconds": dt, "rps": round(n_fault / dt, 1),
+                           "retries": st["retries"],
+                           "fallbacks": st["fallbacks"]})
+    rows += fault_rows
+
+    # --- persist: cold compute vs restart rehydration --------------------
+    tier_dir = tempfile.mkdtemp(prefix="repro_serve_tier_")
+    try:
+        srv = Server(ServerConfig(max_delay_s=0.0, persist_dir=tier_dir))
+        t0 = time.perf_counter()
+        for g in graphs:
+            assert srv.request("mis2", g).digest == referents[g.digest]
+        cold_s = time.perf_counter() - t0
+        srv.stop()
+
+        srv2 = Server(ServerConfig(max_delay_s=0.0, persist_dir=tier_dir))
+        t0 = time.perf_counter()
+        for g in graphs:
+            assert srv2.request("mis2", g).digest == referents[g.digest]
+        rehydrated_s = time.perf_counter() - t0
+        persist_stats = srv2.persist.stats.as_dict()
+        assert srv2.stats.dispatches == 0, "restart recomputed instead of " \
+            "rehydrating"
+        assert persist_stats["corrupt"] == 0
+        srv2.stop()
+    finally:
+        shutil.rmtree(tier_dir, ignore_errors=True)
+    rows.append({"section": "persist", "variant": "cold", "seconds": cold_s,
+                 "graphs": len(graphs)})
+    rows.append({"section": "persist", "variant": "rehydrated",
+                 "seconds": rehydrated_s, "graphs": len(graphs),
+                 "speedup": round(cold_s / max(rehydrated_s, 1e-9), 1)})
+
+    fieldnames = []
+    for r in rows:
+        fieldnames += [k for k in r if k not in fieldnames]
+    rows = [{k: r.get(k, "") for k in fieldnames} for r in rows]
+    emit("serve_resilience", rows)
+    emit_trajectory("serve_resilience", {
+        "quick": quick,
+        "burst_requests": n_burst,
+        "p99_unbounded_s": round(p99_unbounded, 6),
+        "p99_shed_s": round(p99_shed, 6),
+        "shed_count": shed_s,
+        "served_under_admission": len(lat_s),
+        "shed_counters": {"shed": shed_stats["shed"],
+                          "expired": shed_stats["expired"]},
+        "fault_sweep": [{"rate": r["rate"], "rps": r["rps"],
+                         "retries": r["retries"],
+                         "fallbacks": r["fallbacks"]} for r in fault_rows],
+        "persist_cold_s": round(cold_s, 6),
+        "persist_rehydrated_s": round(rehydrated_s, 6),
+        "persist_stats": persist_stats,
+    })
+
+
+if __name__ == "__main__":
+    from .common import standalone
+
+    standalone(run)

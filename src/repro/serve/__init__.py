@@ -2,9 +2,17 @@
 
 Continuous batching (deadline-or-full coalescing into ``GraphBatch``
 buckets), a digest-keyed LRU result cache whose hits are provably
-bit-identical to recomputation, a warm-executable registry that
+bit-identical to recomputation (with an optional digest-verified disk
+tier that survives restarts), a warm-executable registry that
 AOT-compiles configured bucket shapes at startup, and a streaming update
 mode with exact incremental MIS-2 repair.  See API.md "Serving".
+
+The hardened request path adds in-flight dedup (one compute per unique
+``(kind, digest, engine, options)`` key), admission control (bounded
+queue, per-caller quotas, deadline-aware shedding with typed errors),
+and a retry/fallback policy under deterministic seeded fault injection —
+every response is a digest-correct ``Result`` or a typed
+:class:`~repro.serve.errors.ServeError`; nothing hangs, nothing lies.
 
     from repro.serve import Server, ServerConfig
 
@@ -13,8 +21,15 @@ mode with exact incremental MIS-2 repair.  See API.md "Serving".
     srv.flush()                      # or srv.start() for a live pump
     result = fut.result()            # bit-identical to repro.mis2(graph)
 """
+from .admission import AdmissionController, QuotaConfig, TokenBucket
 from .batcher import Batcher, PendingRequest
 from .cache import CacheParityError, CacheStats, ResultCache
+from .errors import (DeadlineExceeded, DigestMismatch, EngineFailure,
+                     QuotaExceeded, ServeError, ServerClosed,
+                     ServerOverloaded)
+from .faults import (FALLBACK_ENGINES, Fault, FaultPlan, InjectedFault,
+                     RetryPolicy)
+from .persist import PersistStats, PersistTier
 from .server import KINDS, Server, ServerConfig, ServeStats, warm_buckets_for
 from .streaming import RepairStats, StreamSession
 from .warm import WarmRegistry, WarmSpec
@@ -22,7 +37,13 @@ from .warm import WarmRegistry, WarmSpec
 __all__ = [
     "Server", "ServerConfig", "ServeStats", "KINDS", "warm_buckets_for",
     "ResultCache", "CacheStats", "CacheParityError",
+    "PersistTier", "PersistStats",
     "WarmRegistry", "WarmSpec",
     "Batcher", "PendingRequest",
     "StreamSession", "RepairStats",
+    "AdmissionController", "QuotaConfig", "TokenBucket",
+    "ServeError", "ServerClosed", "ServerOverloaded", "QuotaExceeded",
+    "DeadlineExceeded", "EngineFailure", "DigestMismatch",
+    "Fault", "FaultPlan", "InjectedFault", "RetryPolicy",
+    "FALLBACK_ENGINES",
 ]

@@ -14,8 +14,17 @@ group per engine and dispatch through the single-graph facade path.
 Results are bit-identical either way (the repo invariant) — grouping
 affects throughput, never bytes.
 
+Per-request deadlines: a request may carry an absolute ``deadline`` (same
+timebase as ``now``).  :meth:`Batcher.pop_expired` evicts expired requests
+*before* they can be dispatched — the server fails them with
+``DeadlineExceeded`` and the engine never burns compute on an answer
+nobody is waiting for.  ``next_deadline`` accounts for both the batching
+latency budget and the earliest request deadline, so the pump loop wakes
+in time to evict.
+
 Timebase: every entry point takes an explicit ``now`` so tests drive the
-deadline logic with a manual clock; the server passes ``time.monotonic()``.
+deadline logic with a manual clock; the server passes
+``time.perf_counter()``.
 """
 from __future__ import annotations
 
@@ -36,6 +45,8 @@ class PendingRequest:
     cache_key: tuple
     future: Future = field(default_factory=Future)
     enqueued_at: float = 0.0
+    deadline: Optional[float] = None    # absolute, server clock; None = none
+    caller: str = "default"             # admission-control caller identity
 
 
 def _freeze(obj) -> tuple:
@@ -105,10 +116,43 @@ class Batcher:
                 del self._groups[key]
         return out
 
+    def pop_expired(self, now: float) -> list[PendingRequest]:
+        """Remove and return every queued request whose deadline passed.
+
+        Called by the pump before :meth:`due` so expired work is never
+        dispatched — the server fails these futures with a typed
+        ``DeadlineExceeded`` instead of computing answers late.
+        """
+        expired: list[PendingRequest] = []
+        for key in list(self._groups):
+            reqs = self._groups[key]
+            keep = [r for r in reqs
+                    if r.deadline is None or r.deadline > now]
+            if len(keep) != len(reqs):
+                expired.extend(r for r in reqs
+                               if r.deadline is not None
+                               and r.deadline <= now)
+                if keep:
+                    self._groups[key] = keep
+                else:
+                    del self._groups[key]
+        return expired
+
+    def drain(self) -> list[PendingRequest]:
+        """Remove and return everything still queued (terminal shutdown:
+        the server fails these with ``ServerClosed``)."""
+        out = [r for reqs in self._groups.values() for r in reqs]
+        self._groups.clear()
+        return out
+
     def next_deadline(self, now: float) -> Optional[float]:
-        """Seconds until the earliest pending deadline (None if empty)."""
-        oldest = [reqs[0].enqueued_at for reqs in self._groups.values()
-                  if reqs]
-        if not oldest:
+        """Seconds until the earliest pending event — a group's batching
+        deadline or a request's own deadline, whichever comes first
+        (None if empty)."""
+        marks = [reqs[0].enqueued_at + self.max_delay_s
+                 for reqs in self._groups.values() if reqs]
+        marks.extend(r.deadline for reqs in self._groups.values()
+                     for r in reqs if r.deadline is not None)
+        if not marks:
             return None
-        return max(0.0, min(oldest) + self.max_delay_s - now)
+        return max(0.0, min(marks) - now)

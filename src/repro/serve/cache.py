@@ -94,6 +94,9 @@ class ResultCache:
     max_bytes: int = 64 << 20
     parity_fraction: float = 0.0
     stats: CacheStats = field(default_factory=CacheStats)
+    #: optional PersistTier under this cache: memory misses fall through
+    #: to disk (digest-verified on load), inserts write through
+    persist: Optional[Any] = None
 
     def __post_init__(self):
         self._entries: OrderedDict[tuple, tuple[Any, int]] = OrderedDict()
@@ -108,8 +111,17 @@ class ResultCache:
 
         On a hit the entry is refreshed (LRU) and, per the sampling
         accumulator, optionally parity-checked against ``recompute()``.
+        A memory miss falls through to the persistent tier (if any):
+        a digest-verified disk hit counts as a cache hit and is promoted
+        into memory (without re-writing disk).
         """
         if self.max_bytes <= 0 or key not in self._entries:
+            if self.persist is not None and self.max_bytes > 0:
+                rehydrated = self.persist.load(key)
+                if rehydrated is not None:
+                    self.stats.bump("hits")
+                    self.insert(key, rehydrated, write_persist=False)
+                    return rehydrated
             self.stats.bump("misses")
             return None
         result, _ = self._entries[key]
@@ -128,9 +140,11 @@ class ResultCache:
                         f"{result.digest} != recomputed {fresh.digest}")
         return result
 
-    def insert(self, key: tuple, result) -> None:
+    def insert(self, key: tuple, result, write_persist: bool = True) -> None:
         if self.max_bytes <= 0:
             return
+        if write_persist and self.persist is not None:
+            self.persist.store(key, result)
         nbytes = _result_nbytes(result)
         if nbytes > self.max_bytes:
             return  # would evict everything and still not fit

@@ -2,30 +2,44 @@
 
 ``Server`` accepts concurrent ``mis2`` / ``color`` / ``coarsen`` /
 ``amg_setup`` requests and serves every one with a result bit-identical
-to the direct facade call — batching, caching, and warm executables are
-throughput machinery, never semantics (the repo's determinism invariant
-is what makes that composition safe).
+to the direct facade call — batching, caching, warm executables, request
+dedup, and fallback engines are throughput/robustness machinery, never
+semantics (the repo's determinism invariant is what makes every one of
+those compositions safe).
 
 Request path::
 
-    submit() -> cache lookup (digest-keyed, provably-safe hits)
+    submit() -> closed check (typed ServerClosed after stop())
+             -> cache lookup (memory LRU, then digest-verified disk tier)
+             -> admission control (quota / bounded queue / deadline
+                feasibility -> typed shed errors)
+             -> in-flight dedup (same-key concurrent requests join the
+                primary's future; exactly one compute per unique key)
              -> batcher group (deadline-or-full continuous batching)
-    pump()   -> batched dispatch over GraphBatch buckets
-                (mis2 through the warm AOT executables; single stragglers
-                 through the per-request auto-selected resident engine)
-             -> cache insert + future resolution
+    pump()   -> expired-request eviction (never dispatched)
+             -> batched dispatch over GraphBatch buckets, under the
+                retry/fallback policy (transient faults retried with
+                capped backoff; persistent failures degrade to the
+                host/dense referent engine)
+             -> digest ledger check -> cache insert + future resolution
+
+The **digest ledger** is the last line of the robustness contract: the
+server remembers the digest it served for each key and refuses (typed
+``DigestMismatch``) to ever serve a second, different digest for the same
+key — so retries, fallbacks, and rehydrated cache entries are all held to
+the engine contract, not trusted.
 
 ``pump()`` is the explicit event-loop step (deterministic for tests and
 CI); ``start()`` runs it on a daemon thread for real concurrent callers.
-Engine auto-selection happens per request at dispatch time via
-``api.backend.default_mis2_engine`` / ``default_multilevel_engine`` with
-the *request's* backend — a server booted on CPU serves a TPU-placed
-request with the resident engine, not a server-global default.
+``stop()`` is terminal: queued futures fail with ``ServerClosed``, later
+submits return already-failed futures — nothing ever hangs.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
@@ -47,17 +61,27 @@ from ..batch.container import bucket_shape
 from ..core.mis2 import IN, Mis2Options, is_undecided
 from ..core.tuples import id_bits
 from ..graphs.handle import as_graph
+from .admission import AdmissionController, QuotaConfig
 from .batcher import Batcher, PendingRequest, _freeze
 from .cache import ResultCache
+from .errors import (DeadlineExceeded, DigestMismatch, EngineFailure,
+                     ServeError, ServerClosed)
+from .faults import FALLBACK_ENGINES, FaultPlan, InjectedFault, RetryPolicy
+from .persist import PersistTier
 from .streaming import StreamSession
 from .warm import WarmRegistry, WarmSpec
 
 KINDS = ("mis2", "color", "coarsen", "amg_setup")
 
+#: digest-ledger retention: enough for every key a long-lived server
+#: plausibly serves, bounded so the ledger cannot grow without limit
+LEDGER_CAP = 65536
+
 
 @dataclass(frozen=True)
 class ServerConfig:
-    """Serving policy: batching budget, cache budget, warm shapes.
+    """Serving policy: batching budget, cache budget, warm shapes,
+    admission limits, fault/retry semantics, persistence.
 
     ``warm_buckets`` lists ``(rows, width)`` bucket shapes (the
     ``repro.batch`` power-of-two classes) to AOT-compile at startup at
@@ -66,6 +90,25 @@ class ServerConfig:
     compile.  ``parity_fraction`` recomputes that fraction of cache hits
     and asserts digest equality; ``delta_check_fraction`` does the same
     for streaming repairs.
+
+    Hardening knobs (all off by default — a default server behaves like
+    the PR 6 server, minus the dangling futures):
+
+    * ``dedup``              coalesce concurrent same-key requests onto
+      one in-flight future (exactly one compute per unique key),
+    * ``max_pending``        bounded queue; beyond it submits fail with
+      ``ServerOverloaded`` (None = unbounded),
+    * ``quota``              per-caller token-bucket rate limit
+      (:class:`~repro.serve.admission.QuotaConfig`; None = no quotas),
+    * ``default_deadline_s`` deadline applied to requests that don't pass
+      their own ``deadline_s`` (None = no deadline); expired queued work
+      is evicted, never dispatched,
+    * ``retry``              :class:`~repro.serve.faults.RetryPolicy` for
+      transient-fault retries and engine fallback,
+    * ``faults``             a seeded :class:`~repro.serve.faults.FaultPlan`
+      for chaos runs (None in production),
+    * ``persist_dir``        directory for the digest-verified disk cache
+      tier (None = memory-only), ``persist_bytes`` its byte budget.
     """
 
     max_batch: int = 8
@@ -78,21 +121,36 @@ class ServerConfig:
     single_fast_path: bool = True
     backend: Optional[Backend] = None
     poll_interval_s: float = 0.002
+    dedup: bool = True
+    max_pending: Optional[int] = None
+    quota: Optional[QuotaConfig] = None
+    default_deadline_s: Optional[float] = None
+    retry: RetryPolicy = RetryPolicy()
+    faults: Optional[FaultPlan] = None
+    persist_dir: Optional[str] = None
+    persist_bytes: int = 256 << 20
 
 
 @dataclass
 class ServeStats:
     """Per-server counters, mirrored into the ``repro.obs`` registry
     (``serve.requests`` / ``serve.dispatches`` / ``serve.batched_graphs``
-    / ``serve.single_dispatches``).  All timestamps come from
-    ``time.perf_counter()`` — the one clock every timing in this repo
-    reports on (uptime windows, cache timings, span durations), so
-    derived intervals are mutually comparable and monotone."""
+    / ``serve.single_dispatches`` / ``serve.dedup_hits`` / ``serve.shed``
+    / ``serve.expired`` / ``serve.retries`` / ``serve.fallbacks``).  All
+    timestamps come from ``time.perf_counter()`` — the one clock every
+    timing in this repo reports on (uptime windows, cache timings, span
+    durations), so derived intervals are mutually comparable and
+    monotone."""
 
     requests: int = 0
     dispatches: int = 0
     batched_graphs: int = 0
     single_dispatches: int = 0
+    dedup_hits: int = 0
+    shed: int = 0
+    expired: int = 0
+    retries: int = 0
+    fallbacks: int = 0
     started_at: float = field(default_factory=time.perf_counter)
     window_started_at: float = field(default_factory=time.perf_counter)
 
@@ -106,15 +164,30 @@ class Server:
 
     def __init__(self, config: Optional[ServerConfig] = None):
         self.config = config if config is not None else ServerConfig()
+        self.persist: Optional[PersistTier] = None
+        if self.config.persist_dir is not None:
+            self.persist = PersistTier(self.config.persist_dir,
+                                       max_bytes=self.config.persist_bytes,
+                                       faults=self.config.faults)
         self.cache = ResultCache(max_bytes=self.config.cache_bytes,
-                                 parity_fraction=self.config.parity_fraction)
+                                 parity_fraction=self.config.parity_fraction,
+                                 persist=self.persist)
         self.batcher = Batcher(max_batch=self.config.max_batch,
                                max_delay_s=self.config.max_delay_s)
+        self.admission = AdmissionController(
+            max_pending=self.config.max_pending, quota=self.config.quota)
         self.warm = WarmRegistry()
         self.stats = ServeStats()
         self._lock = threading.RLock()
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
+        self._closed = False
+        # key -> primary future, while queued-or-dispatching (dedup joins)
+        self._inflight: dict[tuple, object] = {}
+        # key -> digest already served for that key (never contradicted)
+        self._ledger: OrderedDict[tuple, str] = OrderedDict()
+        # EWMA of seconds per dispatch, for the admission wait estimate
+        self._service_ewma: Optional[float] = None
         opts = self.config.mis2_options or Mis2Options()
         self.warm.warm(WarmSpec(self.config.max_batch, rows, width,
                                 opts.priority, opts.max_iters)
@@ -141,23 +214,56 @@ class Server:
             return out
         raise ValueError(f"unknown request kind {kind!r} (one of {KINDS})")
 
+    def _count_shed(self, reason: str) -> None:
+        self.stats.shed += 1
+        _OBS.counter("serve.shed", labels={"reason": reason}).inc()
+
+    def _rejected(self, req: PendingRequest, err: ServeError):
+        """Fail a request at admission: typed error on its future,
+        ``serve.shed{reason=...}`` counted — the caller sees the error on
+        ``result()``, never an exception out of ``submit`` itself."""
+        self._count_shed(err.reason)
+        req.future.set_exception(err)
+        return req.future
+
     def submit(self, kind: str, graph, *, engine: Optional[str] = None,
-               backend: Optional[Backend] = None, **params):
+               backend: Optional[Backend] = None,
+               deadline_s: Optional[float] = None,
+               caller: str = "default", **params):
         """Enqueue one request; returns a ``concurrent.futures.Future``.
 
+        The returned future always resolves — with a digest-correct
+        ``Result`` or a typed :class:`~repro.serve.errors.ServeError`
+        (shed, expired, closed, failed).  ``submit`` itself only raises
+        for malformed requests (unknown kind/params).
+
         A cache hit resolves the future immediately (optionally parity-
-        checked); otherwise the request joins its continuous-batching
-        group and resolves at the next full/deadline dispatch.
+        checked) and bypasses admission.  Otherwise the request passes
+        admission control, then — under ``dedup`` — coalesces onto any
+        in-flight computation for the same ``(kind, digest, engine,
+        options)`` key (joiners share the primary's future, including its
+        deadline fate), else joins its continuous-batching group.
+
+        ``deadline_s`` is a relative deadline (falls back to
+        ``config.default_deadline_s``); expired queued requests are
+        evicted with ``DeadlineExceeded``, never dispatched.  ``caller``
+        is the per-caller quota identity.
         """
         gh = as_graph(graph)
         norm = self._normalize(kind, params)
         be = backend if backend is not None else self.config.backend
         engine_token = engine if engine is not None else "auto"
         key = (kind, gh.digest, engine_token, _freeze(norm))
+        if deadline_s is None:
+            deadline_s = self.config.default_deadline_s
         req = PendingRequest(kind=kind, graph=gh, params=norm, engine=engine,
-                             backend=be, cache_key=key)
+                             backend=be, cache_key=key, caller=caller)
         with self._lock, _obs_span("serve.submit", kind=kind) as sp:
             self.stats.bump("requests")
+            if self._closed:
+                sp.annotate(outcome="closed")
+                return self._rejected(req, ServerClosed(
+                    "server is stopped; submit on a new Server"))
             with _obs_span("serve.cache_lookup", kind=kind):
                 cached = self.cache.lookup(
                     key, recompute=lambda: self._parity_referent(req))
@@ -166,7 +272,25 @@ class Server:
                 req.future.set_result(cached)
                 return req.future
             sp.annotate(cache="miss")
-            self.batcher.add(req, time.perf_counter())
+            joining = self.config.dedup and key in self._inflight
+            try:
+                self.admission.admit(
+                    caller=caller, pending=len(self.batcher),
+                    deadline_s=deadline_s, est_wait_s=self._est_wait(),
+                    joining=joining)
+            except ServeError as err:
+                sp.annotate(outcome=f"shed:{err.reason}")
+                return self._rejected(req, err)
+            if joining:
+                sp.annotate(outcome="dedup")
+                self.stats.bump("dedup_hits")
+                return self._inflight[key]
+            now = time.perf_counter()
+            if deadline_s is not None:
+                req.deadline = now + deadline_s
+            if self.config.dedup:
+                self._inflight[key] = req.future
+            self.batcher.add(req, now)
         return req.future
 
     def request(self, kind: str, graph, *, engine: Optional[str] = None,
@@ -180,18 +304,32 @@ class Server:
     def open_stream(self, graph, *,
                     options: Optional[Mis2Options] = None) -> StreamSession:
         """A streaming MIS-2 session governed by this server's config
-        (``delta_check_fraction`` taken from the serving config)."""
+        (``delta_check_fraction`` and the fault plan taken from the
+        serving config)."""
+        if self._closed:
+            raise ServerClosed("server is stopped; open streams on a "
+                               "new Server")
         return StreamSession(
             graph, options=options,
-            check_fraction=self.config.delta_check_fraction)
+            check_fraction=self.config.delta_check_fraction,
+            faults=self.config.faults)
 
     # -- event loop ---------------------------------------------------------
 
     def pump(self, now: Optional[float] = None, force: bool = False) -> int:
-        """Dispatch every due group; returns the number of groups served."""
+        """Evict expired requests, dispatch every due group; returns the
+        number of groups served."""
         with self._lock:
-            groups = self.batcher.due(
-                time.perf_counter() if now is None else now, force=force)
+            if self._closed:
+                return 0
+            t = time.perf_counter() if now is None else now
+            for req in self.batcher.pop_expired(t):
+                self.stats.bump("expired")
+                self._finish_error(req, DeadlineExceeded(
+                    f"deadline expired after {t - req.enqueued_at:.4f}s in "
+                    "queue; request evicted before dispatch"),
+                    shed_reason="expired")
+            groups = self.batcher.due(t, force=force)
             for _, reqs in groups:
                 self._dispatch(reqs)
             return len(groups)
@@ -203,6 +341,8 @@ class Server:
     def start(self) -> "Server":
         """Run the pump on a daemon thread (idempotent)."""
         with self._lock:
+            if self._closed:
+                raise ServerClosed("cannot start a stopped server")
             if self._thread is not None:
                 return self
             self._stop.clear()
@@ -212,14 +352,27 @@ class Server:
         return self
 
     def stop(self) -> None:
-        """Stop the pump thread and flush whatever is still queued."""
-        thread = self._thread
-        if thread is None:
-            return
+        """Terminal shutdown: the pump thread stops, every queued future
+        fails with :class:`~repro.serve.errors.ServerClosed`, and every
+        later ``submit`` returns a future already carrying it.  Requests
+        mid-dispatch on the pump thread complete normally (the drain runs
+        under the same lock dispatch holds).  Idempotent."""
+        with self._lock:
+            first = not self._closed
+            self._closed = True
+            thread = self._thread
+            self._thread = None
         self._stop.set()
-        thread.join()
-        self._thread = None
-        self.flush()
+        if thread is not None:
+            thread.join()
+        if not first:
+            return
+        with self._lock:
+            for req in self.batcher.drain():
+                self._finish_error(req, ServerClosed(
+                    "server stopped with the request still queued"),
+                    shed_reason="closed")
+            self._inflight.clear()
 
     def _run(self) -> None:
         while not self._stop.is_set():
@@ -238,6 +391,14 @@ class Server:
         self.stop()
 
     # -- dispatch -----------------------------------------------------------
+
+    def _est_wait(self) -> Optional[float]:
+        """EWMA-based queue-wait estimate for deadline-aware shedding
+        (None until the server has dispatched at least once)."""
+        if self._service_ewma is None:
+            return None
+        depth = len(self.batcher)
+        return self._service_ewma * (1.0 + depth / self.config.max_batch)
 
     def _resolve_engine(self, req: PendingRequest) -> Optional[str]:
         """Per-request engine auto-selection (at dispatch time, with the
@@ -285,23 +446,128 @@ class Server:
 
     def _dispatch(self, reqs: list[PendingRequest]) -> None:
         self.stats.bump("dispatches")
+        t0 = time.perf_counter()
         try:
             with _obs_span("serve.dispatch", kind=reqs[0].kind,
                            group=len(reqs)):
-                if len(reqs) == 1 and self.config.single_fast_path:
-                    self.stats.bump("single_dispatches")
-                    results = [self._direct(reqs[0])]
-                else:
-                    self.stats.bump("batched_graphs", len(reqs))
-                    results = self._batched(reqs)
-        except BaseException as err:    # noqa: BLE001 - fan out to callers
+                results = self._compute_resilient(reqs)
+        except Exception as err:    # typed fan-out: callers never see a hang
+            wrapped = err if isinstance(err, ServeError) else EngineFailure(
+                f"dispatch failed for kind={reqs[0].kind!r}: {err}")
+            if wrapped is not err:
+                wrapped.__cause__ = err
             for req in reqs:
-                if not req.future.done():
-                    req.future.set_exception(err)
+                self._finish_error(req, wrapped)
             return
+        except BaseException as err:  # noqa: BLE001 - KeyboardInterrupt etc:
+            for req in reqs:          # fan out raw, then re-raise
+                self._finish_error(req, err)
+            raise
+        sample = time.perf_counter() - t0
+        self._service_ewma = sample if self._service_ewma is None else (
+            0.3 * sample + 0.7 * self._service_ewma)
         for req, res in zip(reqs, results):
-            self.cache.insert(req.cache_key, res)
+            self._finish_result(req, res)
+
+    def _compute_resilient(self, reqs: list[PendingRequest]) -> list:
+        """The compute body under the retry/fallback policy.
+
+        Transient injected faults (the recoverable-blip model) retry the
+        whole group with capped exponential backoff, counted per site in
+        ``serve.retries{site}``.  A persistent fault, an exhausted retry
+        budget, or a real engine exception degrades each request to its
+        fallback engine (``serve.fallbacks{from,to}``) — the host/dense
+        referent of the engine contract.  Only if the fallback *also*
+        fails does the group error (wrapped ``EngineFailure``).
+        """
+        faults = self.config.faults
+        policy = self.config.retry
+        attempt = 1
+        while True:
+            try:
+                if faults is not None:
+                    faults.fire("dispatch")
+                    faults.fire("engine")
+                return self._compute(reqs)
+            except InjectedFault as err:
+                if err.transient and attempt < policy.max_attempts:
+                    self.stats.retries += 1
+                    _OBS.counter("serve.retries",
+                                 labels={"site": err.site}).inc()
+                    time.sleep(policy.backoff_s(attempt))
+                    attempt += 1
+                    continue
+                if policy.fallback:
+                    return [self._fallback(req, err) for req in reqs]
+                raise
+            except ServeError:
+                raise
+            except Exception as err:
+                if policy.fallback:
+                    return [self._fallback(req, err) for req in reqs]
+                raise
+
+    def _fallback(self, req: PendingRequest, cause: Exception):
+        """Degrade one request to its fallback engine (the engine-contract
+        referent).  The result flows through the same digest ledger as
+        every response, so a degraded answer is held to bit-identity with
+        whatever this key served before."""
+        from_token = req.engine if req.engine is not None else "auto"
+        to_engine = FALLBACK_ENGINES.get(req.kind)
+        to_token = to_engine if to_engine is not None else "default"
+        self.stats.fallbacks += 1
+        _OBS.counter("serve.fallbacks",
+                     labels={"from": from_token, "to": to_token}).inc()
+        fb_req = dataclasses.replace(req, engine=to_engine)
+        try:
+            return self._direct(fb_req)
+        except Exception as err:
+            failure = EngineFailure(
+                f"kind={req.kind!r} failed on the primary engine "
+                f"({cause}) and again on fallback {to_token!r}: {err}")
+            failure.__cause__ = cause
+            raise failure from err
+
+    def _finish_result(self, req: PendingRequest, res) -> None:
+        """Resolve one future: digest-ledger check, cache insert, result.
+
+        The ledger refuses to serve two different digests for one key —
+        under the determinism invariant equal keys must produce equal
+        bytes, so a conflict means corruption (the response is failed
+        with ``DigestMismatch``, never served)."""
+        prev = self._ledger.get(req.cache_key)
+        if prev is not None and prev != res.digest:
+            self._finish_error(req, DigestMismatch(
+                f"key {req.cache_key[:3]} previously served digest {prev}, "
+                f"this compute produced {res.digest}"))
+            return
+        if prev is None:
+            self._ledger[req.cache_key] = res.digest
+            if len(self._ledger) > LEDGER_CAP:
+                self._ledger.popitem(last=False)
+        else:
+            self._ledger.move_to_end(req.cache_key)
+        if self._inflight.get(req.cache_key) is req.future:
+            del self._inflight[req.cache_key]
+        self.cache.insert(req.cache_key, res)
+        if not req.future.done():
             req.future.set_result(res)
+
+    def _finish_error(self, req: PendingRequest, err: BaseException,
+                      shed_reason: Optional[str] = None) -> None:
+        if self._inflight.get(req.cache_key) is req.future:
+            del self._inflight[req.cache_key]
+        if shed_reason is not None:
+            self._count_shed(shed_reason)
+        if not req.future.done():
+            req.future.set_exception(err)
+
+    def _compute(self, reqs: list[PendingRequest]) -> list:
+        if len(reqs) == 1 and self.config.single_fast_path:
+            self.stats.bump("single_dispatches")
+            return [self._direct(reqs[0])]
+        self.stats.bump("batched_graphs", len(reqs))
+        return self._batched(reqs)
 
     def _batched(self, reqs: list[PendingRequest]) -> list:
         """One batched dispatch for a homogeneous group (same kind/params,
@@ -386,23 +652,34 @@ class Server:
             self.stats.window_started_at = time.perf_counter()
 
     def server_stats(self) -> dict:
-        """Counters for dashboards/tests: requests, batching, cache, jit
-        churn (total and since ``reset_window()``).
+        """Counters for dashboards/tests: requests, batching, dedup,
+        shedding, retries/fallbacks, cache (memory + persistent tier),
+        jit churn (total and since ``reset_window()``).
 
         Every counter here is also live in the process-wide ``repro.obs``
-        registry (``serve.*`` / ``serve.cache.*`` / ``serve.warm.*``) —
-        ``obs.snapshot()`` or the Prometheus exporter sees the same
-        numbers without going through a ``Server`` reference; this dict
-        is the per-instance view.  All intervals are ``perf_counter``
-        deltas (monotone, same clock as spans and cache timings)."""
+        registry (``serve.*`` / ``serve.cache.*`` / ``serve.persist.*`` /
+        ``serve.warm.*``) — ``obs.snapshot()`` or the Prometheus exporter
+        sees the same numbers without going through a ``Server``
+        reference; this dict is the per-instance view.  All intervals are
+        ``perf_counter`` deltas (monotone, same clock as spans and cache
+        timings)."""
         with self._lock:
             now = time.perf_counter()
-            return {
+            out = {
                 "requests": self.stats.requests,
                 "dispatches": self.stats.dispatches,
                 "batched_graphs": self.stats.batched_graphs,
                 "single_dispatches": self.stats.single_dispatches,
+                "dedup_hits": self.stats.dedup_hits,
+                "shed": self.stats.shed,
+                "expired": self.stats.expired,
+                "retries": self.stats.retries,
+                "fallbacks": self.stats.fallbacks,
                 "pending": len(self.batcher),
+                "inflight_keys": len(self._inflight),
+                "ledger_keys": len(self._ledger),
+                "closed": self._closed,
+                "quota_denials": dict(self.admission.denials),
                 "uptime_s": now - self.stats.started_at,
                 "cache": self.cache.stats.as_dict(),
                 "compiles": {
@@ -414,6 +691,9 @@ class Server:
                         self.warm.runtime_compiles_window,
                 },
             }
+            if self.persist is not None:
+                out["persist"] = self.persist.stats.as_dict()
+            return out
 
 
 def warm_buckets_for(graphs) -> tuple:

@@ -56,6 +56,7 @@ from ..api.result import Mis2Result
 from ..obs import Provenance
 from ..obs import metrics as _OBS
 from ..obs import span as _obs_span
+from .faults import InjectedFault
 
 
 @dataclass
@@ -68,6 +69,7 @@ class RepairStats:
     expansions: int = 0         # recurrence-check driven region growths
     iterations: int = 0         # fixed-point rounds across all solves
     checked: bool = False       # from-scratch digest check ran
+    degraded: bool = False      # repair path failed; served via recompute
     wall_time_s: float = 0.0
 
 
@@ -102,12 +104,19 @@ class StreamSession:
     full recomputation.  ``check_fraction`` in ``[0, 1]`` recomputes that
     fraction of deltas from scratch and asserts digest equality
     (deterministic error-diffusion sampling, like the result cache).
+
+    ``faults`` (a :class:`~repro.serve.faults.FaultPlan` or None)
+    consults the ``repair`` site: an injected repair failure degrades the
+    delta to a from-scratch recompute (``last_repair.degraded``, counted
+    ``serve.fallbacks{from=repair,to=recompute}``) — the session stays
+    live and bit-exact, it just pays full price for that delta.
     """
 
     def __init__(self, graph, *, options: Optional[Mis2Options] = None,
-                 check_fraction: float = 0.0):
+                 check_fraction: float = 0.0, faults=None):
         self.options = options if options is not None else \
             Mis2Options(priority="fixed")
+        self.faults = faults
         self.check_fraction = float(check_fraction)
         self._check_acc = 0.0
         gh = as_graph(graph)
@@ -138,6 +147,22 @@ class StreamSession:
                                "streaming solve; raise Mis2Options.max_iters")
         return Mis2Result(t_np == np.uint32(IN), int(iters), True,
                           time.perf_counter() - t0, engine="dense")
+
+    def _recompute_full(self, gh: Graph, touched: np.ndarray,
+                        t_start: float, degraded: bool = False) -> Mis2Result:
+        """Serve one delta by full recomputation (the round-varying-
+        priority path and the degraded fallback when incremental repair
+        faults)."""
+        self.result = self._solve_scratch(gh)
+        self.in_set = np.asarray(self.result.payload)
+        self.graph = gh
+        self.last_repair = RepairStats(
+            mode="recompute", touched=int(touched.sum()),
+            reactivated=self._v,
+            iterations=self.result.iterations,
+            degraded=degraded,
+            wall_time_s=time.perf_counter() - t_start)
+        return self.result
 
     def _apply_keys(self, adds: np.ndarray, removes: np.ndarray) -> Graph:
         cur = self._rows * self._v + self._cols
@@ -191,49 +216,52 @@ class StreamSession:
         touched[np.unique(touched_keys % self._v)] = True
 
         if self._p is None:     # round-varying priority: repair is inexact
-            self.result = self._solve_scratch(gh)
-            self.in_set = np.asarray(self.result.payload)
-            self.graph = gh
-            self.last_repair = RepairStats(
-                mode="recompute", touched=int(touched.sum()),
-                reactivated=self._v,
-                iterations=self.result.iterations,
-                wall_time_s=time.perf_counter() - t_start)
-            return self.result
+            return self._recompute_full(gh, touched, t_start)
 
-        # reactivate the closed 2-hop of touched endpoints, under the union
-        # of old and new adjacency (a removed edge still mediated influence)
-        u_rows = np.concatenate([old_rows, self._rows])
-        u_cols = np.concatenate([old_cols, self._cols])
-        region = _two_hop(touched, u_rows, u_cols)
+        try:
+            if self.faults is not None:
+                self.faults.fire("repair")
+            # reactivate the closed 2-hop of touched endpoints, under the
+            # union of old and new adjacency (a removed edge still
+            # mediated influence)
+            u_rows = np.concatenate([old_rows, self._rows])
+            u_cols = np.concatenate([old_cols, self._cols])
+            region = _two_hop(touched, u_rows, u_cols)
 
-        neighbors = gh.ell.neighbors
-        b = jnp.uint32(id_bits(self._v))
-        prev_in = self.in_set
-        stats = RepairStats(mode="repair", touched=int(touched.sum()))
-        while True:
-            t0 = jnp.asarray(np.where(
-                region, np.uint32(1), np.where(prev_in, IN, OUT)))
-            t, iters = mis2_repair_fixed_point(
-                neighbors, t0, b, self.options.priority,
-                self.options.max_iters)
-            stats.iterations += int(iters)
-            t_np = np.asarray(t)
-            if is_undecided(t_np).any():
-                raise RuntimeError(
-                    "repair fixed point hit max_iters; raise "
-                    "Mis2Options.max_iters")
-            in_set = t_np == np.uint32(IN)
-            viol = np.asarray(lexfirst_violations(neighbors, jnp.asarray(
-                in_set), self._p))
-            if not viol.any():
-                break
-            # violations implicate frozen vertices within distance 2:
-            # reactivate their closed 2-hop and re-solve (region only grows)
-            region = region | _two_hop(viol, self._rows, self._cols)
-            stats.expansions += 1
-            if stats.expansions > self._v:      # unreachable; safety net
-                raise RuntimeError("repair failed to converge")
+            neighbors = gh.ell.neighbors
+            b = jnp.uint32(id_bits(self._v))
+            prev_in = self.in_set
+            stats = RepairStats(mode="repair", touched=int(touched.sum()))
+            while True:
+                t0 = jnp.asarray(np.where(
+                    region, np.uint32(1), np.where(prev_in, IN, OUT)))
+                t, iters = mis2_repair_fixed_point(
+                    neighbors, t0, b, self.options.priority,
+                    self.options.max_iters)
+                stats.iterations += int(iters)
+                t_np = np.asarray(t)
+                if is_undecided(t_np).any():
+                    raise RuntimeError(
+                        "repair fixed point hit max_iters; raise "
+                        "Mis2Options.max_iters")
+                in_set = t_np == np.uint32(IN)
+                viol = np.asarray(lexfirst_violations(neighbors, jnp.asarray(
+                    in_set), self._p))
+                if not viol.any():
+                    break
+                # violations implicate frozen vertices within distance 2:
+                # reactivate their closed 2-hop and re-solve (region grows)
+                region = region | _two_hop(viol, self._rows, self._cols)
+                stats.expansions += 1
+                if stats.expansions > self._v:      # unreachable; safety net
+                    raise RuntimeError("repair failed to converge")
+        except InjectedFault:
+            # degraded but live: the delta is served via full recompute,
+            # which is exact by construction — the session never emits a
+            # wrong set, it just pays full price for this delta
+            _OBS.counter("serve.fallbacks",
+                         labels={"from": "repair", "to": "recompute"}).inc()
+            return self._recompute_full(gh, touched, t_start, degraded=True)
         stats.reactivated = int(region.sum())
 
         result = Mis2Result(in_set, stats.iterations, True,

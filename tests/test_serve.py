@@ -262,7 +262,10 @@ def test_warm_registry_configured_shapes_cost_no_runtime_compiles(fleet):
 
 
 def test_warm_registry_counts_cold_shapes_once():
-    srv = Server(ServerConfig(max_batch=2, warm_buckets=()))
+    # dedup=False: the pairs below are digest-equal on purpose (they must
+    # form a real batch of 2 to exercise the warm-bucket path; with dedup
+    # they would coalesce to a single fast-path dispatch)
+    srv = Server(ServerConfig(max_batch=2, warm_buckets=(), dedup=False))
     g = repro.Graph(laplace3d(4))
     for _ in range(2):
         srv.submit("mis2", g)

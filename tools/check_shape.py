@@ -10,6 +10,9 @@ on — by diffing registry snapshots:
 * ``serve``      a warmed server keeps the request path compile-free:
   dispatching distinct graphs in a configured bucket shape performs ZERO
   runtime compiles (PR 6's contract).
+* ``serve_dedup``  N concurrent same-digest requests coalesce to exactly
+  ONE compute, and a fault-degraded server still serves the referent
+  digest with ZERO request-path compiles (the hardening contract).
 * ``dist``       the sharded engine's collective traffic matches the §V-C
   analytic model byte-for-byte: the registry delta equals
   ``collective_bytes_per_iteration(V, P) x iterations`` and the result's
@@ -99,6 +102,80 @@ def gate_serve() -> str:
 
 
 # ---------------------------------------------------------------------------
+# gate: serve_dedup — N concurrent same-digest requests: exactly 1 compute,
+# and a degraded (fault-injected) server keeps the request path compile-free
+# ---------------------------------------------------------------------------
+
+def gate_serve_dedup() -> str:
+    import repro
+    from repro import obs
+    from repro.graphs.generators import random_uniform_graph
+    from repro.serve import (Fault, FaultPlan, RetryPolicy, Server,
+                             ServerConfig, warm_buckets_for)
+
+    n = 8
+    base = repro.Graph(random_uniform_graph(600, 6.0, seed=3))
+    clones = [repro.Graph(base.csr) for _ in range(n)]     # digest-equal
+    warm = warm_buckets_for([base])
+
+    # --- phase 1: N concurrent same-digest requests -> exactly 1 compute
+    server = Server(ServerConfig(max_batch=n, max_delay_s=0.0,
+                                 warm_buckets=warm, single_fast_path=False))
+    try:
+        with obs.capture() as cap:
+            futures = [server.submit("mis2", g) for g in clones]
+            server.flush()
+            results = [f.result(timeout=120) for f in futures]
+        digests = {r.digest for r in results}
+        _expect(len(digests) == 1,
+                f"same-key requests returned {len(digests)} digests, want 1")
+        dedup_hits = cap.value("serve.dedup_hits")
+        computes = (cap.value("serve.single_dispatches")
+                    + cap.value("serve.batched_graphs"))
+        compiles = cap.value("serve.warm.runtime_compiles")
+        _expect(dedup_hits == n - 1,
+                f"{n} same-digest submits coalesced {dedup_hits} joins, "
+                f"want {n - 1}")
+        _expect(computes == 1,
+                f"{n} same-digest requests cost {computes} computes, want "
+                "exactly 1")
+        _expect(compiles == 0,
+                f"dedup path paid {compiles} runtime compiles, want 0")
+    finally:
+        server.stop()
+
+    # --- phase 2: degraded server (seeded transient engine fault, retried)
+    # still serves the correct digest with 0 request-path compiles
+    referent = repro.mis2(base, engine="dense")     # warm referent programs
+    plan = FaultPlan(seed=5, sites={
+        "engine": Fault("error", count=1, transient=True)})
+    server = Server(ServerConfig(max_batch=n, max_delay_s=0.0,
+                                 warm_buckets=warm, single_fast_path=False,
+                                 faults=plan,
+                                 retry=RetryPolicy(base_backoff_s=0.0)))
+    try:
+        with obs.capture() as cap:
+            fut = server.submit("mis2", base)
+            server.flush()
+            degraded = fut.result(timeout=120)
+        _expect(degraded.digest == referent.digest,
+                f"degraded response digest {degraded.digest} != referent "
+                f"{referent.digest}")
+        retries = cap.value("serve.retries", {"site": "engine"})
+        compiles = cap.value("serve.warm.runtime_compiles")
+        _expect(retries == 1,
+                f"transient fault provoked {retries} retries, want 1")
+        _expect(compiles == 0,
+                f"degraded request path paid {compiles} runtime compiles, "
+                "want 0")
+    finally:
+        server.stop()
+    return (f"{n} same-digest requests -> 1 compute ({int(dedup_hits)} "
+            f"joins); degraded serve digest-correct after {int(retries)} "
+            "retry, 0 compiles")
+
+
+# ---------------------------------------------------------------------------
 # gate: dist — registry collective bytes == analytic model == result record
 # ---------------------------------------------------------------------------
 
@@ -134,6 +211,7 @@ def gate_dist() -> str:
 GATES = {
     "resident": gate_resident,
     "serve": gate_serve,
+    "serve_dedup": gate_serve_dedup,
     "dist": gate_dist,
 }
 
