@@ -30,13 +30,17 @@ unit-testable without sleeping.
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Optional
 
 from .errors import DeadlineExceeded, QuotaExceeded, ServerOverloaded
 
-#: callers tracked before the oldest bucket is recycled (a caller id is a
-#: caller-chosen string; an unbounded set must not grow server memory)
+#: callers tracked before the least-recently-*used* bucket is recycled (a
+#: caller id is a caller-chosen string; an unbounded set must not grow
+#: server memory).  LRU, not FIFO: an active caller's bucket is refreshed
+#: on every submit, so churn in one-shot caller ids cannot evict a hot
+#: caller and hand it a fresh bucket at full burst
 MAX_TRACKED_CALLERS = 4096
 
 
@@ -93,7 +97,7 @@ class AdmissionController:
         self.max_pending = max_pending
         self.quota = quota
         self.clock = clock
-        self._buckets: dict[str, TokenBucket] = {}
+        self._buckets: OrderedDict[str, TokenBucket] = OrderedDict()
         self.denials: dict[str, int] = {}
 
     def admit(self, *, caller: str = "default", pending: int = 0,
@@ -113,9 +117,11 @@ class AdmissionController:
             bucket = self._buckets.get(caller)
             if bucket is None:
                 if len(self._buckets) >= MAX_TRACKED_CALLERS:
-                    self._buckets.pop(next(iter(self._buckets)))
+                    self._buckets.popitem(last=False)   # least recently used
                 bucket = self._buckets[caller] = TokenBucket(
                     self.quota.rate, self.quota.burst, now)
+            else:
+                self._buckets.move_to_end(caller)       # LRU refresh
             if not bucket.try_take(now):
                 self.denials[caller] = self.denials.get(caller, 0) + 1
                 raise QuotaExceeded(

@@ -117,7 +117,12 @@ class ResultCache:
         """
         if self.max_bytes <= 0 or key not in self._entries:
             if self.persist is not None and self.max_bytes > 0:
-                rehydrated = self.persist.load(key)
+                try:
+                    rehydrated = self.persist.load(key)
+                except Exception:   # noqa: BLE001 - disk-tier failures are
+                    # misses, never exceptions out of submit()'s cache lookup
+                    _OBS.counter("serve.persist.load_errors").inc()
+                    rehydrated = None
                 if rehydrated is not None:
                     self.stats.bump("hits")
                     self.insert(key, rehydrated, write_persist=False)
@@ -144,7 +149,12 @@ class ResultCache:
         if self.max_bytes <= 0:
             return
         if write_persist and self.persist is not None:
-            self.persist.store(key, result)
+            try:
+                self.persist.store(key, result)
+            except Exception:   # noqa: BLE001 - a broken disk tier must
+                # never break the response path (insert runs while the
+                # server is resolving futures); the entry stays memory-only
+                _OBS.counter("serve.persist.store_errors").inc()
         nbytes = _result_nbytes(result)
         if nbytes > self.max_bytes:
             return  # would evict everything and still not fit

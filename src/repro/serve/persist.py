@@ -91,6 +91,7 @@ class PersistStats:
     corrupt: int = 0
     evictions: int = 0
     torn_cleaned: int = 0
+    io_errors: int = 0
     bytes_used: int = 0
 
     def bump(self, name: str, n: int = 1) -> None:
@@ -105,7 +106,8 @@ class PersistStats:
         return {
             "hits": self.hits, "misses": self.misses, "writes": self.writes,
             "corrupt": self.corrupt, "evictions": self.evictions,
-            "torn_cleaned": self.torn_cleaned, "bytes_used": self.bytes_used,
+            "torn_cleaned": self.torn_cleaned, "io_errors": self.io_errors,
+            "bytes_used": self.bytes_used,
         }
 
 
@@ -150,9 +152,11 @@ class PersistTier:
     def store(self, key: tuple, result) -> bool:
         """Persist ``result`` under ``key``; True iff committed.
 
-        Non-persistable kinds, oversized entries, and injected
-        ``persist_write`` crashes all return False — the tier degrades to
-        memory-only for that entry, never blocks the response path.
+        Non-persistable kinds, oversized entries, injected
+        ``persist_write`` crashes, and real I/O failures (ENOSPC, yanked
+        permissions, a directory deleted underfoot — counted
+        ``serve.persist.io_errors``) all return False — the tier degrades
+        to memory-only for that entry, never blocks the response path.
         """
         kind = key[0] if key else None
         if kind not in PERSISTABLE_KINDS:
@@ -182,14 +186,19 @@ class PersistTier:
         name = entry_name(key)
         final = os.path.join(self.directory, name)
         tmp = final + _TMP_SUFFIX
-        shutil.rmtree(tmp, ignore_errors=True)
-        os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
-        with open(os.path.join(tmp, "manifest.json"), "w") as fh:
-            json.dump(manifest, fh, indent=1)
-            fh.flush()
-            os.fsync(fh.fileno())
-        _fsync_file(os.path.join(tmp, "arrays.npz"))
+        try:
+            shutil.rmtree(tmp, ignore_errors=True)
+            os.makedirs(tmp)
+            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+            with open(os.path.join(tmp, "manifest.json"), "w") as fh:
+                json.dump(manifest, fh, indent=1)
+                fh.flush()
+                os.fsync(fh.fileno())
+            _fsync_file(os.path.join(tmp, "arrays.npz"))
+        except OSError:
+            shutil.rmtree(tmp, ignore_errors=True)
+            self.stats.bump("io_errors")
+            return False
         if self.faults is not None:
             try:
                 self.faults.fire("persist_write")
@@ -197,19 +206,25 @@ class PersistTier:
                 # simulated crash between build and commit: the tmp
                 # orphan stays for the next open's sweep to find
                 return False
-        nbytes = _dir_nbytes(tmp)
-        if nbytes > self.max_bytes:
+        try:
+            nbytes = _dir_nbytes(tmp)
+            if nbytes > self.max_bytes:
+                shutil.rmtree(tmp, ignore_errors=True)
+                return False
+            with self._lock:
+                replaced = _dir_nbytes(final) if os.path.isdir(final) else 0
+                if replaced:
+                    # os.replace cannot clobber a non-empty dir target
+                    shutil.rmtree(final, ignore_errors=True)
+                os.replace(tmp, final)
+                self.stats.set_bytes(
+                    self.stats.bytes_used - replaced + nbytes)
+                self.stats.bump("writes")
+                self._evict_over_budget(keep=name)
+        except OSError:
             shutil.rmtree(tmp, ignore_errors=True)
+            self.stats.bump("io_errors")
             return False
-        with self._lock:
-            replaced = _dir_nbytes(final) if os.path.isdir(final) else 0
-            if replaced:
-                # os.replace cannot clobber a non-empty dir target
-                shutil.rmtree(final, ignore_errors=True)
-            os.replace(tmp, final)
-            self.stats.set_bytes(self.stats.bytes_used - replaced + nbytes)
-            self.stats.bump("writes")
-            self._evict_over_budget(keep=name)
         return True
 
     @staticmethod
@@ -264,14 +279,24 @@ class PersistTier:
                                 ok = False
                                 break
                             arrays[name] = arr
+                    # the Result digest is by contract the payload digest;
+                    # pin the manifest's top-level digest to the *verified*
+                    # payload digest so a corrupted digest field can never
+                    # rehydrate a Result that disagrees with its own bytes
+                    # (and later poison the ledger or parity checks)
+                    ok = ok and manifest.get("digest") == expected["payload"]
         except Exception:   # noqa: BLE001 - unparseable == corrupt: any
             ok = False      # bit rot that breaks zip/json parsing lands here
         if not ok:
             self._drop(final, corrupt=True)
             self.stats.bump("misses")
             return None
-        os.utime(final)  # LRU touch: loads keep hot entries off the
-        #                  eviction frontier
+        try:
+            os.utime(final)  # LRU touch: loads keep hot entries off the
+            #                  eviction frontier
+        except OSError:      # entry evicted/removed underfoot (shared
+            self.stats.bump("misses")   # persist_dir): it is gone — a miss
+            return None
         self.stats.bump("hits")
         return self._rebuild(manifest, arrays)
 
@@ -298,7 +323,10 @@ class PersistTier:
 
     # --------------------------------------------------------- retention
     def _drop(self, path: str, corrupt: bool = False) -> None:
-        nbytes = _dir_nbytes(path) if os.path.isdir(path) else 0
+        try:
+            nbytes = _dir_nbytes(path) if os.path.isdir(path) else 0
+        except OSError:     # entry vanished mid-measure: nothing to subtract
+            nbytes = 0
         shutil.rmtree(path, ignore_errors=True)
         with self._lock:
             self.stats.set_bytes(max(0, self.stats.bytes_used - nbytes))
@@ -314,13 +342,19 @@ class PersistTier:
             if not name.startswith(_ENTRY_PREFIX) or name == keep:
                 continue
             path = os.path.join(self.directory, name)
-            if os.path.isdir(path):
-                entries.append((os.stat(path).st_mtime_ns, path))
+            try:
+                if os.path.isdir(path):
+                    entries.append((os.stat(path).st_mtime_ns, path))
+            except OSError:     # entry vanished between listdir and stat
+                continue
         entries.sort()
         for _, path in entries:
             if self.stats.bytes_used <= self.max_bytes:
                 break
-            nbytes = _dir_nbytes(path)
+            try:
+                nbytes = _dir_nbytes(path)
+            except OSError:
+                nbytes = 0
             shutil.rmtree(path, ignore_errors=True)
             self.stats.set_bytes(max(0, self.stats.bytes_used - nbytes))
             self.stats.bump("evictions")

@@ -178,7 +178,13 @@ class Server:
             max_pending=self.config.max_pending, quota=self.config.quota)
         self.warm = WarmRegistry()
         self.stats = ServeStats()
+        # two-lock discipline: ``_lock`` guards queue/cache/ledger state
+        # and is only ever held for O(bookkeeping); ``_dispatch_lock``
+        # serializes the compute side of pump() (engine calls, retries,
+        # backoff sleeps, injected slow faults) so a degraded dispatch
+        # can never block submit() or cache-hit lookups
         self._lock = threading.RLock()
+        self._dispatch_lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self._closed = False
@@ -318,18 +324,24 @@ class Server:
 
     def pump(self, now: Optional[float] = None, force: bool = False) -> int:
         """Evict expired requests, dispatch every due group; returns the
-        number of groups served."""
-        with self._lock:
-            if self._closed:
-                return 0
-            t = time.perf_counter() if now is None else now
-            for req in self.batcher.pop_expired(t):
-                self.stats.bump("expired")
-                self._finish_error(req, DeadlineExceeded(
-                    f"deadline expired after {t - req.enqueued_at:.4f}s in "
-                    "queue; request evicted before dispatch"),
-                    shed_reason="expired")
-            groups = self.batcher.due(t, force=force)
+        number of groups served.
+
+        Queue surgery happens under the state lock; the dispatches
+        themselves run holding only the dispatch lock, so concurrent
+        submits and cache hits proceed even while a dispatch is deep in
+        retry backoff or an injected slow fault."""
+        with self._dispatch_lock:
+            with self._lock:
+                if self._closed:
+                    return 0
+                t = time.perf_counter() if now is None else now
+                for req in self.batcher.pop_expired(t):
+                    self.stats.bump("expired")
+                    self._finish_error(req, DeadlineExceeded(
+                        f"deadline expired after {t - req.enqueued_at:.4f}s "
+                        "in queue; request evicted before dispatch"),
+                        shed_reason="expired")
+                groups = self.batcher.due(t, force=force)
             for _, reqs in groups:
                 self._dispatch(reqs)
             return len(groups)
@@ -355,8 +367,9 @@ class Server:
         """Terminal shutdown: the pump thread stops, every queued future
         fails with :class:`~repro.serve.errors.ServerClosed`, and every
         later ``submit`` returns a future already carrying it.  Requests
-        mid-dispatch on the pump thread complete normally (the drain runs
-        under the same lock dispatch holds).  Idempotent."""
+        mid-dispatch complete normally — their group already left the
+        queue, the drain cannot touch them, and in-flight retry backoff
+        is cut short by the stop event.  Idempotent."""
         with self._lock:
             first = not self._closed
             self._closed = True
@@ -376,13 +389,31 @@ class Server:
 
     def _run(self) -> None:
         while not self._stop.is_set():
-            self.pump()
+            try:
+                self.pump()
+            except Exception as err:  # noqa: BLE001 - the pump thread must
+                self._pump_crashed(err)     # outlive any single failure
             with self._lock:
                 delay = self.batcher.next_deadline(time.perf_counter())
             if delay is None:
                 delay = self.config.poll_interval_s
             self._stop.wait(min(delay, self.config.poll_interval_s)
                             if delay > 0 else 0.0)
+
+    def _pump_crashed(self, err: Exception) -> None:
+        """Last-ditch pump-thread containment: an exception that escapes
+        ``pump()`` (anything outside dispatch's own typed fan-out) would
+        otherwise kill the daemon thread silently — every queued future
+        then hangs forever and so does all later work.  Instead: fail
+        everything queued with a typed error, count it, keep pumping."""
+        _OBS.counter("serve.pump_errors").inc()
+        wrapped = err if isinstance(err, ServeError) else EngineFailure(
+            f"pump loop crashed: {err}")
+        if wrapped is not err:
+            wrapped.__cause__ = err
+        with self._lock:
+            for req in self.batcher.drain():
+                self._finish_error(req, wrapped)
 
     def __enter__(self) -> "Server":
         return self.start()
@@ -445,6 +476,8 @@ class Server:
         return self._direct(req)
 
     def _dispatch(self, reqs: list[PendingRequest]) -> None:
+        """One group's compute + fan-out (runs under the dispatch lock
+        only; the state lock is taken just around the finish loops)."""
         self.stats.bump("dispatches")
         t0 = time.perf_counter()
         try:
@@ -456,18 +489,30 @@ class Server:
                 f"dispatch failed for kind={reqs[0].kind!r}: {err}")
             if wrapped is not err:
                 wrapped.__cause__ = err
-            for req in reqs:
-                self._finish_error(req, wrapped)
+            with self._lock:
+                for req in reqs:
+                    self._finish_error(req, wrapped)
             return
         except BaseException as err:  # noqa: BLE001 - KeyboardInterrupt etc:
-            for req in reqs:          # fan out raw, then re-raise
-                self._finish_error(req, err)
+            with self._lock:          # fan out raw, then re-raise
+                for req in reqs:
+                    self._finish_error(req, err)
             raise
         sample = time.perf_counter() - t0
-        self._service_ewma = sample if self._service_ewma is None else (
-            0.3 * sample + 0.7 * self._service_ewma)
-        for req, res in zip(reqs, results):
-            self._finish_result(req, res)
+        with self._lock:
+            self._service_ewma = sample if self._service_ewma is None else (
+                0.3 * sample + 0.7 * self._service_ewma)
+            for req, res in zip(reqs, results):
+                try:
+                    self._finish_result(req, res)
+                except Exception as err:  # noqa: BLE001 - delivery failures
+                    # (cache/persist/ledger) must fail THIS future typed,
+                    # not leak out of pump() and strand the rest
+                    wrapped = EngineFailure(
+                        f"result delivery failed for kind={req.kind!r}: "
+                        f"{err}")
+                    wrapped.__cause__ = err
+                    self._finish_error(req, wrapped)
 
     def _compute_resilient(self, reqs: list[PendingRequest]) -> list:
         """The compute body under the retry/fallback policy.
@@ -494,7 +539,10 @@ class Server:
                     self.stats.retries += 1
                     _OBS.counter("serve.retries",
                                  labels={"site": err.site}).inc()
-                    time.sleep(policy.backoff_s(attempt))
+                    # interruptible backoff (holds the dispatch lock, never
+                    # the state lock): stop() cuts the wait short and the
+                    # retry then completes the in-flight group normally
+                    self._stop.wait(policy.backoff_s(attempt))
                     attempt += 1
                     continue
                 if policy.fallback:

@@ -612,3 +612,135 @@ def test_persist_wrong_key_same_address_not_served(tmp_path):
     other = ("mis2", g.digest, "dense", ())
     assert tier.load(other) is None
     assert tier.load(key).digest == res.digest
+
+
+# ---------------------------------------------------------------------------
+# I/O containment and lock scope: a broken disk or a slow retry never
+# hangs a future, kills the pump thread, or blocks submit()
+# ---------------------------------------------------------------------------
+
+def _enospc(*a, **k):
+    raise OSError(28, "No space left on device")
+
+
+def test_persist_store_io_error_degrades_to_memory_only(tmp_path,
+                                                        monkeypatch):
+    g = _graph(70)
+    srv = Server(ServerConfig(persist_dir=str(tmp_path / "tier")))
+    monkeypatch.setattr("repro.serve.persist.np.savez", _enospc)
+    fut = srv.submit("mis2", g)
+    srv.flush()
+    res = fut.result(timeout=30)            # resolves: no hang, no raise
+    assert res.digest == repro.mis2(g).digest
+    assert srv.persist.stats.io_errors == 1
+    assert srv.persist.stats.writes == 0
+    # the memory tier still serves the entry
+    assert srv.submit("mis2", g).result(timeout=5).digest == res.digest
+
+
+def test_pump_thread_survives_persist_io_errors(tmp_path, monkeypatch):
+    monkeypatch.setattr("repro.serve.persist.np.savez", _enospc)
+    srv = Server(ServerConfig(persist_dir=str(tmp_path / "tier"),
+                              max_delay_s=0.0, poll_interval_s=0.001))
+    g1, g2 = _graph(71), _graph(72)
+    with srv:
+        r1 = srv.submit("mis2", g1).result(timeout=30)
+        r2 = srv.submit("mis2", g2).result(timeout=30)  # pump still alive
+    assert r1.digest == repro.mis2(g1).digest
+    assert r2.digest == repro.mis2(g2).digest
+    assert srv.persist.stats.io_errors == 2
+
+
+def test_pump_crash_fails_queued_futures_and_loop_survives():
+    srv = Server(ServerConfig(max_delay_s=0.0, poll_interval_s=0.001,
+                              cache_bytes=0))
+    crashed = {"n": 0}
+    orig_due = srv.batcher.due
+
+    def flaky_due(now, force=False):
+        if crashed["n"] == 0 and len(srv.batcher):
+            crashed["n"] += 1
+            raise RuntimeError("boom outside dispatch fan-out")
+        return orig_due(now, force=force)
+
+    srv.batcher.due = flaky_due
+    with srv:
+        fut = srv.submit("mis2", _graph(73))
+        with pytest.raises(EngineFailure):  # typed, not a silent hang
+            fut.result(timeout=30)
+        g = _graph(74)                      # the loop kept pumping
+        res = srv.submit("mis2", g).result(timeout=30)
+    assert crashed["n"] == 1
+    assert res.digest == repro.mis2(g).digest
+
+
+def test_persist_load_utime_race_is_a_miss(tmp_path, monkeypatch):
+    from repro.serve.persist import PersistTier
+
+    tier = PersistTier(str(tmp_path / "tier"))
+    g = _graph(75)
+    key = ("mis2", g.digest, "auto", ())
+    assert tier.store(key, repro.mis2(g))
+
+    def vanished(*a, **k):
+        raise FileNotFoundError("entry evicted by a sharing process")
+
+    monkeypatch.setattr("repro.serve.persist.os.utime", vanished)
+    misses = tier.stats.misses
+    assert tier.load(key) is None           # a miss, never an exception
+    assert tier.stats.misses == misses + 1
+
+
+def test_persist_tampered_toplevel_digest_is_corrupt(tmp_path):
+    import json
+
+    from repro.serve.persist import PersistTier, entry_name
+
+    tier = PersistTier(str(tmp_path / "tier"))
+    g = _graph(76)
+    key = ("mis2", g.digest, "auto", ())
+    assert tier.store(key, repro.mis2(g))
+    # corrupt ONLY the top-level digest; arrays and their digests stay valid
+    mpath = os.path.join(tier.directory, entry_name(key), "manifest.json")
+    with open(mpath) as fh:
+        manifest = json.load(fh)
+    manifest["digest"] = "0" * 16
+    with open(mpath, "w") as fh:
+        json.dump(manifest, fh)
+    assert tier.load(key) is None           # dropped, not rehydrated
+    assert tier.stats.corrupt == 1
+
+
+def test_admission_bucket_recycling_is_lru_not_fifo(monkeypatch):
+    from repro.serve import admission
+
+    monkeypatch.setattr(admission, "MAX_TRACKED_CALLERS", 2)
+    clock = [0.0]
+    ctl = AdmissionController(quota=QuotaConfig(rate=0.0, burst=1.0),
+                              clock=lambda: clock[0])
+    ctl.admit(caller="hot")                 # hot's burst is now spent
+    ctl.admit(caller="b")
+    with pytest.raises(QuotaExceeded):
+        ctl.admit(caller="hot")             # denied; refreshes hot's bucket
+    ctl.admit(caller="c")                   # at capacity: evicts b, NOT hot
+    with pytest.raises(QuotaExceeded):
+        ctl.admit(caller="hot")             # hot never reset to full burst
+
+
+def test_submit_not_blocked_by_slow_dispatch():
+    plan = FaultPlan(seed=5, sites={
+        "dispatch": Fault("slow", count=1, delay_s=0.5)})
+    srv = Server(ServerConfig(faults=plan, max_delay_s=0.0,
+                              poll_interval_s=0.001))
+    with srv:
+        slow = srv.submit("mis2", _graph(77))
+        time.sleep(0.1)                     # pump is inside the 0.5s fault
+        g = _graph(78)
+        t0 = time.perf_counter()
+        fast = srv.submit("mis2", g)
+        submit_latency = time.perf_counter() - t0
+        assert slow.result(timeout=30).converged
+        assert fast.result(timeout=30).digest == repro.mis2(g).digest
+    # pre-fix the injected sleep ran under the server lock, so this
+    # submit would have blocked for the remaining ~0.4s of the fault
+    assert submit_latency < 0.25
