@@ -28,6 +28,7 @@ from benchmarks import (  # noqa: E402
     fig2_optimizations,
     figs4_5_scaling,
     hotloop_overhead,
+    hybrid_layout,
     roofline,
     serve_resilience,
     serve_throughput,
@@ -52,6 +53,7 @@ ALL = {
     "roofline": roofline.run,
     "batch": batch_throughput.run,
     "hotloop": hotloop_overhead.run,
+    "hybrid": hybrid_layout.run,
     "setup": setup_overhead.run,
     "serve": serve_throughput.run,
     "serve_resilience": serve_resilience.run,

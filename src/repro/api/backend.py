@@ -70,7 +70,7 @@ def default_interpret() -> bool:
 
 
 def default_mis2_engine(backend: Optional["Backend"] = None,
-                        options=None) -> str:
+                        options=None, graph=None) -> str:
     """The facade's engine auto-selection rule (``engine=None``).
 
     On accelerators the fixed point runs device-resident — host-driven
@@ -86,6 +86,14 @@ def default_mis2_engine(backend: Optional["Backend"] = None,
     ``worklists=False`` ablation auto-selects the host-driven driver
     instead of raising even on accelerators.
 
+    ``graph`` (a ``repro.Graph`` handle) enables the degree-aware rule:
+    when the monolithic padded-ELL bytes estimate exceeds
+    ``repro.graphs.hybrid.HYBRID_AUTO_BYTES`` (a skewed graph at paper
+    scale), every ELL-monolith engine above is off the table — the rule
+    returns ``'pallas_hybrid'`` (sliced-ELL + COO spill, O(E) memory,
+    bit-identical results).  The threshold is read at call time so tests
+    and operators can tune it.
+
     The platform is resolved **per request**: ``Backend(device=...)``
     selects by that device's platform, falling back to the process
     default backend only when no device is pinned (see
@@ -93,6 +101,15 @@ def default_mis2_engine(backend: Optional["Backend"] = None,
     """
     be = backend if backend is not None else _DEFAULT
     resident_ok = options is None or getattr(options, "worklists", True)
+    hybrid_ok = resident_ok and (
+        options is None or (getattr(options, "packed", True)
+                            and getattr(options, "layout", "ell") == "ell"))
+    if hybrid_ok and graph is not None \
+            and hasattr(graph, "ell_bytes_estimate"):
+        from ..graphs import hybrid as _hybrid
+
+        if graph.ell_bytes_estimate() > _hybrid.HYBRID_AUTO_BYTES:
+            return "pallas_hybrid"
     if backend_accelerator(be) and resident_ok:
         return "pallas_resident" if be.pallas else "compacted_resident"
     return "pallas" if be.pallas else "compacted"

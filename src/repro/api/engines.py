@@ -107,6 +107,22 @@ def _mis2_pallas_resident(graph, active, options, backend: Backend):
                                interpret=backend.resolve_interpret())
 
 
+@register_engine("mis2", "pallas_hybrid",
+                 doc="resident driver over the degree-aware hybrid layout "
+                     "(sliced-ELL degree buckets + sorted-COO spill for "
+                     "heavy hitters): one fused Pallas pass per slice + "
+                     "segment reductions for the spill, all inside one "
+                     "jitted while_loop — O(E) memory on skewed graphs "
+                     "whose padded ELL cannot be allocated, bit-identical "
+                     "to 'dense'; auto-selected past the padded-ELL bytes "
+                     "threshold")
+def _mis2_pallas_hybrid(graph, active, options, backend: Backend):
+    from ..core.mis2_hybrid import _mis2_hybrid_impl
+
+    return _mis2_hybrid_impl(graph, active, _opts(options),
+                             interpret=backend.resolve_interpret())
+
+
 @register_engine("mis2", "dense_batched",
                  doc="vmapped dense fixed point over padded size buckets "
                      "(repro.batch); a single-graph call runs as a batch "
@@ -150,7 +166,7 @@ def _mis2_distributed_single_gather(graph, active, options, backend: Backend):
                  doc="paper Alg. 2 (Bell-style): MIS-2 roots + neighbors")
 def _agg_basic(graph, options=None, mis2_engine=None, interpret=None,
                min_secondary_neighbors=2, backend=None):
-    mis2_engine = mis2_engine or default_mis2_engine(backend, options)
+    mis2_engine = mis2_engine or default_mis2_engine(backend, options, graph)
     return _aggregate_basic_impl(graph, _opts(options), mis2_engine,
                                  interpret=interpret,
                                  **_dist_mesh_kw(mis2_engine, backend))
@@ -161,7 +177,7 @@ def _agg_basic(graph, options=None, mis2_engine=None, interpret=None,
                      "max-coupling cleanup")
 def _agg_two_phase(graph, options=None, mis2_engine=None,
                    interpret=None, min_secondary_neighbors=2, backend=None):
-    mis2_engine = mis2_engine or default_mis2_engine(backend, options)
+    mis2_engine = mis2_engine or default_mis2_engine(backend, options, graph)
     return _aggregate_two_phase_impl(graph, _opts(options), mis2_engine,
                                      min_secondary_neighbors,
                                      interpret=interpret,
@@ -269,6 +285,16 @@ def _multilevel_resident(kind, graph, **kwargs):
                  doc="Luby-style rounds with xorshift* packed priorities")
 def _color_luby(graph, max_rounds, backend: Backend):
     return _color_graph_impl(graph, max_rounds)
+
+
+@register_engine("coloring", "luby_hybrid",
+                 doc="Luby rounds over the degree-aware hybrid layout "
+                     "(sliced-ELL + COO spill); bit-identical colors "
+                     "without the monolithic padded ELL")
+def _color_luby_hybrid(graph, max_rounds, backend: Backend):
+    from ..core.coloring import _color_hybrid_impl
+
+    return _color_hybrid_impl(graph, max_rounds)
 
 
 # -- partition --------------------------------------------------------------

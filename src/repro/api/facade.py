@@ -77,23 +77,27 @@ def mis2(graph, *, active=None, options: Optional[Mis2Options] = None,
          backend: Optional[Backend] = None) -> Mis2Result:
     """Distance-2 maximal independent set (paper Alg. 1), deterministic
     across engines: ``dense`` | ``compacted`` | ``compacted_resident`` |
-    ``pallas`` | ``pallas_resident`` | ``distributed`` |
-    ``distributed_single_gather`` return bit-identical sets (equal
-    ``digest``) for equal options.
+    ``pallas`` | ``pallas_resident`` | ``pallas_hybrid`` |
+    ``distributed`` | ``distributed_single_gather`` return bit-identical
+    sets (equal ``digest``) for equal options.
 
     ``engine=None`` auto-selects: the device-resident engines (one jitted
     dispatch per solve, worklists compacted on device) on accelerators,
     the host-driven ``compacted`` driver on CPU hosts;
-    ``Backend(pallas=True)`` upgrades either to its Pallas variant.  The
-    distributed engines shard vertices over ``Backend(mesh=..., axis=...)``
-    and report their collective-byte accounting in
-    ``result.collectives``."""
+    ``Backend(pallas=True)`` upgrades either to its Pallas variant.  When
+    the graph's padded-ELL bytes estimate exceeds
+    ``repro.graphs.hybrid.HYBRID_AUTO_BYTES`` (skewed degree distribution
+    at scale), auto-selection routes to ``pallas_hybrid`` — the
+    sliced-ELL + COO-spill layout that needs O(E) memory instead of
+    O(V x max_degree).  The distributed engines shard vertices over
+    ``Backend(mesh=..., axis=...)`` and report their collective-byte
+    accounting in ``result.collectives``."""
     from .backend import default_mis2_engine
 
     be = resolve_backend(backend)
     gh = _prepare(graph, be)
     if engine is None:
-        engine = default_mis2_engine(be, options)
+        engine = default_mis2_engine(be, options, gh)
     elif be.pallas and engine == "compacted":
         engine = "pallas"       # legacy: Backend(pallas=True) upgrade
     fn = get_engine("mis2", engine)

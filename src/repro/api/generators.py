@@ -9,11 +9,12 @@ from ..graphs.generators import (
     laplace3d,
     paper_suite,
     path_graph,
+    powerlaw_graph,
     random_skewed_graph,
     random_uniform_graph,
 )
 
 __all__ = [
     "elasticity3d", "er_laplacian", "laplace3d", "paper_suite", "path_graph",
-    "random_skewed_graph", "random_uniform_graph",
+    "powerlaw_graph", "random_skewed_graph", "random_uniform_graph",
 ]

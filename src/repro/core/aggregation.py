@@ -231,6 +231,238 @@ def _phase3_resident(neighbors, mask, labels, phase):
 
 
 # ---------------------------------------------------------------------------
+# hybrid-layout join loops (degree-aware sliced-ELL + COO spill)
+#
+# Twins of the resident loops above for graphs whose monolithic padded ELL
+# is infeasible: each round runs the SAME rowwise bodies per slice slab
+# (``row_ids = slice.rows``) plus a segment-reduce pass over the sorted-COO
+# spill.  Within a round every read comes from the frozen round-start
+# labels and writes accumulate into a fresh buffer — the slice/spill
+# partition is disjoint and covering, so each round is exactly the
+# monolithic round's gather/update evaluated piecewise (labels stay
+# bit-identical to the ELL engines).
+# ---------------------------------------------------------------------------
+
+def _hybrid_join_labels(slices, spill_rows, spill_seg, spill_cols,
+                        root_label):
+    """Hybrid twin of :func:`_join_adjacent_root` (min label over the
+    closed neighborhood; INT32_MAX -> -1).  The spill's explicit self min
+    mirrors the ELL padding slots, which hold the row's own id."""
+    v = root_label.shape[0]
+    adj = jnp.full(v, -1, dtype=jnp.int32)
+    for sl in slices:
+        adj = adj.at[sl.rows].set(_join_rows(sl.neighbors, root_label))
+    h = spill_rows.shape[0]
+    if h > 0:
+        mn = jax.ops.segment_min(root_label[spill_cols], spill_seg,
+                                 num_segments=h)
+        mn = jnp.minimum(mn, root_label[spill_rows])
+        adj = adj.at[spill_rows].set(
+            jnp.where(mn == INT32_MAX, jnp.int32(-1), mn))
+    return adj
+
+
+@jax.jit
+def _hybrid_join_jit(slices, spill_rows, spill_seg, spill_cols, root_label):
+    return _hybrid_join_labels(slices, spill_rows, spill_seg, spill_cols,
+                               root_label)
+
+
+def _labels_from_roots_hybrid(hyb, roots: np.ndarray):
+    """Hybrid twin of :func:`_labels_from_roots` (same host cumsum)."""
+    agg_ids = np.cumsum(roots) - 1
+    root_label = np.where(roots, agg_ids, INT32_MAX).astype(np.int32)
+    labels = np.asarray(_hybrid_join_jit(
+        tuple(hyb.slices), hyb.spill_rows, hyb.spill_seg, hyb.spill_cols,
+        jnp.asarray(root_label)))
+    return labels, int(roots.sum())
+
+
+@jax.jit
+def _cleanup_join_resident_hybrid(slices, spill_rows, spill_seg, spill_cols,
+                                  labels, phase):
+    """Hybrid twin of :func:`_cleanup_join_resident`."""
+    def cond(state):
+        labels, _, rounds = state
+        return jnp.any(labels < 0) & (rounds < 4)
+
+    def body(state):
+        labels, phase, rounds = state
+        lab_j = jnp.where(labels >= 0, labels, INT32_MAX).astype(jnp.int32)
+        adj = _hybrid_join_labels(slices, spill_rows, spill_seg, spill_cols,
+                                  lab_j)
+        newly = (labels < 0) & (adj >= 0)
+        labels = jnp.where(newly, adj, labels)
+        phase = jnp.where(newly, jnp.uint8(3), phase)
+        return labels, phase, rounds + jnp.int32(1)
+
+    labels, phase, _ = jax.lax.while_loop(
+        cond, body, (labels, phase, jnp.int32(0)))
+    return labels, phase
+
+
+@functools.partial(jax.jit, static_argnames=("min_secondary",))
+def _phase2_join_resident_hybrid(slices, spill_rows, spill_seg, spill_cols,
+                                 labels, in_set2, nagg, min_secondary: int):
+    """Hybrid twin of :func:`_phase2_join_resident`: the per-row
+    unaggregated-neighbor count runs rowwise per slice and as a segment
+    sum over the spill; root selection/cumsum/join are unchanged (they
+    operate on global [V] vectors)."""
+    v = labels.shape[0]
+    n_unagg = jnp.zeros(v, dtype=jnp.int32)
+    for sl in slices:
+        n_unagg = n_unagg.at[sl.rows].set(
+            _count_unagg_rows(sl.neighbors, sl.mask, sl.rows, labels))
+    h = spill_rows.shape[0]
+    if h > 0:
+        real = spill_cols != spill_rows[spill_seg]
+        unagg_e = labels[spill_cols] < 0
+        n_sp = jax.ops.segment_sum((real & unagg_e).astype(jnp.int32),
+                                   spill_seg, num_segments=h)
+        n_unagg = n_unagg.at[spill_rows].set(n_sp)
+    roots2 = in_set2 & (n_unagg >= min_secondary)
+    agg_ids2 = nagg + jnp.cumsum(roots2.astype(jnp.int32)) - 1
+    rl2 = jnp.where(roots2, agg_ids2, INT32_MAX).astype(jnp.int32)
+    adj2 = _hybrid_join_labels(slices, spill_rows, spill_seg, spill_cols, rl2)
+    newly = (labels < 0) & (adj2 >= 0)
+    labels = jnp.where(newly, adj2, labels)
+    return labels, roots2, newly
+
+
+def _phase3_spill(spill_rows, spill_seg, spill_cols, labels, aggsize):
+    """Phase-3 body over the sorted-COO spill: pick the max-coupling
+    adjacent aggregate (ties -> smaller size -> smaller label).
+
+    Coupling counts need a per-(row, label) histogram, which the ELL body
+    gets by an O(d^2) slot comparison.  Here entries are sorted by
+    (segment, label) — ``lax.sort`` with two keys — so equal-label entries
+    form runs whose length IS the coupling; the lexicographic argmin then
+    becomes a three-step segment-reduce cascade (max coupling, then min
+    size among those, then min label among those).  Valid slots are
+    distinct real neighbors in both layouts, so the counts — and therefore
+    the chosen labels — are bit-identical to :func:`_phase3_rows`."""
+    h = spill_rows.shape[0]
+    s = spill_cols.shape[0]
+    lab_n = labels[spill_cols]
+    real = spill_cols != spill_rows[spill_seg]
+    valid = real & (lab_n >= 0)
+    key_lab = jnp.where(valid, lab_n, INT32_MAX)
+    seg_s, lab_s = jax.lax.sort((spill_seg, key_lab), num_keys=2)
+    start = jnp.concatenate([
+        jnp.ones(1, dtype=bool),
+        (seg_s[1:] != seg_s[:-1]) | (lab_s[1:] != lab_s[:-1])])
+    run_id = jnp.cumsum(start.astype(jnp.int32)) - 1
+    run_len = jax.ops.segment_sum(jnp.ones(s, jnp.int32), run_id,
+                                  num_segments=s)
+    c_e = jnp.where(lab_s < INT32_MAX, run_len[run_id], -1)
+    size_e = aggsize[jnp.clip(lab_s, 0, aggsize.shape[0] - 1)]
+    best_c = jax.ops.segment_max(c_e, seg_s, num_segments=h)
+    on_c = c_e == best_c[seg_s]
+    best_s = jax.ops.segment_min(jnp.where(on_c, size_e, INT32_MAX), seg_s,
+                                 num_segments=h)
+    on_s = on_c & (size_e == best_s[seg_s])
+    best_l = jax.ops.segment_min(jnp.where(on_s, lab_s, INT32_MAX), seg_s,
+                                 num_segments=h)
+    joined = (best_c > 0) & (best_l < INT32_MAX)
+    own = labels[spill_rows]
+    return jnp.where((own < 0) & joined, best_l, own)
+
+
+@jax.jit
+def _phase3_resident_hybrid(slices, spill_rows, spill_seg, spill_cols,
+                            labels, phase):
+    """Hybrid twin of :func:`_phase3_resident` (same frozen-tentative-label
+    rounds; aggregate sizes recomputed per round on the global vector)."""
+    v = labels.shape[0]
+    h = spill_rows.shape[0]
+
+    def cond(state):
+        labels, _, rounds = state
+        return jnp.any(labels < 0) & (rounds < 4)
+
+    def body(state):
+        labels, phase, rounds = state
+        aggsize = jnp.zeros(v + 1, jnp.int32).at[
+            jnp.where(labels >= 0, labels, v)].add(1)
+        new_labels = labels
+        for sl in slices:
+            vals = _phase3_rows(sl.neighbors, sl.mask, sl.rows, labels,
+                                labels[sl.rows], aggsize)
+            new_labels = new_labels.at[sl.rows].set(vals)
+        if h > 0:
+            vals = _phase3_spill(spill_rows, spill_seg, spill_cols, labels,
+                                 aggsize)
+            new_labels = new_labels.at[spill_rows].set(vals)
+        newly = (labels < 0) & (new_labels >= 0)
+        phase = jnp.where(newly, jnp.uint8(3), phase)
+        return new_labels, phase, rounds + jnp.int32(1)
+
+    labels, phase, _ = jax.lax.while_loop(
+        cond, body, (labels, phase, jnp.int32(0)))
+    return labels, phase
+
+
+def _aggregate_basic_hybrid_impl(graph, options: Mis2Options | None = None,
+                                 interpret=None) -> AggregationResult:
+    """Algorithm 2 over the hybrid layout — never touches ``gh.ell``."""
+    gh = as_graph(graph)
+    hyb = gh.hybrid()
+    parts = (tuple(hyb.slices), hyb.spill_rows, hyb.spill_seg, hyb.spill_cols)
+    r = run_mis2(gh, options=options, engine="pallas_hybrid",
+                 interpret=interpret)
+    labels, nagg = _labels_from_roots_hybrid(hyb, r.in_set)
+    phase = np.where(labels >= 0, 1, 0).astype(np.uint8)
+    labels_j, phase_j = _cleanup_join_resident_hybrid(
+        *parts, jnp.asarray(labels.astype(np.int32)), jnp.asarray(phase))
+    labels, phase = np.asarray(labels_j), np.array(phase_j)
+    labels, nagg = _finalize_singletons(labels, nagg, phase)
+    return AggregationResult(labels.astype(np.int32), nagg, r.in_set, phase,
+                             r.iterations, r.converged)
+
+
+def _aggregate_two_phase_hybrid_impl(
+        graph, options: Mis2Options | None = None,
+        min_secondary_neighbors: int = 2,
+        interpret=None) -> AggregationResult:
+    """Algorithm 3 over the hybrid layout — never touches ``gh.ell``."""
+    gh = as_graph(graph)
+    hyb = gh.hybrid()
+    parts = (tuple(hyb.slices), hyb.spill_rows, hyb.spill_seg, hyb.spill_cols)
+    v = gh.num_vertices
+
+    r1 = run_mis2(gh, options=options, engine="pallas_hybrid",
+                  interpret=interpret)
+    labels, nagg = _labels_from_roots_hybrid(hyb, r1.in_set)
+    phase = np.where(labels >= 0, 1, 0).astype(np.uint8)
+    total_iters = r1.iterations
+    converged = r1.converged
+
+    unagg = labels < 0
+    roots2 = np.zeros(v, dtype=bool)
+    if unagg.any():
+        r2 = run_mis2(gh, active=jnp.asarray(unagg), options=options,
+                      engine="pallas_hybrid", interpret=interpret)
+        total_iters += r2.iterations
+        converged = converged and r2.converged
+        labels_j, roots2_j, newly_j = _phase2_join_resident_hybrid(
+            *parts, jnp.asarray(labels.astype(np.int32)),
+            jnp.asarray(r2.in_set), jnp.int32(nagg),
+            min_secondary_neighbors)
+        labels, roots2 = np.asarray(labels_j), np.asarray(roots2_j)
+        phase[np.asarray(newly_j)] = 2
+        nagg += int(roots2.sum())
+
+    labels_j, phase_j = _phase3_resident_hybrid(
+        *parts, jnp.asarray(labels.astype(np.int32)), jnp.asarray(phase))
+    labels, phase = np.asarray(labels_j), np.array(phase_j)
+
+    labels, nagg = _finalize_singletons(labels, nagg, phase)
+    return AggregationResult(labels.astype(np.int32), nagg,
+                             r1.in_set | roots2, phase, total_iters,
+                             converged)
+
+
+# ---------------------------------------------------------------------------
 # Algorithm 2
 # ---------------------------------------------------------------------------
 
@@ -238,6 +470,9 @@ def _aggregate_basic_impl(graph, options: Mis2Options | None = None,
                           engine: str = "compacted",
                           interpret=None, mesh=None,
                           axis=None) -> AggregationResult:
+    if engine == "pallas_hybrid":
+        return _aggregate_basic_hybrid_impl(graph, options,
+                                            interpret=interpret)
     gh = as_graph(graph)
     ell = gh.ell
     r = run_mis2(gh, options=options, engine=engine, interpret=interpret,
@@ -266,6 +501,9 @@ def _aggregate_two_phase_impl(graph, options: Mis2Options | None = None,
                               min_secondary_neighbors: int = 2,
                               interpret=None, mesh=None,
                               axis=None) -> AggregationResult:
+    if engine == "pallas_hybrid":
+        return _aggregate_two_phase_hybrid_impl(
+            graph, options, min_secondary_neighbors, interpret=interpret)
     gh = as_graph(graph)
     ell = gh.ell
     v = ell.num_vertices

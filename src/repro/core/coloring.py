@@ -36,24 +36,22 @@ class ColoringResult:
         self.colors = np.asarray(self.colors)
 
 
-def _color_round_masked(neighbors, mask, colors, rnd, b):
-    """One Luby round; ``b`` is a traced uint32 scalar so the function is
-    vmappable over padded ``[B, rows, deg]`` buckets (each graph keeps its
-    own ``b = id_bits(V_real)``, preserving single-graph priorities).
-    Padded rows must enter pre-colored so they are never contenders."""
-    v = neighbors.shape[0]
-    vids = jnp.arange(v, dtype=jnp.uint32)
-    prio = pack(priorities_xorshift_star(rnd, vids), vids, b)
+def _color_round_rows(neighbors_rows, mask_rows, row_ids, colors, prio):
+    """Rowwise body of one Luby round over a row block: ``colors`` and
+    ``prio`` are global ``[V]`` vectors, the adjacency covers just the
+    block's rows.  Shared verbatim by the monolithic round and the hybrid
+    (sliced) round, which is what keeps their colors bit-identical."""
     uncolored = colors < 0
+    own = colors[row_ids]
     # local-min among uncolored real neighbors (excluding self)
-    self_ids = jnp.arange(v, dtype=neighbors.dtype)[:, None]
-    real = mask & (neighbors != self_ids)
-    pn = prio[neighbors]
-    un = uncolored[neighbors]
+    real = mask_rows & (neighbors_rows != row_ids[:, None])
+    pn = prio[neighbors_rows]
+    un = uncolored[neighbors_rows]
     contender = real & un
-    is_min = jnp.all(jnp.where(contender, prio[:, None] < pn, True), axis=1)
+    is_min = jnp.all(jnp.where(contender, prio[row_ids][:, None] < pn, True),
+                     axis=1)
     # forbidden colors bitmask (two uint32 words -> up to 64 colors)
-    cn = colors[neighbors]
+    cn = colors[neighbors_rows]
     has = real & (cn >= 0)
     lo_bits = jnp.where(has & (cn < 32),
                         jnp.uint32(1) << jnp.clip(cn, 0, 31).astype(jnp.uint32),
@@ -63,13 +61,33 @@ def _color_round_masked(neighbors, mask, colors, rnd, b):
                         jnp.uint32(0))
     forb_lo = jnp.bitwise_or.reduce(lo_bits, axis=1)
     forb_hi = jnp.bitwise_or.reduce(hi_bits, axis=1)
-    # smallest zero bit
+    chosen = _smallest_free_color(forb_lo, forb_hi)
+    return jnp.where((own < 0) & is_min, chosen, own)
+
+
+def _smallest_free_color(forb_lo, forb_hi):
+    """Smallest color whose bit is clear in the 64-bit forbidden mask."""
     free_lo = ~forb_lo
     low_idx = _lowest_set_bit(free_lo)
     free_hi = ~forb_hi
     high_idx = _lowest_set_bit(free_hi) + 32
-    chosen = jnp.where(free_lo != 0, low_idx, high_idx).astype(jnp.int32)
-    return jnp.where(uncolored & is_min, chosen, colors)
+    return jnp.where(free_lo != 0, low_idx, high_idx).astype(jnp.int32)
+
+
+def _round_priorities(v: int, rnd, b):
+    vids = jnp.arange(v, dtype=jnp.uint32)
+    return pack(priorities_xorshift_star(rnd, vids), vids, b)
+
+
+def _color_round_masked(neighbors, mask, colors, rnd, b):
+    """One Luby round; ``b`` is a traced uint32 scalar so the function is
+    vmappable over padded ``[B, rows, deg]`` buckets (each graph keeps its
+    own ``b = id_bits(V_real)``, preserving single-graph priorities).
+    Padded rows must enter pre-colored so they are never contenders."""
+    v = neighbors.shape[0]
+    prio = _round_priorities(v, rnd, b)
+    row_ids = jnp.arange(v, dtype=neighbors.dtype)
+    return _color_round_rows(neighbors, mask, row_ids, colors, prio)
 
 
 @jax.jit
@@ -110,9 +128,73 @@ def _color_fixed_point(neighbors, mask, max_rounds: int):
     return jax.lax.while_loop(cond, body, (colors0, jnp.int32(0)))
 
 
-def _color_graph_impl(graph, max_rounds: int = 256) -> ColoringResult:
-    ell = as_ell_graph(graph)
-    colors, rounds = _color_fixed_point(ell.neighbors, ell.mask, max_rounds)
+def _spill_color_round(spill_rows, spill_seg, spill_cols, colors, prio):
+    """Spill-side Luby round: the heavy rows' slots live in sorted COO, so
+    the rowwise reductions become segment reductions.  Bit-matches
+    :func:`_color_round_rows` on the same rows: ``all(own < pn)`` over
+    contenders is ``own < segment_min(pn)`` (vacuously true on empty
+    segments), and the forbidden-color OR becomes a one-hot scatter-max
+    summed against distinct powers of two (sum == OR for distinct bits)."""
+    h = spill_rows.shape[0]
+    own = colors[spill_rows]
+    prio_own = prio[spill_rows]
+    cn = colors[spill_cols]
+    pn = prio[spill_cols]
+    real = spill_cols != spill_rows[spill_seg]
+    contender = real & (cn < 0)
+    n_cont = jax.ops.segment_sum(contender.astype(jnp.int32), spill_seg,
+                                 num_segments=h)
+    min_pn = jax.ops.segment_min(
+        jnp.where(contender, pn, jnp.uint32(0xFFFFFFFF)), spill_seg,
+        num_segments=h)
+    is_min = (n_cont == 0) | (prio_own < min_pn)
+    has = real & (cn >= 0)
+    onehot = jnp.zeros((h, MAX_COLORS), dtype=jnp.bool_)
+    onehot = onehot.at[spill_seg, jnp.clip(cn, 0, MAX_COLORS - 1)].max(has)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    forb_lo = jnp.sum(jnp.where(onehot[:, :32], weights[None, :],
+                                jnp.uint32(0)), axis=1, dtype=jnp.uint32)
+    forb_hi = jnp.sum(jnp.where(onehot[:, 32:], weights[None, :],
+                                jnp.uint32(0)), axis=1, dtype=jnp.uint32)
+    chosen = _smallest_free_color(forb_lo, forb_hi)
+    return jnp.where((own < 0) & is_min, chosen, own)
+
+
+@functools.partial(jax.jit, static_argnames=("v", "max_rounds"))
+def _color_fixed_point_hybrid(slices, spill_rows, spill_seg, spill_cols,
+                              v: int, max_rounds: int):
+    """Hybrid-layout twin of :func:`_color_fixed_point`: one resident
+    ``while_loop``, each round touching every slice slab plus the COO
+    spill.  All reads within a round come from the frozen round-start
+    ``colors``; writes land in a fresh buffer — the slice/spill partition
+    is disjoint and covering, so the round is exactly the monolithic
+    round's gather/update evaluated piecewise."""
+    b = jnp.uint32(id_bits(v))
+    colors0 = jnp.full(v, -1, dtype=jnp.int32)
+    h = spill_rows.shape[0]
+
+    def cond(state):
+        colors, rnd = state
+        return (rnd == 0) | (jnp.any(colors < 0) & (rnd < max_rounds))
+
+    def body(state):
+        colors, rnd = state
+        prio = _round_priorities(v, rnd.astype(jnp.uint32), b)
+        new_colors = colors
+        for sl in slices:
+            vals = _color_round_rows(sl.neighbors, sl.mask, sl.rows,
+                                     colors, prio)
+            new_colors = new_colors.at[sl.rows].set(vals)
+        if h > 0:
+            vals = _spill_color_round(spill_rows, spill_seg, spill_cols,
+                                      colors, prio)
+            new_colors = new_colors.at[spill_rows].set(vals)
+        return new_colors, rnd + jnp.int32(1)
+
+    return jax.lax.while_loop(cond, body, (colors0, jnp.int32(0)))
+
+
+def _coloring_result(colors, rounds) -> ColoringResult:
     c = np.asarray(colors)
     rnd = int(rounds)
     num = int(c.max()) + 1 if (c >= 0).any() else 0
@@ -121,6 +203,27 @@ def _color_graph_impl(graph, max_rounds: int = 256) -> ColoringResult:
     # hitting max_rounds is reported, not raised: callers get the partial
     # coloring (uncolored vertices = -1) with converged=False
     return ColoringResult(c, num, rnd, converged=not (c < 0).any())
+
+
+def _color_graph_impl(graph, max_rounds: int = 256) -> ColoringResult:
+    ell = as_ell_graph(graph)
+    colors, rounds = _color_fixed_point(ell.neighbors, ell.mask, max_rounds)
+    return _coloring_result(colors, rounds)
+
+
+def _color_hybrid_impl(graph, max_rounds: int = 256) -> ColoringResult:
+    """Luby coloring over the degree-aware hybrid layout (sliced-ELL +
+    COO spill).  Never materializes the monolithic padded ELL, so it runs
+    on skewed graphs whose ``.ell`` would blow the byte budget; colors are
+    bit-identical to the ``luby`` engine's."""
+    from ..graphs.handle import as_graph
+
+    gh = as_graph(graph)
+    hyb = gh.hybrid()
+    colors, rounds = _color_fixed_point_hybrid(
+        tuple(hyb.slices), hyb.spill_rows, hyb.spill_seg, hyb.spill_cols,
+        gh.num_vertices, max_rounds)
+    return _coloring_result(colors, rounds)
 
 
 def color_graph(graph, max_rounds: int = 256) -> ColoringResult:

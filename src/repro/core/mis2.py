@@ -871,6 +871,9 @@ def run_mis2(graph, active=None, options: Optional[Mis2Options] = None,
         return _mis2_resident_impl(graph, active, options,
                                    pallas=engine.startswith("pallas"),
                                    interpret=interpret)
+    if engine == "pallas_hybrid":
+        from .mis2_hybrid import _mis2_hybrid_impl
+        return _mis2_hybrid_impl(graph, active, options, interpret=interpret)
     if engine in ("distributed", "distributed_single_gather"):
         from .dist import _mis2_distributed_impl
         return _mis2_distributed_impl(
@@ -878,8 +881,8 @@ def run_mis2(graph, active=None, options: Optional[Mis2Options] = None,
             single_gather=engine.endswith("single_gather"))
     raise ValueError(
         f"unknown mis2 engine {engine!r} (dense | compacted | "
-        "compacted_resident | pallas | pallas_resident | distributed | "
-        "distributed_single_gather)")
+        "compacted_resident | pallas | pallas_resident | pallas_hybrid | "
+        "distributed | distributed_single_gather)")
 
 
 def mis2(graph, active=None, options: Optional[Mis2Options] = None,

@@ -15,12 +15,20 @@ from .csr import (
     symmetrize,
 )
 from .handle import Graph, as_csr_graph, as_ell_graph, as_graph
+from .hybrid import (
+    HybridEllGraph,
+    HybridSlice,
+    LayoutOverflowError,
+    csr_to_hybrid_ell,
+    ell_bytes_estimate,
+)
 from .generators import (
     elasticity3d,
     er_laplacian,
     laplace3d,
     paper_suite,
     path_graph,
+    powerlaw_graph,
     random_skewed_graph,
     random_uniform_graph,
 )
@@ -42,8 +50,10 @@ __all__ = [
     "BucketedELL", "CSRGraph", "CSRMatrix", "ELLGraph", "ELLMatrix",
     "csr_from_coo", "csr_to_bucketed_ell", "csr_to_ell_graph", "csr_to_ell_matrix", "degrees",
     "ell_to_csr_graph", "ensure_self_loops", "pad_ell_graph", "symmetrize",
+    "HybridEllGraph", "HybridSlice", "LayoutOverflowError",
+    "csr_to_hybrid_ell", "ell_bytes_estimate",
     "elasticity3d", "er_laplacian", "laplace3d", "paper_suite", "path_graph",
-    "random_skewed_graph", "random_uniform_graph",
+    "powerlaw_graph", "random_skewed_graph", "random_uniform_graph",
     "coarse_graph_from_labels", "extract_diagonal", "galerkin_coarse_matrix",
     "graph_power2", "matrix_to_scipy",
     "neighbor_all_eq", "neighbor_any_eq", "neighbor_min",

@@ -169,6 +169,44 @@ def random_skewed_graph(num_vertices: int, avg_degree: float, seed: int = 0,
     return csr_from_coo(all_rows, all_cols, num_vertices)
 
 
+def powerlaw_graph(num_vertices: int, avg_degree: float = 8.0,
+                   exponent: float = 2.5, seed: int = 0,
+                   with_self_loops: bool = True) -> CSRGraph:
+    """Deterministic Chung-Lu power-law graph (degree exponent ``exponent``).
+
+    Endpoints of ``V * avg_degree / 2`` undirected edges are drawn i.i.d.
+    with probability proportional to the Chung-Lu weights
+    ``w_i = (i + 1)^(-1/(exponent - 1))``, which yields an expected degree
+    distribution ``P(deg = k) ~ k^-exponent`` with a hub of expected degree
+    ``~ V^(1/(exponent-1)) * avg_degree`` — at paper scale (V = 1M,
+    exponent 2.5) that one hub row makes the monolithic padded-ELL layout
+    infeasible while the total edge count stays modest, which is exactly
+    the regime the hybrid (sliced-ELL + COO spill) layout exists for.
+
+    Seeded (``np.random.default_rng``), symmetrized, deduplicated, and
+    CSR-canonical via :func:`csr_from_coo`, so equal arguments produce
+    bit-identical graphs on any host.  Self loops are added by default —
+    the invariant every repro graph satisfies (closed-neighborhood
+    semantics of the MIS-2 kernels rely on the diagonal being present).
+    """
+    rng = np.random.default_rng(seed)
+    m = int(num_vertices * avg_degree / 2)
+    w = (np.arange(1, num_vertices + 1, dtype=np.float64)
+         ** (-1.0 / (exponent - 1.0)))
+    p = w / w.sum()
+    ends = rng.choice(num_vertices, size=2 * m, p=p)
+    rows, cols = ends[:m], ends[m:]
+    keep = rows != cols
+    rows, cols = rows[keep], cols[keep]
+    all_rows = np.concatenate([rows, cols])
+    all_cols = np.concatenate([cols, rows])
+    if with_self_loops:
+        diag = np.arange(num_vertices, dtype=np.int64)
+        all_rows = np.concatenate([all_rows, diag])
+        all_cols = np.concatenate([all_cols, diag])
+    return csr_from_coo(all_rows, all_cols, num_vertices)
+
+
 def path_graph(num_vertices: int) -> CSRGraph:
     r = np.arange(num_vertices - 1, dtype=np.int64)
     diag = np.arange(num_vertices, dtype=np.int64)

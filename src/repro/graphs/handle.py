@@ -44,6 +44,8 @@ from .csr import (
     ell_to_csr_graph,
     pad_ell_graph,
 )
+from . import hybrid as _hybrid
+from .hybrid import HybridEllGraph, LayoutOverflowError, csr_to_hybrid_ell
 
 _STRUCTS = (CSRGraph, CSRMatrix, ELLGraph, ELLMatrix)
 
@@ -142,6 +144,7 @@ class Graph:
     def ell(self) -> ELLGraph:
         if "ell" not in self._cache:
             csr = self.csr
+            self._check_ell_budget(self.num_vertices, self.max_degree)
             with self._convert("csr_to_ell"):
                 self._cache["ell"] = csr_to_ell_graph(csr)
         return self._cache["ell"]
@@ -184,9 +187,40 @@ class Graph:
         graph into the same bucket shape reuse one padded copy."""
         key = f"padded_ell({num_rows},{width})"
         if key not in self._cache:
+            self._check_ell_budget(num_rows, width)
             ell = self.ell
             with self._convert("pad_ell"):
                 self._cache[key] = pad_ell_graph(ell, num_rows, width)
+        return self._cache[key]
+
+    # -- degree-aware layouts ------------------------------------------------
+
+    @staticmethod
+    def _check_ell_budget(num_rows: int, width: int) -> None:
+        """Refuse a padded-ELL materialization whose bytes estimate exceeds
+        ``repro.graphs.hybrid.ELL_BYTE_LIMIT`` *before* allocating anything
+        (read at call time so tests and operators can tune the limit)."""
+        est = _hybrid.ell_bytes_estimate(num_rows, width)
+        limit = _hybrid.ELL_BYTE_LIMIT
+        if est > limit:
+            raise LayoutOverflowError(est, limit, num_rows, width)
+
+    def ell_bytes_estimate(self) -> int:
+        """Bytes the monolithic padded-ELL form would take — O(V) degree
+        scan, no adjacency materialization.  This is what auto-selection
+        (``engine=None``) and serve admission consult before committing to
+        an ELL-bound engine."""
+        return _hybrid.ell_bytes_estimate(self.num_vertices, self.max_degree)
+
+    def hybrid(self, widths=None, spill_cap=None) -> HybridEllGraph:
+        """Sliced-ELL + COO-spill layout (see ``graphs.hybrid``), cached per
+        (widths, spill_cap) policy."""
+        key = f"hybrid({widths},{spill_cap})"
+        if key not in self._cache:
+            csr = self.csr
+            with self._convert("csr_to_hybrid"):
+                self._cache[key] = csr_to_hybrid_ell(
+                    csr, widths=widths, spill_cap=spill_cap)
         return self._cache[key]
 
     def bucketed(self, boundaries: Iterable[int] = (8, 32, 128)) -> BucketedELL:
@@ -273,6 +307,14 @@ class Graph:
         handle's cache is shared, so all views see the placement)."""
         for key, val in list(self._cache.items()):
             if key in ("degrees", "device", "digest"):   # host-only entries
+                continue
+            if isinstance(val, HybridEllGraph):
+                # keep the static int metadata out of device_put's pytree
+                self._cache[key] = val._replace(
+                    slices=jax.device_put(val.slices, device),
+                    spill_rows=jax.device_put(val.spill_rows, device),
+                    spill_seg=jax.device_put(val.spill_seg, device),
+                    spill_cols=jax.device_put(val.spill_cols, device))
                 continue
             self._cache[key] = jax.device_put(val, device)
         self._cache["device"] = device

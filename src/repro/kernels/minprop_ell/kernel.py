@@ -283,6 +283,164 @@ def fused_decide_pallas(t: jnp.ndarray, m: jnp.ndarray, active: jnp.ndarray,
     )(count.reshape(1), it.reshape(1), wl, nbrs_flat, t, m, active)
 
 
+# ===========================================================================
+# sliced passes for the hybrid layout (``pallas_hybrid``)
+#
+# Same fused shape as above, but the adjacency block is one degree-bucket
+# slab ``[R_i, W_i]`` instead of the monolithic ``[V, max_degree]`` ELL:
+# the worklist indices are *slice-local* (sentinel R_i), the slab gather
+# resolves them locally, and only the T/M/active state vectors stay
+# global ``[V]``.  The decide kernel additionally receives the worklist
+# slots' *global* row ids (precomputed by the driver from ``slice.rows``)
+# because the refresh packing and the T read are keyed by global id.
+# One pallas_call per slice per pass — compile count O(#slices).
+# ===========================================================================
+
+def _sliced_refresh_columns_kernel(count_ref, it_ref, wl_ref, nbrs_ref,
+                                   t_ref, m_ref, *, priority: str, b: int,
+                                   d: int):
+    """One grid step: M[wl block] for one slice slab.  ``wl`` holds
+    slice-local row positions; the gathered neighbor ids are global."""
+    i = pl.program_id(0)
+    block = wl_ref.shape[0]
+
+    @pl.when(i * block < count_ref[0])          # §V-B: skip dead blocks
+    def _():
+        r = nbrs_ref.shape[0] // d              # rows in THIS slab
+        rows = jnp.clip(wl_ref[...], 0, r - 1)  # sentinel slots: dropped later
+        nbrs = _gather_rows_inkernel(nbrs_ref[...], rows, d)
+        t = t_ref[...]
+        tn = jnp.take(t, nbrs.reshape(-1), axis=0).reshape(nbrs.shape)
+        tn = _refresh_inline(tn, nbrs.astype(jnp.uint32), it_ref[0],
+                             priority, b)
+        mv = jnp.min(tn, axis=1)
+        m_ref[...] = jnp.where(mv == IN, OUT, mv)
+
+    @pl.when(i * block >= count_ref[0])
+    def _():
+        # dead-block slots scatter to the sentinel target and are dropped
+        m_ref[...] = jnp.full((block,), OUT, dtype=jnp.uint32)
+
+
+def _sliced_decide_kernel(count_ref, it_ref, wl_ref, gid_ref, nbrs_ref,
+                          t_ref, m_ref, act_ref, out_ref, *, priority: str,
+                          b: int, d: int):
+    """One grid step: IN/OUT decision for a block of one slice's worklist.
+    ``wl`` indexes the slab; ``gid`` carries the matching global ids."""
+    i = pl.program_id(0)
+    block = wl_ref.shape[0]
+
+    @pl.when(i * block < count_ref[0])
+    def _():
+        r = nbrs_ref.shape[0] // d
+        v = t_ref.shape[0]
+        rows = jnp.clip(wl_ref[...], 0, r - 1)
+        gids = jnp.clip(gid_ref[...], 0, v - 1)
+        t = t_ref[...]
+        tv_old = jnp.take(t, gids, axis=0)
+        tv = _refresh_inline(tv_old, gids.astype(jnp.uint32), it_ref[0],
+                             priority, b)
+        nbrs = _gather_rows_inkernel(nbrs_ref[...], rows, d)
+        flat = nbrs.reshape(-1)
+        mn = jnp.take(m_ref[...], flat, axis=0).reshape(nbrs.shape)
+        an = jnp.take(act_ref[...], flat, axis=0).reshape(nbrs.shape)
+        any_out = jnp.any(jnp.where(an, mn, IN) == OUT, axis=1)
+        all_eq = jnp.all(jnp.where(an, mn, tv[:, None]) == tv[:, None], axis=1)
+        newt = jnp.where(any_out, OUT, jnp.where(all_eq, IN, tv))
+        und = (tv_old != IN) & (tv_old != OUT)
+        out_ref[...] = jnp.where(und, newt, tv_old)
+
+    @pl.when(i * block >= count_ref[0])
+    def _():
+        # dead-block slots scatter to the sentinel target and are dropped
+        out_ref[...] = jnp.zeros((block,), dtype=jnp.uint32)
+
+
+# VMEM budget per worklist block in slab entries (rows x width); the block
+# row count adapts to the slice width so wide slices don't blow the tile.
+SLICE_BLOCK_ENTRIES = FUSED_BLOCK_ROWS * 8
+
+
+def slice_block_rows(num_rows: int, width: int, interpret: bool) -> int:
+    """Worklist block size for one slice.  Interpret mode executes grid
+    steps as a sequential host scan, so it takes the whole slice as one
+    block; compiled mode tiles to ~SLICE_BLOCK_ENTRIES slab entries."""
+    if interpret:
+        return max(1, num_rows)
+    return max(8, min(num_rows, SLICE_BLOCK_ENTRIES // max(width, 1)))
+
+
+@functools.partial(jax.jit, static_argnames=("priority", "b", "d",
+                                             "interpret", "block_rows"))
+def sliced_refresh_columns_pallas(t: jnp.ndarray, nbrs_flat: jnp.ndarray,
+                                  wl: jnp.ndarray, count: jnp.ndarray,
+                                  it: jnp.ndarray, *, priority: str, b: int,
+                                  d: int, interpret: bool = True,
+                                  block_rows: int = FUSED_BLOCK_ROWS) -> jnp.ndarray:
+    """Fused refresh for one slice: M values per slice-local worklist slot.
+
+    ``nbrs_flat`` is the slab ``[R*d]``; ``wl`` is ``[R]`` sentinel-padded
+    with slice-local positions; ``t`` stays the global ``[V]`` state."""
+    v = t.shape[0]
+    r = nbrs_flat.shape[0] // d
+    block = min(block_rows, max(r, 1))
+    grid = pl.cdiv(r, block)
+    kernel = functools.partial(_sliced_refresh_columns_kernel,
+                               priority=priority, b=b, d=d)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(grid,),
+            in_specs=[
+                pl.BlockSpec((block,), lambda i, *_: (i,)),
+                pl.BlockSpec((r * d,), lambda i, *_: (0,)),
+                pl.BlockSpec((v,), lambda i, *_: (0,)),
+            ],
+            out_specs=pl.BlockSpec((block,), lambda i, *_: (i,)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((r,), jnp.uint32),
+        interpret=interpret,
+    )(count.reshape(1), it.reshape(1), wl, nbrs_flat, t)
+
+
+@functools.partial(jax.jit, static_argnames=("priority", "b", "d",
+                                             "interpret", "block_rows"))
+def sliced_decide_pallas(t: jnp.ndarray, m: jnp.ndarray, active: jnp.ndarray,
+                         nbrs_flat: jnp.ndarray, wl: jnp.ndarray,
+                         gids: jnp.ndarray, count: jnp.ndarray,
+                         it: jnp.ndarray, *, priority: str, b: int, d: int,
+                         interpret: bool = True,
+                         block_rows: int = FUSED_BLOCK_ROWS) -> jnp.ndarray:
+    """Fused decide for one slice: new T values per slice-local worklist
+    slot (``gids`` maps each slot to its global row; the driver scatters
+    the output back into T at those ids with drop semantics)."""
+    v = t.shape[0]
+    r = nbrs_flat.shape[0] // d
+    block = min(block_rows, max(r, 1))
+    grid = pl.cdiv(r, block)
+    kernel = functools.partial(_sliced_decide_kernel, priority=priority,
+                               b=b, d=d)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(grid,),
+            in_specs=[
+                pl.BlockSpec((block,), lambda i, *_: (i,)),
+                pl.BlockSpec((block,), lambda i, *_: (i,)),
+                pl.BlockSpec((r * d,), lambda i, *_: (0,)),
+                pl.BlockSpec((v,), lambda i, *_: (0,)),
+                pl.BlockSpec((v,), lambda i, *_: (0,)),
+                pl.BlockSpec((v,), lambda i, *_: (0,)),
+            ],
+            out_specs=pl.BlockSpec((block,), lambda i, *_: (i,)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((r,), jnp.uint32),
+        interpret=interpret,
+    )(count.reshape(1), it.reshape(1), wl, gids, nbrs_flat, t, m, active)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
 def decide_pallas(t_rows: jnp.ndarray, m: jnp.ndarray, active: jnp.ndarray,
                   wl_neighbors: jnp.ndarray, count: jnp.ndarray, *,

@@ -25,8 +25,8 @@ from .admission import AdmissionController, QuotaConfig, TokenBucket
 from .batcher import Batcher, PendingRequest
 from .cache import CacheParityError, CacheStats, ResultCache
 from .errors import (DeadlineExceeded, DigestMismatch, EngineFailure,
-                     QuotaExceeded, ServeError, ServerClosed,
-                     ServerOverloaded)
+                     LayoutInfeasible, QuotaExceeded, ServeError,
+                     ServerClosed, ServerOverloaded)
 from .faults import (FALLBACK_ENGINES, Fault, FaultPlan, InjectedFault,
                      RetryPolicy)
 from .persist import PersistStats, PersistTier
@@ -44,6 +44,7 @@ __all__ = [
     "AdmissionController", "QuotaConfig", "TokenBucket",
     "ServeError", "ServerClosed", "ServerOverloaded", "QuotaExceeded",
     "DeadlineExceeded", "EngineFailure", "DigestMismatch",
+    "LayoutInfeasible",
     "Fault", "FaultPlan", "InjectedFault", "RetryPolicy",
     "FALLBACK_ENGINES",
 ]

@@ -61,6 +61,21 @@ class DeadlineExceeded(ServeError):
     retryable = False
 
 
+class LayoutInfeasible(ServeError):
+    """Admission control shed the request because the engine it names (or
+    defaults to) would materialize the monolithic padded-ELL layout, and
+    the graph's ``[V, max_degree]`` bytes estimate exceeds
+    ``repro.graphs.hybrid.ELL_BYTE_LIMIT`` — the compute would die in a
+    host OOM after queueing, so it is refused up front with a typed error
+    naming the fix.  Not retryable as-is: resubmit with a degree-aware
+    engine (``mis2``/``coarsen`` with ``engine=None`` or
+    ``'pallas_hybrid'``, ``color`` with ``'luby_hybrid'``), which handles
+    exactly these skewed graphs."""
+
+    reason = "layout"
+    retryable = False
+
+
 class EngineFailure(ServeError):
     """Compute failed after the retry budget and the fallback engine.
     The original engine error is chained as ``__cause__``."""

@@ -65,7 +65,7 @@ from .admission import AdmissionController, QuotaConfig
 from .batcher import Batcher, PendingRequest, _freeze
 from .cache import ResultCache
 from .errors import (DeadlineExceeded, DigestMismatch, EngineFailure,
-                     ServeError, ServerClosed)
+                     LayoutInfeasible, ServeError, ServerClosed)
 from .faults import FALLBACK_ENGINES, FaultPlan, InjectedFault, RetryPolicy
 from .persist import PersistTier
 from .streaming import StreamSession
@@ -220,6 +220,31 @@ class Server:
             return out
         raise ValueError(f"unknown request kind {kind!r} (one of {KINDS})")
 
+    #: engines per kind that never materialize the monolithic padded ELL
+    #: (``None`` = auto-selection, which routes past HYBRID_AUTO_BYTES to
+    #: the hybrid layout on its own)
+    _DEGREE_AWARE = {"mis2": (None, "pallas_hybrid"),
+                     "coarsen": (None, "pallas_hybrid"),
+                     "color": ("luby_hybrid",)}
+
+    def _layout_guard(self, req: PendingRequest) -> Optional[LayoutInfeasible]:
+        """Admission-side layout feasibility: a request whose engine is
+        ELL-bound on a graph whose padded-ELL estimate exceeds
+        ``ELL_BYTE_LIMIT`` would die in a host OOM *after* consuming queue
+        capacity — shed it up front with the typed error instead."""
+        from ..graphs.hybrid import ELL_BYTE_LIMIT
+
+        if req.graph.ell_bytes_estimate() <= ELL_BYTE_LIMIT:
+            return None
+        if req.engine in self._DEGREE_AWARE.get(req.kind, ()):
+            return None
+        return LayoutInfeasible(
+            f"{req.kind} request with engine={req.engine!r} needs the "
+            f"monolithic padded ELL "
+            f"(~{req.graph.ell_bytes_estimate():,} bytes > limit "
+            f"{ELL_BYTE_LIMIT:,}); resubmit with a degree-aware engine "
+            f"({self._DEGREE_AWARE.get(req.kind) or 'none for this kind'})")
+
     def _count_shed(self, reason: str) -> None:
         self.stats.shed += 1
         _OBS.counter("serve.shed", labels={"reason": reason}).inc()
@@ -278,6 +303,10 @@ class Server:
                 req.future.set_result(cached)
                 return req.future
             sp.annotate(cache="miss")
+            layout_err = self._layout_guard(req)
+            if layout_err is not None:
+                sp.annotate(outcome=f"shed:{layout_err.reason}")
+                return self._rejected(req, layout_err)
             joining = self.config.dedup and key in self._inflight
             try:
                 self.admission.admit(
@@ -438,7 +467,8 @@ class Server:
             return req.engine
         be = resolve_backend(req.backend)
         if req.kind == "mis2":
-            return default_mis2_engine(be, req.params.get("options"))
+            return default_mis2_engine(be, req.params.get("options"),
+                                       req.graph)
         if req.kind == "amg_setup":
             return default_multilevel_engine(be)
         return None     # color/coarsen: the facade default is the engine
@@ -451,6 +481,8 @@ class Server:
         if req.kind == "mis2":
             return facade.mis2(req.graph, engine=req.engine, **kw)
         if req.kind == "color":
+            if req.engine is not None:
+                kw["engine"] = req.engine
             return facade.color(req.graph, **kw)
         if req.kind == "coarsen":
             if req.engine is not None:
@@ -470,8 +502,16 @@ class Server:
         instead of jit-specializing per exact adjacency shape.
         """
         if req.kind == "mis2" and req.engine is None:
+            from ..graphs.hybrid import ELL_BYTE_LIMIT
+
             kw = dict(req.params)
             kw["backend"] = req.backend
+            # the dense referent pads to [V, max_degree]: on a graph past
+            # the ELL budget recompute with the request's own (hybrid)
+            # engine path instead — parity then checks run-to-run
+            # determinism rather than cross-engine agreement
+            if req.graph.ell_bytes_estimate() > ELL_BYTE_LIMIT:
+                return self._direct(req)
             return facade.mis2(req.graph, engine="dense", **kw)
         return self._direct(req)
 

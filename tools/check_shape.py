@@ -208,11 +208,52 @@ def gate_dist() -> str:
             f"({variant}, {len(devices)} devices, {r.iterations} iters)")
 
 
+# ---------------------------------------------------------------------------
+# gate: hybrid_traffic — registry row-traffic bytes == analytic model ==
+# result record, and the hybrid solve is one resident dispatch
+# ---------------------------------------------------------------------------
+
+def gate_hybrid_traffic() -> str:
+    import repro
+    from repro import obs
+    from repro.graphs.generators import powerlaw_graph
+    from repro.kernels.minprop_ell.ops import hybrid_row_traffic_bytes
+
+    g = repro.Graph(powerlaw_graph(4000, 8.0, seed=7))
+    repro.mis2(g, engine="pallas_hybrid")           # warm the jit cache
+    with obs.capture() as cap:
+        r = repro.mis2(g, engine="pallas_hybrid")
+    _expect(r.iterations > 1, "workload too easy: need a multi-round solve")
+    c = r.collectives
+    _expect(c["variant"] == "hybrid", f"unexpected variant {c['variant']!r}")
+    got = cap.value("mis2.hybrid_row_bytes")
+    want = hybrid_row_traffic_bytes(c["slice_widths"],
+                                    c["slice_rows_processed"],
+                                    c["spill_entries"], c["spill_passes"])
+    _expect(got == want,
+            f"registry recorded {got} hybrid row bytes, analytic model says "
+            f"{want} (widths={c['slice_widths']}, "
+            f"spill_entries={c['spill_entries']})")
+    _expect(got == c["row_bytes_total"],
+            f"registry ({got}) disagrees with the result's own accounting "
+            f"({c['row_bytes_total']})")
+    dispatches = cap.value("mis2.resident_dispatches")
+    syncs = cap.value("mis2.host_syncs")
+    _expect(dispatches == 1,
+            f"hybrid solve took {dispatches} dispatches, want exactly 1")
+    _expect(syncs == 0,
+            f"hybrid solve paid {syncs} in-loop host syncs, want 0")
+    return (f"{int(got)} bytes == analytic model == result record "
+            f"({len(c['slice_widths'])} slices + {c['spill_entries']} spill "
+            f"entries, {r.iterations} iters, 1 dispatch)")
+
+
 GATES = {
     "resident": gate_resident,
     "serve": gate_serve,
     "serve_dedup": gate_serve_dedup,
     "dist": gate_dist,
+    "hybrid_traffic": gate_hybrid_traffic,
 }
 
 
